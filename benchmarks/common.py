@@ -1,0 +1,94 @@
+"""Shared benchmark machinery: scaled-down paper experiment settings.
+
+The paper trains MLP/CNN on MNIST/CIFAR-10 for K=500-2000 rounds; offline
+CPU benches reproduce the *qualitative* claims at reduced scale (documented
+per bench).  Every bench returns rows (name, us_per_call, derived-metrics).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import MLP_MNIST, ClassifierConfig
+from repro.core import (FedAvg, FedDeper, FedProx, Scaffold, SimConfig,
+                        init_sim_state, make_global_eval, make_personal_eval,
+                        make_round_fn, run_rounds)
+from repro.data import make_federated_classification
+from repro.models import classifier_loss, init_classifier
+
+# calibrated so convergence-rate differences between strategies are
+# visible before everything reaches the optimum (see EXPERIMENTS.md §Repro)
+DATA_KW = dict(noise=4.0, per_client=256, split="shards",
+               shards_per_client=2)
+
+
+def build_task(cfg: ClassifierConfig, n_clients: int, seed: int = 0):
+    ds = make_federated_classification(
+        input_shape=cfg.input_shape, n_clients=n_clients, seed=seed,
+        **DATA_KW)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    test = {k: jnp.asarray(v) for k, v in ds.test.items()}
+    personal = {k: jnp.asarray(v) for k, v in ds.personal_test.items()}
+    # flattened train split: the paper's "global training loss" = f(x)
+    train_flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in data.items()}
+
+    def apply_loss(p, b):
+        return classifier_loss(cfg, p, b)
+
+    def grad_fn(p, mb):
+        (l, m), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+        return l, g
+
+    return dict(ds=ds, data=data, test=test, personal=personal,
+                train_flat=train_flat, apply_loss=apply_loss,
+                grad_fn=grad_fn)
+
+
+def run_strategy(cfg, task, strategy, *, n, m, tau, rounds, batch=32,
+                 seed=0, eval_every=10**9, personal=False):
+    sim = SimConfig(n_clients=n, m_sampled=m, tau=tau, batch_size=batch,
+                    seed=seed)
+    x0 = init_classifier(cfg, jax.random.PRNGKey(42))
+    state = init_sim_state(sim, strategy, x0)
+    rf = make_round_fn(sim, strategy, task["grad_fn"], task["data"])
+    test_eval = make_global_eval(task["apply_loss"], task["test"])
+    train_eval = make_global_eval(task["apply_loss"], task["train_flat"])
+
+    def eval_fn(state):
+        out = test_eval(state)
+        tr = train_eval(state)
+        out["global_train_loss"] = tr["test_loss"]
+        return out
+    if personal:
+        pe = make_personal_eval(task["apply_loss"], task["personal"])
+        base_eval = eval_fn
+
+        def eval_fn(state):  # noqa: F811
+            out = base_eval(state)
+            out.update(pe(state))
+            return out
+
+    t0 = time.time()
+    state, hist = run_rounds(state, rf, rounds, eval_fn=eval_fn,
+                             eval_every=min(eval_every, rounds))
+    dt = time.time() - t0
+    us_per_round = 1e6 * dt / rounds
+    return state, hist, us_per_round
+
+
+def strategies_for(eta=0.05, rho=0.03, lam=0.5):
+    return {
+        "feddeper": FedDeper(eta=eta, rho=rho, lam=lam),
+        "fedavg": FedAvg(eta=eta),
+        "fedprox": FedProx(eta=eta, mu=1.0),
+        "scaffold": Scaffold(eta=eta),
+    }
+
+
+def csv_row(name: str, us: float, derived: Dict) -> str:
+    dstr = ";".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in derived.items())
+    return f"{name},{us:.1f},{dstr}"

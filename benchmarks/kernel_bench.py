@@ -1,0 +1,81 @@
+"""Micro-benchmarks for the Pallas kernel reference paths on CPU.
+
+Wall-times here are CPU interpret/XLA numbers -- NOT TPU perf; the TPU
+story lives in the roofline analysis.  These rows track relative cost of
+the fused deper_update vs the unfused tree-map path (the kernel's reason
+to exist: 7 vs ~10 HBM passes) and the chunked-attention ref throughput.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+
+
+def _time(f, *args, iters=5):
+    f(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return 1e6 * (time.time() - t0) / iters
+
+
+def deper_update_bench(quick=True) -> List[str]:
+    from repro.kernels import ref
+    n = 1 << 20 if quick else 1 << 24
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    y, v, x, gy, gv = (jax.random.normal(k, (n,)) for k in ks)
+
+    @jax.jit
+    def unfused(y, v, x, gy, gv):
+        return ref.deper_update_ref(y, v, x, gy, gv, eta=0.01, rho=0.003)
+
+    us_unfused = _time(unfused, y, v, x, gy, gv)
+    return [csv_row("deper_update_unfused_1M", us_unfused,
+                    {"elements": n})]
+
+
+def attention_bench(quick=True) -> List[str]:
+    from repro.models.attention import chunked_attention
+    B, S, H, K, D = 1, 1024 if quick else 4096, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+    pos = jnp.arange(S)
+
+    @jax.jit
+    def run(q, k, v):
+        return chunked_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                 causal=True)
+
+    us = _time(run, q, k, v, iters=3)
+    flops = 4.0 * B * H * S * S * D
+    return [csv_row(f"chunked_attention_S{S}", us,
+                    {"gflops_per_s": flops / us / 1e3})]
+
+
+def moe_bench(quick=True) -> List[str]:
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import apply_moe, init_moe
+    cfg = get_config("granite-moe-3b-a800m")
+    cfg = dataclasses.replace(cfg, d_model=256, moe_d_ff=128,
+                              num_experts=8, experts_per_token=2)
+    params = init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, cfg.d_model))
+
+    @jax.jit
+    def run(x):
+        out, aux = apply_moe(cfg, params, x)
+        return out, aux.dropped_frac
+
+    out, dropped = run(x)
+    us = _time(lambda x: run(x)[0], x, iters=3)
+    return [csv_row("moe_dispatch_512tok_8e", us,
+                    {"dropped_frac": float(dropped)})]

@@ -1,0 +1,158 @@
+"""Paper-figure reproductions (scaled for CPU; qualitative claims C1-C5).
+
+fig1   -- heterogeneity: fixed K*tau, growing tau degrades non-iid FedAvg.
+fig3   -- FedDeper hyper-parameters: rho sweep, lambda sweep, tau effect.
+fig4_6 -- convergence-rate comparison vs baselines (moderate + massive).
+fig7   -- personalized vs global model local performance (Thm 2 check).
+table1 -- final test accuracy under fixed K (incl. FedDeper* tau/2).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import (build_task, csv_row, run_strategy,
+                               strategies_for)
+from repro.configs.paper_models import CNN_MNIST, MLP_MNIST
+from repro.core import FedAvg, FedDeper
+from repro.data import make_federated_classification
+
+
+def fig1_heterogeneity(quick=True) -> List[str]:
+    """C1: with K*tau fixed, training loss after the budget grows with tau
+    on non-iid data (and doesn't on iid)."""
+    rows = []
+    cfg = MLP_MNIST
+    total = 240 if quick else 2000
+    for split, alpha_name in (("shards", "noniid"), ("dirichlet", "iid-ish")):
+        task = build_task(cfg, n_clients=10)
+        if split == "dirichlet":  # alpha -> inf == iid; emulate with high a
+            from repro.data import make_federated_classification
+            import jax.numpy as jnp
+            ds = make_federated_classification(
+                n_clients=10, per_client=256, split="dirichlet", alpha=100.0,
+                noise=4.0)
+            task["data"] = {k: jnp.asarray(v) for k, v in ds.train.items()}
+        losses = {}
+        for tau in (2, 8, 24):
+            k_rounds = total // tau
+            _, hist, us = run_strategy(cfg, task, FedAvg(eta=0.05), n=10,
+                                       m=5, tau=tau, rounds=k_rounds)
+            losses[f"tau{tau}"] = float(np.mean(
+                [h["local_loss"] for h in hist[-3:]]))
+        mono = losses["tau2"] <= losses["tau8"] <= losses["tau24"]
+        rows.append(csv_row(f"fig1_{alpha_name}", us,
+                            {**losses, "monotone_degradation": int(mono)}))
+    return rows
+
+
+def fig3_hyperparams(quick=True) -> List[str]:
+    rows = []
+    cfg = MLP_MNIST
+    task = build_task(cfg, n_clients=10)
+    rounds = 40 if quick else 500
+    # (a) rho sweep -- best performance at moderate rho (same order as eta)
+    for rho in (0.0, 0.01, 0.05, 0.2):
+        _, hist, us = run_strategy(
+            cfg, task, FedDeper(eta=0.05, rho=rho, lam=0.5), n=10, m=5,
+            tau=10, rounds=rounds)
+        rows.append(csv_row(f"fig3a_rho{rho}", us,
+                            {"final_loss": hist[-1]["local_loss"]}))
+    # (b) lambda sweep in [1/2, 1]
+    for lam in (0.5, 0.75, 1.0):
+        _, hist, us = run_strategy(
+            cfg, task, FedDeper(eta=0.05, rho=0.03, lam=lam), n=10, m=5,
+            tau=10, rounds=rounds)
+        rows.append(csv_row(f"fig3b_lam{lam}", us,
+                            {"final_loss": hist[-1]["local_loss"]}))
+    # (c) tau effect -- more local steps per round helps at fixed K
+    for tau in (2, 5, 10):
+        _, hist, us = run_strategy(
+            cfg, task, FedDeper(eta=0.05, rho=0.03, lam=0.5), n=10, m=5,
+            tau=tau, rounds=rounds)
+        rows.append(csv_row(f"fig3c_tau{tau}", us,
+                            {"final_loss": hist[-1]["local_loss"]}))
+    return rows
+
+
+def fig4_6_convergence(quick=True) -> List[str]:
+    """C3: FedDeper lowest train loss per round; on par with SCAFFOLD at
+    half its communication."""
+    rows = []
+    scenarios = [("fig4_moderate_mlp", MLP_MNIST, 10, 5),
+                 ("fig5_massive_mlp", MLP_MNIST, 50, 5)]
+    if not quick:
+        scenarios += [("fig6_massive_cnn", CNN_MNIST, 100, 5)]
+    rounds = 50 if quick else 500
+    for name, cfg, n, m in scenarios:
+        task = build_task(cfg, n_clients=n)
+        finals = {}
+        us = 0.0
+        # the paper tunes rho down for the massive/low-sampling scenario
+        # (Fig. 7 caption: rho=0.03 at n=10, 0.005 at n=100)
+        rho = 0.03 if n <= 10 else 0.005
+        for sname, strat in strategies_for(rho=rho).items():
+            _, hist, us = run_strategy(cfg, task, strat, n=n, m=m, tau=10,
+                                       rounds=rounds,
+                                       eval_every=rounds // 2)
+            mid = next(h for h in hist if "global_train_loss" in h)
+            finals[f"{sname}_mid"] = float(mid["global_train_loss"])
+            finals[sname] = float(hist[-1]["global_train_loss"])
+            finals[f"{sname}_acc"] = float(hist[-1]["test_acc"])
+        # FedDeper* (tau/2): compute cost aligned with single-model runs
+        _, hist, _ = run_strategy(
+            cfg, task, strategies_for(rho=rho)["feddeper"], n=n, m=m, tau=5,
+            rounds=rounds, eval_every=rounds)
+        finals["feddeper_star"] = float(hist[-1]["global_train_loss"])
+        finals["feddeper_wins_fedavg"] = int(
+            finals["feddeper"] <= finals["fedavg"] + 1e-6)
+        rows.append(csv_row(name, us, finals))
+    return rows
+
+
+def fig7_personalization(quick=True) -> List[str]:
+    """C5 / Thm 2: personalized models converge around the global model."""
+    rows = []
+    cfg = MLP_MNIST
+    task = build_task(cfg, n_clients=10)
+    rounds = 40 if quick else 500
+    _, hist, us = run_strategy(
+        cfg, task, FedDeper(eta=0.05, rho=0.03, lam=0.5), n=10, m=5,
+        tau=10, rounds=rounds, eval_every=rounds, personal=True)
+    h = hist[-1]
+    rows.append(csv_row("fig7_feddeper", us, {
+        "pm_acc": h["pm_acc"], "gm_local_acc": h["gm_local_acc"],
+        "pm_tracks_gm": int(abs(h["pm_acc"] - h["gm_local_acc"]) < 0.15),
+    }))
+    _, hist, us = run_strategy(cfg, task, FedAvg(eta=0.05), n=10, m=5,
+                               tau=10, rounds=rounds, eval_every=rounds,
+                               personal=True)
+    h = hist[-1]
+    rows.append(csv_row("fig7_fedavg", us, {
+        "pm_acc": h["pm_acc"], "gm_local_acc": h["gm_local_acc"]}))
+    return rows
+
+
+def table1_accuracy(quick=True) -> List[str]:
+    """C4: final test accuracy under fixed K; FedDeper & FedDeper* lead."""
+    rows = []
+    cfg = MLP_MNIST if quick else CNN_MNIST
+    n, rounds = (10, 60) if quick else (100, 500)
+    task = build_task(cfg, n_clients=n)
+    rho = 0.03 if n <= 10 else 0.005
+    for m in (5, 10):
+        finals = {}
+        us = 0.0
+        for sname, strat in strategies_for(rho=rho).items():
+            _, hist, us = run_strategy(cfg, task, strat, n=n, m=m, tau=10,
+                                       rounds=rounds, eval_every=rounds)
+            finals[sname] = float(hist[-1]["test_acc"])
+        # FedDeper*: half the local steps (compute-aligned with baselines)
+        _, hist, us = run_strategy(cfg, task,
+                                   FedDeper(eta=0.05, rho=rho, lam=0.5),
+                                   n=n, m=m, tau=5, rounds=rounds,
+                                   eval_every=rounds)
+        finals["feddeper_star"] = float(hist[-1]["test_acc"])
+        rows.append(csv_row(f"table1_m{m}", us, finals))
+    return rows

@@ -1,0 +1,62 @@
+"""Roofline benchmark: renders the per-(arch x shape x mesh) three-term
+table from the dry-run JSONL (experiments/dryrun.jsonl).
+
+This is the harness behind EXPERIMENTS.md §Roofline -- the dry-run sweep
+(scripts/run_dryruns.sh) produces the records; this module aggregates,
+identifies the dominant term, and prints CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "experiments", "dryrun.jsonl")
+
+
+def load_records(path: str = DEFAULT_PATH) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    best = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (rec.get("arch"), rec.get("shape"), rec.get("mesh"),
+                   rec.get("variant", "feddeper"))
+            best[key] = rec  # last record wins (reruns supersede)
+    return list(best.values())
+
+
+def rows(path: str = DEFAULT_PATH) -> List[str]:
+    out = []
+    recs = sorted(load_records(path),
+                  key=lambda r: (r.get("arch", ""), r.get("shape", ""),
+                                 r.get("mesh", "")))
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("status") == "skipped":
+            n_skip += 1
+            out.append(f"{name},0.0,status=skipped")
+            continue
+        if r.get("status") != "ok":
+            n_err += 1
+            out.append(f"{name},0.0,status=error")
+            continue
+        n_ok += 1
+        d = {
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+        }
+        dstr = ";".join(f"{k}={v}" for k, v in d.items())
+        out.append(f"{name},{r.get('compile_s', 0) * 1e6:.0f},{dstr}")
+    out.append(f"roofline_summary,0.0,ok={n_ok};skipped={n_skip};"
+               f"errors={n_err}")
+    return out

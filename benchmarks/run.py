@@ -1,0 +1,52 @@
+"""Benchmark harness: one bench per paper table/figure + roofline table.
+
+Prints ``name,us_per_call,derived`` CSV.  --full runs paper-scale settings
+(hours on CPU); default is the quick qualitative pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import kernel_bench, paper_figs, roofline
+    benches = {
+        "fig1": lambda: paper_figs.fig1_heterogeneity(quick),
+        "fig3": lambda: paper_figs.fig3_hyperparams(quick),
+        "fig4_6": lambda: paper_figs.fig4_6_convergence(quick),
+        "fig7": lambda: paper_figs.fig7_personalization(quick),
+        "table1": lambda: paper_figs.table1_accuracy(quick),
+        "kernels": lambda: (kernel_bench.deper_update_bench(quick)
+                            + kernel_bench.attention_bench(quick)
+                            + kernel_bench.moe_bench(quick)),
+        "roofline": roofline.rows,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,status=FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Reproduce the paper's Fig. 3 hyper-parameter study (rho, lambda, tau).
+
+    PYTHONPATH=src python examples/hyperparameter_study.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (FedDeper, SimConfig, init_sim_state, make_round_fn,
+                        run_rounds)
+from repro.data import make_federated_classification
+from repro.models import classifier_loss, init_classifier
+
+
+def main():
+    cfg = MLP_MNIST
+    ds = make_federated_classification(n_clients=10, per_client=256,
+                                       split="shards", noise=2.5, seed=0)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(
+            lambda q: classifier_loss(cfg, q, mb), has_aux=True)(p)
+        return l, g
+
+    def final_loss(strategy, tau=10, rounds=40):
+        sim = SimConfig(10, 5, tau, 32, seed=1)
+        st = init_sim_state(sim, strategy,
+                            init_classifier(cfg, jax.random.PRNGKey(42)))
+        rf = make_round_fn(sim, strategy, grad_fn, data)
+        st, hist = run_rounds(st, rf, rounds)
+        return sum(h["local_loss"] for h in hist[-5:]) / 5
+
+    print("rho sweep (paper Fig. 3a): penalty must stay ~O(eta)")
+    for rho in (0.0, 0.005, 0.03, 0.1, 0.5):
+        print(f"  rho={rho:<6} loss={final_loss(FedDeper(eta=0.05, rho=rho, lam=0.5)):.4f}")
+    print("lambda sweep (paper Fig. 3b), lambda in [1/2, 1]")
+    for lam in (0.5, 0.65, 0.8, 1.0):
+        print(f"  lam={lam:<6} loss={final_loss(FedDeper(eta=0.05, rho=0.03, lam=lam)):.4f}")
+    print("tau sweep (paper Fig. 3c): extra local steps help at fixed K")
+    for tau in (2, 5, 10, 20):
+        print(f"  tau={tau:<6} loss={final_loss(FedDeper(eta=0.05, rho=0.03, lam=0.5), tau=tau):.4f}")
+
+
+if __name__ == "__main__":
+    main()

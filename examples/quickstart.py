@@ -1,0 +1,50 @@
+"""Quickstart: FedDeper vs FedAvg on a synthetic non-i.i.d federated task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's core claim in ~a minute on CPU: under statistical
+heterogeneity (pathological label shards), FedDeper's depersonalized
+uploads converge faster than FedAvg at identical communication cost.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (FedAvg, FedDeper, SimConfig, init_sim_state,
+                        make_global_eval, make_round_fn, run_rounds)
+from repro.data import heterogeneity_stats, make_federated_classification
+from repro.models import classifier_loss, init_classifier
+
+
+def main():
+    cfg = MLP_MNIST
+    ds = make_federated_classification(n_clients=10, per_client=256,
+                                       split="shards", noise=2.5, seed=0)
+    print("client heterogeneity:", heterogeneity_stats(ds))
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    test = {k: jnp.asarray(v) for k, v in ds.test.items()}
+
+    def apply_loss(p, b):
+        return classifier_loss(cfg, p, b)
+
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+        return l, g
+
+    eval_fn = make_global_eval(apply_loss, test)
+    sim = SimConfig(n_clients=10, m_sampled=5, tau=10, batch_size=32,
+                    seed=1)
+
+    for strategy in (FedAvg(eta=0.05),
+                     FedDeper(eta=0.05, rho=0.03, lam=0.5)):
+        x0 = init_classifier(cfg, jax.random.PRNGKey(42))
+        state = init_sim_state(sim, strategy, x0)
+        rf = make_round_fn(sim, strategy, grad_fn, data)
+        print(f"--- {strategy.name}")
+        state, hist = run_rounds(
+            state, rf, 50, eval_fn=eval_fn, eval_every=10,
+            log=lambda r: print(r) if r["round"] % 10 == 0 else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""FedDeper-vs-sync collective headline: cross-client bytes per optimizer
+step, from the dry-run records.
+
+    PYTHONPATH=src python scripts/collective_headline.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def load(path):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return recs
+
+
+def main():
+    recs = load("experiments/dryrun.jsonl") + load("experiments/perf.jsonl")
+    by = {}
+    for r in recs:
+        if r.get("status") != "ok" or r.get("shape") != "train_4k":
+            continue
+        key = (r["arch"], r["mesh"], r.get("variant"), r.get("tag", ""))
+        by[key] = r
+    out = []
+    for (arch, mesh, variant, tag), r in sorted(by.items()):
+        if variant != "sync":
+            continue
+        fd = by.get((arch, mesh, "feddeper", "")) or \
+            by.get((arch, mesh, "feddeper", "fp8-upload"))
+        if not fd:
+            continue
+        tau = fd.get("tau", 4)
+        # normalize per TOKEN: sync consumes the full global batch in one
+        # step; a feddeper round consumes it across tau local steps
+        sync_tokens = r["meta"].get("tokens_per_step", 1)
+        fd_tokens = fd["meta"].get("tokens_per_round", 1)
+        sync_bpt = r["collective_bytes_per_device"] / sync_tokens
+        fd_bpt = fd["collective_bytes_per_device"] / fd_tokens
+        out.append({
+            "arch": arch, "mesh": mesh, "tau": tau,
+            "sync_coll_KB_per_token": round(sync_bpt / 1e3, 2),
+            "feddeper_coll_KB_per_token": round(fd_bpt / 1e3, 2),
+            "collective_reduction_x": round(sync_bpt / max(fd_bpt, 1e-9), 2),
+            "compute_overhead_x": round(
+                (fd["flops_per_device"] / fd_tokens)
+                / max(r["flops_per_device"] / sync_tokens, 1e-9), 2),
+        })
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

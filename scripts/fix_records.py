@@ -1,0 +1,50 @@
+"""Recompute derived fields of dry-run records (params, model_flops,
+useful_flops_ratio, analytic bytes) after the int32 param_count fix.
+Measured fields (HLO flops/bytes/collectives, memory analysis) are raw
+compiler outputs and remain untouched.  Usage:
+
+    PYTHONPATH=src python scripts/fix_records.py experiments/dryrun.jsonl
+"""
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import analytic_bytes_for, model_flops_for
+from repro.models import transformer
+
+
+def fix(path):
+    out_lines = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if rec.get("status") != "ok":
+                out_lines.append(json.dumps(rec))
+                continue
+            cfg = get_config(rec["arch"])
+            rec["params"] = transformer.param_count(cfg)
+            rec["active_params"] = transformer.active_param_count(cfg)
+            mflops = model_flops_for(cfg, rec["kind"], rec["meta"],
+                                     rec.get("variant", "feddeper"))
+            rec["model_flops"] = mflops
+            flops = rec["flops_per_device"]
+            rec["useful_flops_ratio"] = (mflops / (flops * rec["chips"])
+                                         if flops else 0.0)
+            abytes = analytic_bytes_for(cfg, rec["kind"], rec["meta"],
+                                        rec.get("variant", "feddeper"),
+                                        rec.get("tau", 4), rec["chips"],
+                                        rec["shape"])
+            rec["analytic_bytes_per_device"] = abytes
+            rec["analytic_memory_s"] = abytes / hlo_analysis.HBM_BW
+            out_lines.append(json.dumps(rec))
+    with open(path, "w") as f:
+        f.write("\n".join(out_lines) + "\n")
+    print(f"fixed {len(out_lines)} records")
+
+
+if __name__ == "__main__":
+    fix(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.jsonl")

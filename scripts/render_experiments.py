@@ -1,0 +1,183 @@
+"""Render §Dry-run and §Roofline markdown tables in EXPERIMENTS.md from
+experiments/dryrun.jsonl (between AUTOGEN markers).
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import load_records  # noqa: E402
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | kind | status | compile | "
+            "args/dev | temp/dev | HLO GFLOPs/dev | coll MB/dev | "
+            "collectives |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("variant", "feddeper") != "feddeper":
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | "
+                        f"skipped (documented) | - | - | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | "
+                        f"ERROR | - | - | - | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        counts = ", ".join(f"{k}:{v}" for k, v in sorted(
+            r.get("collective_counts", {}).items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | ok "
+            f"| {r['compile_s']:.0f}s "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} "
+            f"| {r['flops_per_device'] / 1e9:,.0f} "
+            f"| {r['collective_bytes_per_device'] / 1e6:,.1f} "
+            f"| {counts} |")
+    return "\n".join(rows)
+
+
+def _advice(r) -> str:
+    """One sentence: what moves the dominant term down (per the spec)."""
+    dom, kind, arch = r["dominant"], r["kind"], r["arch"]
+    moe = arch in ("deepseek-v3-671b", "granite-moe-3b-a800m",
+                   "jamba-v0.1-52b")
+    if dom == "compute":
+        if moe:
+            return ("sort-based dispatch + shard_map expert all-to-all "
+                    "(implemented, see §Perf P3) removes the redundant "
+                    "dispatch math")
+        return ("causal block skipping in attention (Pallas kernel's "
+                "pl.when) halves prefill FLOPs")
+    if dom == "memory":
+        if kind == "train":
+            return ("remat (--remat) trades activation traffic for "
+                    "recompute; bytes term here is XLA's no-fusion bound "
+                    "-- analytic floor is the target")
+        if kind == "decode":
+            return ("int8/fp8 KV-cache quantization halves cache reads; "
+                    "larger decode batch amortizes the weight pass")
+        return "fuse attention (flash kernel) to kill score-matrix traffic"
+    if kind == "train":
+        return ("FedDeper's own lever: raise tau (sync bytes / tau) or "
+                "fp8 delta uploads (--upload-dtype)")
+    if kind == "decode":
+        return ("seq-parallel flash-decode with owner-local cache update "
+                "(--seq-decode, §Perf P5) removes per-layer cache "
+                "resharding")
+    return ("overlap tensor-parallel all-gathers with matmuls; "
+            "reduce-scatter the FFN activations instead of all-reducing")
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute | memory (HLO) | memory "
+            "(analytic) | collective | dominant | MODEL_FLOPS | "
+            "useful/HLO | what moves the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r.get("variant", "feddeper") != "feddeper":
+            continue
+        if r["mesh"] != "16x16":
+            continue  # roofline table is single-pod per the spec
+        rolled = not r.get("unroll_layers", True)
+        if rolled:
+            # rolled layer scan: HLO terms count one layer of the stack --
+            # report the analytic compute/memory estimates instead and
+            # mark the row (compile-proof + memory-analysis remain exact)
+            compute = f"~{fmt_s(r['model_flops'] / r['chips'] / 197e12)}"
+            mem_hlo = "n/a†"
+            useful = "n/a†"
+            dom = "n/a†"
+        else:
+            compute = fmt_s(r["compute_s"])
+            mem_hlo = fmt_s(r["memory_s"])
+            useful = f"{r['useful_flops_ratio']:.2f}"
+            dom = f"**{r['dominant']}**"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {compute} | {mem_hlo} "
+            f"| {fmt_s(max(0, r.get('analytic_memory_s', 0)))} "
+            f"| {fmt_s(r['collective_s'])} | {dom} "
+            f"| {r['model_flops'] / 1e12:,.0f}T "
+            f"| {useful} | {_advice(r)} |")
+    return "\n".join(rows)
+
+
+def splice(text, marker, table):
+    begin, end = f"<!-- AUTOGEN:{marker} -->", f"<!-- /AUTOGEN:{marker} -->"
+    pattern = re.compile(re.escape(begin) + ".*?" + re.escape(end),
+                         re.DOTALL)
+    return pattern.sub(begin + "\n" + table + "\n" + end, text)
+
+
+def perf_table(path):
+    import json as _json
+    if not os.path.exists(path):
+        return "(no perf records yet)"
+    rows = ["| tag | arch | shape | mesh | variant | compute | memory | "
+            "collective | dominant | useful/HLO |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    with open(path) as f:
+        for line in f:
+            try:
+                r = _json.loads(line)
+            except _json.JSONDecodeError:
+                continue
+            if r.get("status") != "ok":
+                rows.append(f"| {r.get('tag','')} | {r.get('arch')} | "
+                            f"{r.get('shape')} | {r.get('mesh')} | - | - | "
+                            f"- | - | ERROR | - |")
+                continue
+            rows.append(
+                f"| {r.get('tag') or '(default)'} | {r['arch']} "
+                f"| {r['shape']} | {r['mesh']} | {r.get('variant')} "
+                f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | {r['dominant']} "
+                f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = sorted(load_records(),
+                  key=lambda r: (r.get("arch", ""), r.get("shape", ""),
+                                 r.get("mesh", "")))
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    text = splice(text, "dryrun", dryrun_table(recs))
+    text = splice(text, "roofline", roofline_table(recs))
+    perf_path = os.path.join(os.path.dirname(__file__), "..",
+                             "experiments", "perf.jsonl")
+    text = splice(text, "perf", perf_table(perf_path))
+    open(path, "w").write(text)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    print(f"rendered {ok} ok + {sk} skipped records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: FedDeper (AAAI-22) as a production multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,77 @@
+"""Pytree checkpointing to .npz with path-flattened keys + json metadata.
+
+Handles arbitrary nested dict/list/tuple/NamedTuple pytrees (the treedef is
+serialized via jax.tree_util key paths and rebuilt on restore against a
+template pytree).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no native bf16
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # .npz suffix stops np.savez appending another
+    flat = _flatten(tree)
+    meta = json.dumps({"step": step, **(metadata or {})})
+    np.savez(tmp, __meta__=np.frombuffer(meta.encode(), np.uint8), **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(path: str, template: Pytree) -> tuple:
+    """Restore into the structure of ``template``.  Returns (tree, meta)."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode()) \
+            if "__meta__" in data else {}
+        flat = {k: data[k] for k in data.files if k != "__meta__"}
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for (path_keys, leaf_t) in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf_t.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                f"template {leaf_t.shape}")
+        # cast via jnp: handles bf16 and other ml_dtypes targets
+        leaves.append(jnp.asarray(arr).astype(leaf_t.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, name), int(m.group(1))
+    return best

@@ -1,0 +1,27 @@
+"""Config registry: importing this package registers every assigned arch."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    InputShape,
+    INPUT_SHAPES,
+    LayerSpec,
+    get_config,
+    list_configs,
+    register,
+)
+
+# one module per assigned architecture (registration side effects)
+from repro.configs import (  # noqa: F401
+    seamless_m4t_medium,
+    gemma2_9b,
+    deepseek_v3_671b,
+    qwen2_72b,
+    llama3_2_3b,
+    internvl2_26b,
+    granite_moe_3b_a800m,
+    jamba_v0_1_52b,
+    phi3_medium_14b,
+    xlstm_125m,
+    paper_models,
+)
+
+ALL_ARCHS = tuple(sorted(list_configs()))

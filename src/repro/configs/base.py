@@ -1,0 +1,232 @@
+"""Architecture configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig`` registered under its
+public id (``--arch <id>``).  A config fully determines:
+
+  * the parameter pytree (via ``repro.models.build``),
+  * the layer pattern (scan-friendly repeating unit + optional prefix),
+  * the modality frontend stub (audio / vision embeddings per the carve-out),
+  * which input shapes apply (``long_500k`` only for sub-quadratic archs,
+    decode only for archs with a decoder).
+
+Reduced variants for CPU smoke tests come from ``cfg.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+# ``kind``      : 'attn' | 'mamba' | 'mlstm' | 'slstm'
+# ``ffn``       : 'dense' | 'moe' | 'none'
+# ``window``    : None (global) or int (sliding window, e.g. gemma2 local)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"
+    ffn: str = "dense"
+    window: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.kind in ("attn", "mamba", "mlstm", "slstm"), self.kind
+        assert self.ffn in ("dense", "moe", "none"), self.ffn
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # decoder stack: ``prefix`` layers (unrolled) then ``pattern`` repeated
+    # ``num_repeats`` times via lax.scan over stacked params.
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    num_repeats: int = 1
+    prefix: Tuple[LayerSpec, ...] = ()
+
+    # attention details
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+
+    # MLA (DeepSeek-V3)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+
+    # multi-token prediction (DeepSeek-V3): extra depth-1 MTP head
+    mtp: bool = False
+
+    # SSM (Mamba-1)
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+
+    # xLSTM
+    mlstm_expand: int = 2
+    slstm_ff_expand: float = 1.3334
+
+    # encoder-decoder (Seamless)
+    encoder_layers: int = 0
+
+    # modality frontend stub: 'audio' | 'vision' | None.  Frontends supply
+    # precomputed embeddings via input_specs(); we implement the backbone.
+    frontend: Optional[str] = None
+    frontend_tokens: int = 256  # patches / frames in the stub prefix
+
+    tie_embeddings: bool = True
+    act: str = "silu"
+    gated_ffn: bool = True  # SwiGLU/GeGLU vs plain MLP
+    norm_eps: float = 1e-6
+    # gemma-style extra post-norms around attn/ffn and sqrt(d) embed scaling
+    post_norms: bool = False
+    scale_embed: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.prefix) + len(self.pattern) * self.num_repeats
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode over a 500k context is not full-attention-bound.
+
+        SSM/hybrid archs qualify; dense archs qualify only when every
+        attention layer in the repeating unit that is *not* windowed is a
+        minority (gemma2: alternating local/global -- global layers are
+        linear-in-S bandwidth at decode, cache is the gate; we run it)."""
+        kinds = [l.kind for l in self.prefix + self.pattern]
+        if all(k != "attn" for k in kinds):
+            return True
+        attn = [l for l in self.prefix + self.pattern if l.kind == "attn"]
+        windowed = [l for l in attn if l.window is not None]
+        non_attn = [l for l in self.prefix + self.pattern if l.kind != "attn"]
+        # hybrid (jamba): attention minority
+        if len(non_attn) > len(attn):
+            return True
+        # gemma2-style: at least half the attention layers sliding-window
+        return len(windowed) * 2 >= len(attn) and len(windowed) > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path
+
+    def shapes(self) -> Tuple[str, ...]:
+        out = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.sub_quadratic:
+            out.append("long_500k")
+        return tuple(out)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """2-layer, d_model<=512, <=4-expert variant of the same family for
+        CPU smoke tests (one pattern repeat, truncated prefix)."""
+        d_model = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        pattern = tuple(self.pattern[:2]) or (LayerSpec(),)
+        repl = {
+            "d_model": d_model,
+            "num_heads": heads,
+            "num_kv_heads": kv,
+            "head_dim": min(self.resolved_head_dim, 64),
+            "d_ff": min(self.d_ff, 512) if self.d_ff else 0,
+            "vocab_size": min(self.vocab_size, 512),
+            "pattern": pattern,
+            "num_repeats": 1,
+            "prefix": tuple(self.prefix[:1]),
+            "frontend_tokens": min(self.frontend_tokens, 8),
+        }
+        if self.num_experts:
+            repl.update(
+                num_experts=min(self.num_experts, 4),
+                experts_per_token=min(self.experts_per_token, 2),
+                moe_d_ff=min(self.moe_d_ff or self.d_ff, 128),
+            )
+        if self.use_mla:
+            repl.update(q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=32,
+                        qk_rope_dim=16, v_head_dim=32, head_dim=48)
+        if self.encoder_layers:
+            repl.update(encoder_layers=2)
+        if self.ssm_state_dim:
+            repl.update(ssm_state_dim=8)
+        return dataclasses.replace(self, **repl)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    assert cfg.name not in _REGISTRY, f"duplicate arch {cfg.name}"
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    # import side-effect registration
+    from repro import configs as _  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    from repro import configs as _  # noqa: F401
+
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

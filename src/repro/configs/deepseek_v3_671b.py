@@ -1,0 +1,36 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437].
+
+61L d_model=7168 128H d_ff(dense)=18432 moe_d_ff=2048 vocab=129280.
+MLA (q_lora 1536, kv_lora 512, qk nope/rope 128/64, v 128); MoE with 1
+shared + 256 routed experts, top-8; first 3 layers dense; MTP head.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        d_model=7168,
+        num_heads=128,
+        num_kv_heads=128,  # MLA: logical kv per head from shared latent
+        d_ff=18432,        # dense-layer FFN width
+        moe_d_ff=2048,     # per-routed-expert width
+        vocab_size=129_280,
+        prefix=tuple(LayerSpec(kind="attn", ffn="dense") for _ in range(3)),
+        pattern=(LayerSpec(kind="attn", ffn="moe"),),
+        num_repeats=58,
+        use_mla=True,
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+        head_dim=192,  # qk_nope + qk_rope
+        num_experts=256,
+        experts_per_token=8,
+        num_shared_experts=1,
+        mtp=True,
+        tie_embeddings=False,
+        rope_theta=10_000.0,
+    )
+)

@@ -1,0 +1,32 @@
+"""Gemma-2 9B [arXiv:2408.00118].
+
+42L d_model=3584 16H (GQA kv=8) head_dim=256 d_ff=14336 vocab=256000.
+Alternating local (sliding window 4096) / global attention, attn logit
+softcap 50, final logit softcap 30, extra post-norms (gemma2 style).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="gemma2-9b",
+        family="dense",
+        d_model=3584,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab_size=256_000,
+        pattern=(
+            LayerSpec(kind="attn", ffn="dense", window=4096),  # local
+            LayerSpec(kind="attn", ffn="dense", window=None),  # global
+        ),
+        num_repeats=21,
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        post_norms=True,
+        scale_embed=True,
+        act="gelu",
+        tie_embeddings=True,
+        rope_theta=10_000.0,
+    )
+)

@@ -1,0 +1,25 @@
+"""Granite-3.0 MoE 3B-A800M [hf:ibm-granite/granite-3.0-*-base family].
+
+32L d_model=1536 24H (GQA kv=8) per-expert d_ff=512 vocab=49155,
+MoE 40 experts top-8 (every layer MoE, no shared expert).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=512,
+        moe_d_ff=512,
+        vocab_size=49_155,
+        pattern=(LayerSpec(kind="attn", ffn="moe"),),
+        num_repeats=32,
+        num_experts=40,
+        experts_per_token=8,
+        tie_embeddings=True,
+        rope_theta=10_000.0,
+    )
+)

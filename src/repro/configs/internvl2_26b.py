@@ -1,0 +1,26 @@
+"""InternVL2-26B language backbone (InternLM2-20B) [arXiv:2404.16821].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.  The InternViT-6B
+vision encoder + MLP projector are a stub per the carve-out: ``input_specs``
+supplies projected patch embeddings (B, patches, d_model) prepended to the
+text sequence; we implement the language transformer.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="internvl2-26b",
+        family="vlm",
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=92_553,
+        pattern=(LayerSpec(kind="attn", ffn="dense"),),
+        num_repeats=48,
+        frontend="vision",
+        frontend_tokens=256,  # 448x448 image -> 256 tokens after pixel-shuffle
+        tie_embeddings=False,
+        rope_theta=1_000_000.0,
+    )
+)

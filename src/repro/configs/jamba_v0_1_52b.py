@@ -1,0 +1,40 @@
+"""Jamba-v0.1 52B [arXiv:2403.19887].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.  Hybrid: each
+8-layer Jamba block has 1 attention layer + 7 Mamba layers (1:7), and MoE
+(16 experts, top-2) replaces the MLP on every other layer.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+
+def _jamba_block():
+    """One 8-layer Jamba block: attn at index 4 (as released), MoE on odd."""
+    layers = []
+    for idx in range(8):
+        kind = "attn" if idx == 4 else "mamba"
+        ffn = "moe" if idx % 2 == 1 else "dense"
+        layers.append(LayerSpec(kind=kind, ffn=ffn))
+    return tuple(layers)
+
+
+CONFIG = register(
+    ArchConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        moe_d_ff=14336,
+        vocab_size=65_536,
+        pattern=_jamba_block(),
+        num_repeats=4,
+        num_experts=16,
+        experts_per_token=2,
+        ssm_state_dim=16,
+        ssm_conv_dim=4,
+        ssm_expand=2,
+        tie_embeddings=False,
+        rope_theta=10_000.0,
+    )
+)

@@ -1,0 +1,21 @@
+"""Llama-3.2 3B [hf:meta-llama/Llama-3.2-1B family, scaled per assignment].
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="llama3.2-3b",
+        family="dense",
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=128_256,
+        pattern=(LayerSpec(kind="attn", ffn="dense"),),
+        num_repeats=28,
+        tie_embeddings=True,
+        rope_theta=500_000.0,
+    )
+)

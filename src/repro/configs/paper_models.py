@@ -1,0 +1,44 @@
+"""The paper's own primary ML models (FedDeper, AAAI-22, Experiment Setup):
+
+* MLP: 2 hidden layers (512, 256)
+* CNN/MNIST: conv 32,64 (3x3) + fc 1024, 512
+* CNN/CIFAR: conv 64,128 (5x5) + fc 1024, 512, 256
+
+These are *classifier* configs used by the simulation regime (paper
+reproduction); they are dataclasses separate from ArchConfig since they are
+not sequence models.
+"""
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class ClassifierConfig:
+    name: str
+    kind: str  # 'mlp' | 'cnn'
+    input_shape: Tuple[int, ...]  # (H, W, C) or (D,)
+    num_classes: int
+    hidden: Tuple[int, ...] = ()
+    conv_channels: Tuple[int, ...] = ()
+    kernel_size: int = 3
+
+
+MLP_MNIST = ClassifierConfig(
+    name="mlp-mnist", kind="mlp", input_shape=(784,), num_classes=10,
+    hidden=(512, 256))
+
+MLP_CIFAR = ClassifierConfig(
+    name="mlp-cifar", kind="mlp", input_shape=(3072,), num_classes=10,
+    hidden=(512, 256))
+
+CNN_MNIST = ClassifierConfig(
+    name="cnn-mnist", kind="cnn", input_shape=(28, 28, 1), num_classes=10,
+    conv_channels=(32, 64), kernel_size=3, hidden=(1024, 512))
+
+CNN_CIFAR = ClassifierConfig(
+    name="cnn-cifar", kind="cnn", input_shape=(32, 32, 3), num_classes=10,
+    conv_channels=(64, 128), kernel_size=5, hidden=(1024, 512, 256))
+
+PAPER_MODELS = {
+    c.name: c for c in (MLP_MNIST, MLP_CIFAR, CNN_MNIST, CNN_CIFAR)
+}

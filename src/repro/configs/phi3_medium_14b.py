@@ -1,0 +1,21 @@
+"""Phi-3-medium 14B [arXiv:2404.14219].
+
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352, RoPE + SwiGLU.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=10,
+        d_ff=17920,
+        vocab_size=100_352,
+        pattern=(LayerSpec(kind="attn", ffn="dense"),),
+        num_repeats=40,
+        tie_embeddings=False,
+        rope_theta=10_000.0,
+    )
+)

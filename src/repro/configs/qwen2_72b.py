@@ -1,0 +1,22 @@
+"""Qwen2-72B [arXiv:2407.10671].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, QKV bias.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="qwen2-72b",
+        family="dense",
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=29568,
+        vocab_size=152_064,
+        pattern=(LayerSpec(kind="attn", ffn="dense"),),
+        num_repeats=80,
+        qkv_bias=True,
+        tie_embeddings=False,
+        rope_theta=1_000_000.0,
+    )
+)

@@ -1,0 +1,31 @@
+"""SeamlessM4T-medium text/audio backbone [arXiv:2308.11596].
+
+12L d_model=1024 16H (GQA kv=16 == MHA) d_ff=4096 vocab=256206, enc-dec.
+The speech frontend (mel filterbank + w2v-BERT conv feature extractor) is a
+stub per the carve-out: ``input_specs`` supplies frame embeddings of shape
+(B, frames, d_model); we implement the 12-layer text encoder consuming them
+and the 12-layer decoder with cross-attention.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256_206,
+        pattern=(LayerSpec(kind="attn", ffn="dense"),),
+        num_repeats=12,
+        encoder_layers=12,
+        frontend="audio",
+        frontend_tokens=1024,  # ~20s of speech at 50 frames/s
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        act="relu",
+        gated_ffn=False,
+        scale_embed=True,
+    )
+)

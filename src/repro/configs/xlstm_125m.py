@@ -1,0 +1,27 @@
+"""xLSTM 125M [arXiv:2405.04517].
+
+12 blocks d_model=768 4H vocab=50304, alternating mLSTM / sLSTM blocks
+(d_ff=0: the blocks carry their own up/down projections; the sLSTM block
+includes a gated feed-forward of expansion ~4/3 as in the paper).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, register
+
+CONFIG = register(
+    ArchConfig(
+        name="xlstm-125m",
+        family="ssm",
+        d_model=768,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50_304,
+        pattern=(
+            LayerSpec(kind="mlstm", ffn="none"),
+            LayerSpec(kind="slstm", ffn="none"),
+        ),
+        num_repeats=6,
+        mlstm_expand=2,
+        slstm_ff_expand=1.3334,
+        tie_embeddings=True,
+    )
+)

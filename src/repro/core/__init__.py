@@ -1,0 +1,24 @@
+"""FedDeper core: strategies + simulation and datacenter round machinery."""
+from repro.core.strategies import (  # noqa: F401
+    FedAvg,
+    FedDeper,
+    FedProx,
+    Scaffold,
+    STRATEGIES,
+    Strategy,
+)
+from repro.core.rounds import (  # noqa: F401
+    SimConfig,
+    init_sim_state,
+    make_global_eval,
+    make_personal_eval,
+    make_round_fn,
+    run_rounds,
+)
+from repro.core.federated import (  # noqa: F401
+    make_decode_step,
+    make_lm_grad_fn,
+    make_prefill_step,
+    make_round_step,
+    make_sync_train_step,
+)

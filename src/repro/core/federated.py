@@ -1,0 +1,107 @@
+"""Datacenter regime: FedDeper rounds as sharded multi-pod train steps.
+
+The FL->datacenter mapping (DESIGN.md §3): a *client* is a slice of the
+mesh (the 'data' axis single-pod, the 'pod' axis multi-pod).  One
+``round_step`` = tau local steps (lax.scan over microbatches, zero
+cross-client traffic) + one delta-mean whose lowering is the cross-client
+all-reduce.  Synchronous data-parallel SGD (= FedAvg tau=1) is the
+comparator: FedDeper divides cross-client collective bytes per optimizer
+step by tau at the price of 2x local gradient compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies import Strategy, tmap
+from repro.models import transformer
+
+Pytree = Any
+
+
+def make_lm_grad_fn(cfg, *, chunkwise=True, use_pallas=False,
+                    remat: bool = False, unroll=1):
+    """``remat`` checkpoints each layer-scan body (classic scan remat:
+    only the residual carry is saved between layers; layer internals are
+    recomputed during the backward pass)."""
+    def loss(params, mb):
+        l, _ = transformer.loss_fn(cfg, params, mb, chunkwise=chunkwise,
+                                   use_pallas=use_pallas, unroll=unroll,
+                                   remat=remat)
+        return l
+
+    def grad_fn(params, mb):
+        l, g = jax.value_and_grad(loss)(params, mb)
+        return l, g
+
+    return grad_fn
+
+
+def make_round_step(cfg, strategy: Strategy, *, chunkwise=True,
+                    use_pallas=False, remat=False, unroll=1):
+    """Returns ``round_step(x, server_state, client_state, batch)``.
+
+    batch: pytree with leading (C, tau, b, ...) dims -- C clients, tau
+    microbatches each.  x is client-replicated; client_state carries a
+    leading C dim.  One call = one FL round = one cross-client sync.
+    """
+    grad_fn = make_lm_grad_fn(cfg, chunkwise=chunkwise,
+                              use_pallas=use_pallas, remat=remat,
+                              unroll=unroll)
+
+    def round_step(x, server_state, client_state, batch):
+        ctx = strategy.broadcast(x, server_state)
+
+        def per_client(cs, cb):
+            return strategy.local_round(x, ctx, cs, cb, grad_fn)
+
+        new_cs, uploads, metrics = jax.vmap(per_client)(client_state, batch)
+        x, server_state, _ = strategy.aggregate(x, server_state, uploads,
+                                                p=1.0)
+        metrics = {k: v.mean() for k, v in metrics.items()}
+        return x, server_state, new_cs, metrics
+
+    return round_step
+
+
+def make_sync_train_step(cfg, *, eta: float = 1e-3, chunkwise=True,
+                         use_pallas=False, remat=False, unroll=1):
+    """Synchronous data-parallel SGD baseline (= FedAvg with tau = 1):
+    gradient all-reduce every step.  batch: (B, S) global."""
+    grad_fn = make_lm_grad_fn(cfg, chunkwise=chunkwise,
+                              use_pallas=use_pallas, remat=remat,
+                              unroll=unroll)
+
+    def train_step(x, batch):
+        loss, g = grad_fn(x, batch)
+        x = tmap(lambda xi, gi: (xi - eta * gi).astype(xi.dtype), x, g)
+        return x, {"loss": loss}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps (inference shapes)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, *, chunkwise=True, unroll=1):
+    def prefill_step(params, batch, cache):
+        return transformer.prefill(cfg, params, batch, cache,
+                                   chunkwise=chunkwise, unroll=unroll)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, *, chunkwise=True, unroll=1, seq_shard=None):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = transformer.decode_step(cfg, params, cache, tokens,
+                                                pos, chunkwise=chunkwise,
+                                                unroll=unroll,
+                                                seq_shard=seq_shard)
+        next_tok = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+        return next_tok, logits, cache
+
+    return serve_step

@@ -1,0 +1,172 @@
+"""Simulation regime: n federated clients as a vmapped leading axis.
+
+Reproduces the paper's experiments (n=10 cross-silo / n=100 cross-device,
+client sampling, non-i.i.d splits) on a single host.  The whole round --
+sampling, gather, tau local steps per selected client, scatter, aggregate --
+is one jitted function.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies import Strategy, tmap
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    n_clients: int
+    m_sampled: int
+    tau: int
+    batch_size: int
+    seed: int = 0
+
+    @property
+    def p(self) -> float:
+        return self.m_sampled / self.n_clients
+
+
+def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree):
+    """Returns the full simulation state pytree."""
+    client = strategy.client_init(x)
+    clients = tmap(lambda t: jnp.broadcast_to(t, (sim.n_clients,) + t.shape)
+                   .copy(), client) if jax.tree.leaves(client) else {}
+    # personalized-model store (Fig. 7): last local model per client
+    pms = tmap(lambda t: jnp.broadcast_to(t, (sim.n_clients,) + t.shape)
+               .copy(), x)
+    return {
+        "x": x,
+        "clients": clients,
+        "pms": pms,
+        "server": strategy.server_init(x),
+        "rng": jax.random.PRNGKey(sim.seed),
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+def _personal_model(strategy: Strategy, x, cs, upload):
+    if strategy.name == "feddeper":
+        return cs["v"]
+    if strategy.name == "scaffold":
+        return tmap(jnp.add, x, upload["dv"])
+    return tmap(jnp.add, x, upload)
+
+
+def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
+                  data: Dict[str, jax.Array]):
+    """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
+    {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state)."""
+    n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
+    n_i = jax.tree.leaves(data)[0].shape[1]
+
+    def round_fn(state):
+        rng, k_sel, k_batch = jax.random.split(state["rng"], 3)
+        idx = jax.random.choice(k_sel, n, (m,), replace=False)  # (m,)
+
+        # gather sampled client state + their data
+        cs = tmap(lambda t: t[idx], state["clients"]) \
+            if jax.tree.leaves(state["clients"]) else \
+            [{} for _ in range(1)][0]
+        bidx = jax.random.randint(k_batch, (m, tau, b), 0, n_i)
+        batches = tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx),
+                       data)  # (m, tau, b, ...)
+
+        ctx = strategy.broadcast(state["x"], state["server"])
+
+        def per_client(cs_i, batches_i):
+            return strategy.local_round(state["x"], ctx, cs_i, batches_i,
+                                        grad_fn)
+
+        new_cs, uploads, metrics = jax.vmap(per_client)(cs, batches)
+
+        # scatter per-client state back
+        clients = state["clients"]
+        if jax.tree.leaves(clients):
+            clients = tmap(lambda all_, new: all_.at[idx].set(new),
+                           clients, new_cs)
+        pms_new = jax.vmap(
+            lambda cs_i, up_i: _personal_model(strategy, state["x"], cs_i,
+                                               up_i))(new_cs, uploads)
+        pms = tmap(lambda all_, new: all_.at[idx].set(new),
+                   state["pms"], pms_new)
+
+        x, server, agg_metrics = strategy.aggregate(
+            state["x"], state["server"], uploads, sim.p)
+        metrics = {k: v.mean() for k, v in metrics.items()}
+        metrics.update(agg_metrics)
+        return {
+            "x": x, "clients": clients, "pms": pms, "server": server,
+            "rng": rng, "round": state["round"] + 1,
+        }, metrics
+
+    return jax.jit(round_fn)
+
+
+def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,
+               eval_every: int = 10, log=None):
+    """Drive K rounds; returns (state, history list of metric dicts)."""
+    history = []
+    for k in range(k_rounds):
+        state, metrics = round_fn(state)
+        rec = {"round": k + 1,
+               **{key: float(v) for key, v in metrics.items()}}
+        if eval_fn is not None and ((k + 1) % eval_every == 0
+                                    or k == k_rounds - 1):
+            rec.update({k2: float(v) for k2, v in eval_fn(state).items()})
+        history.append(rec)
+        if log is not None:
+            log(rec)
+    return state, history
+
+
+def make_global_eval(apply_loss_fn, test_data, batch: int = 512):
+    """apply_loss_fn(params, batch)->(loss, metrics w/ acc).  Full-split
+    eval of the global model."""
+    n_total = jax.tree.leaves(test_data)[0].shape[0]
+    n_batches = max(1, n_total // batch)
+
+    @jax.jit
+    def eval_x(x):
+        losses, accs = [], []
+        for i in range(n_batches):
+            mb = tmap(lambda t: t[i * batch:(i + 1) * batch], test_data)
+            loss, m = apply_loss_fn(x, mb)
+            losses.append(loss)
+            accs.append(m["acc"])
+        return jnp.stack(losses).mean(), jnp.stack(accs).mean()
+
+    def eval_fn(state):
+        loss, acc = eval_x(state["x"])
+        return {"test_loss": loss, "test_acc": acc}
+
+    return eval_fn
+
+
+def make_personal_eval(apply_loss_fn, personal_test):
+    """Per-client personal-model eval (Fig. 7).  personal_test has leading
+    (n_clients, Ni) dims."""
+    @jax.jit
+    def eval_pms(pms, x):
+        def one(pm, td):
+            loss, m = apply_loss_fn(pm, td)
+            return loss, m["acc"]
+        pl, pa = jax.vmap(one)(pms, personal_test)
+
+        def one_gm(td):
+            loss, m = apply_loss_fn(x, td)
+            return loss, m["acc"]
+        gl, ga = jax.vmap(one_gm)(personal_test)
+        return pl.mean(), pa.mean(), gl.mean(), ga.mean()
+
+    def eval_fn(state):
+        pl, pa, gl, ga = eval_pms(state["pms"], state["x"])
+        return {"pm_loss": pl, "pm_acc": pa, "gm_local_loss": gl,
+                "gm_local_acc": ga}
+
+    return eval_fn

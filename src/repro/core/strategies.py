@@ -1,0 +1,250 @@
+"""Federated-optimization strategies: FedDeper (the paper) + baselines.
+
+Every strategy is a frozen dataclass of hyper-parameters with pure-pytree
+methods, so the same code runs in both regimes:
+
+  * simulation  -- ``jax.vmap`` over a leading client dim on one device
+                   (paper reproduction, n in {10, 100});
+  * datacenter  -- client dim sharded over a mesh axis ('data' single-pod /
+                   'pod' multi-pod); the delta-mean in ``aggregate`` is the
+                   one cross-client all-reduce per round (tau local steps of
+                   zero cross-client traffic).
+
+Protocol (all pytrees are params-shaped unless noted):
+
+  client_init(x)   -> per-client state
+  server_init(x)   -> server state
+  broadcast(x, ss) -> ctx sent to clients this round (SCAFFOLD's c)
+  local_round(x, ctx, cs, batches, grad_fn)
+                   -> (new_cs, upload, metrics);  ``batches`` is a pytree
+                      stacked over a leading tau axis, scanned.
+  aggregate(x, ss, uploads, p) -> (new_x, new_ss, metrics); ``uploads``
+                      stacked over the sampled-client axis.
+
+``grad_fn(params, minibatch) -> (loss, grads)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+GradFn = Callable[[Pytree, Pytree], Tuple[jax.Array, Pytree]]
+
+
+def tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def _axpy(a: float, x: Pytree, y: Pytree) -> Pytree:
+    """y + a * x elementwise over pytrees (x upcast to y's dtype: fp8
+    uploads have no implicit promotion path)."""
+    return tmap(lambda xi, yi:
+                (yi + a * xi.astype(yi.dtype)).astype(yi.dtype), x, y)
+
+
+def tree_mean0(tree: Pytree) -> Pytree:
+    return tmap(lambda t: t.mean(0), tree)
+
+
+@dataclass(frozen=True)
+class Strategy:
+    eta: float = 0.01        # local learning rate
+    server_lr: float = 1.0   # global learning rate (paper: 1)
+    # beyond-paper: server-side momentum on the aggregated delta
+    # (SlowMo / FedAvgM family -- the paper's Related Work cites these as
+    # composable with FedDeper; 0.0 = the paper's plain aggregation)
+    server_momentum: float = 0.0
+
+    name = "base"
+
+    # -- defaults ----------------------------------------------------------
+    def client_init(self, x: Pytree) -> Pytree:
+        return {}
+
+    def server_init(self, x: Pytree) -> Pytree:
+        if self.server_momentum:
+            return {"mu": tmap(jnp.zeros_like, x)}
+        return {}
+
+    def broadcast(self, x: Pytree, server_state: Pytree) -> Pytree:
+        return None
+
+    def aggregate(self, x, server_state, uploads, p):
+        delta = tree_mean0(uploads)
+        if self.server_momentum:
+            mu = tmap(lambda m, d:
+                      (self.server_momentum * m
+                       + d.astype(m.dtype)).astype(m.dtype),
+                      server_state["mu"], delta)
+            x = _axpy(self.server_lr, mu, x)
+            return x, {"mu": mu}, {}
+        x = _axpy(self.server_lr, delta, x)
+        return x, server_state, {}
+
+    # subclasses implement local_round
+    def local_round(self, x, ctx, cs, batches, grad_fn):  # pragma: no cover
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# FedAvg  (McMahan et al. 2017)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedAvg(Strategy):
+    name = "fedavg"
+
+    def local_round(self, x, ctx, cs, batches, grad_fn):
+        def step(v, mb):
+            loss, g = grad_fn(v, mb)
+            return _axpy(-self.eta, g, v), loss
+
+        v, losses = jax.lax.scan(step, x, batches)
+        upload = tmap(jnp.subtract, v, x)  # v_tau - x
+        return cs, upload, {"local_loss": losses.mean()}
+
+
+# ---------------------------------------------------------------------------
+# FedProx  (Li et al. 2020): local objective f_i(v) + (mu/2)||v - x||^2
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedProx(Strategy):
+    mu: float = 1.0  # paper fixes the proximal constant to 1
+    name = "fedprox"
+
+    def local_round(self, x, ctx, cs, batches, grad_fn):
+        def step(v, mb):
+            loss, g = grad_fn(v, mb)
+            # v <- v - eta * (g + mu (v - x))
+            v = tmap(lambda vi, gi, xi:
+                     (vi - self.eta * (gi + self.mu * (vi - xi))
+                      ).astype(vi.dtype), v, g, x)
+            return v, loss
+
+        v, losses = jax.lax.scan(step, x, batches)
+        upload = tmap(jnp.subtract, v, x)
+        return cs, upload, {"local_loss": losses.mean()}
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD  (Karimireddy et al. 2020), option II control variates
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Scaffold(Strategy):
+    name = "scaffold"
+
+    def client_init(self, x):
+        return {"c_i": tmap(jnp.zeros_like, x)}
+
+    def server_init(self, x):
+        return {"c": tmap(jnp.zeros_like, x)}
+
+    def broadcast(self, x, server_state):
+        return server_state["c"]
+
+    def local_round(self, x, ctx, cs, batches, grad_fn):
+        c, c_i = ctx, cs["c_i"]
+
+        def step(v, mb):
+            loss, g = grad_fn(v, mb)
+            # v <- v - eta (g - c_i + c)
+            v = tmap(lambda vi, gi, cii, ci:
+                     (vi - self.eta * (gi - cii + ci)).astype(vi.dtype),
+                     v, g, c_i, c)
+            return v, loss
+
+        tau = jax.tree.leaves(batches)[0].shape[0]
+        v, losses = jax.lax.scan(step, x, batches)
+        # c_i+ = c_i - c + (x - v_tau) / (tau * eta)
+        c_i_new = tmap(lambda cii, ci, xi, vi:
+                       cii - ci + (xi - vi) / (tau * self.eta),
+                       c_i, c, x, v)
+        upload = {
+            "dv": tmap(jnp.subtract, v, x),
+            "dc": tmap(jnp.subtract, c_i_new, c_i),
+        }
+        return {"c_i": c_i_new}, upload, {"local_loss": losses.mean()}
+
+    def aggregate(self, x, server_state, uploads, p):
+        dv = tree_mean0(uploads["dv"])
+        dc = tree_mean0(uploads["dc"])
+        x = _axpy(self.server_lr, dv, x)
+        # c += (m/n) mean(dc); doubles the uplink (the paper's 2x overhead)
+        c = _axpy(p, dc, server_state["c"])
+        return x, {"c": c}, {}
+
+
+# ---------------------------------------------------------------------------
+# FedDeper  (this paper, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedDeper(Strategy):
+    rho: float = 0.03   # depersonalization penalty (rho <= eta * beta)
+    lam: float = 0.5    # mixing rate, lambda in [1/2, 1]
+    use_pallas: bool = False  # fused deper_update kernel (TPU target)
+    # beyond-paper: low-precision delta uploads (e.g. 'float8_e4m3fn')
+    # halve the cross-client all-reduce bytes; deltas are small relative
+    # to weights so fp8 range suffices (validated in tests)
+    upload_dtype: str = ""
+    name = "feddeper"
+
+    def client_init(self, x):
+        return {"v": tmap(jnp.asarray, x)}  # v_0 = x at round 0
+
+    def local_round(self, x, ctx, cs, batches, grad_fn):
+        """Alternating SGD (Alg. 1 lines 6-9):
+
+          y_{j+1} = y_j - eta g_i(y_j) - rho (v_j + y_j - 2x)
+          v_{j+1} = v_j - eta g_i(v_j)
+
+        then mixing (line 10):  v_0^{k+1} = (1-lam) v_tau + lam y_tau,
+        upload (line 11):       y_tau - x.
+        """
+        def step(carry, mb):
+            y, v = carry
+            loss_y, gy = grad_fn(y, mb)
+            loss_v, gv = grad_fn(v, mb)
+            if self.use_pallas:
+                from repro.kernels.ops import deper_update
+                y, v = deper_update(y, v, x, gy, gv,
+                                    eta=self.eta, rho=self.rho)
+            else:
+                y = tmap(lambda yi, vi, xi, gi:
+                         (yi - self.eta * gi
+                          - self.rho * (vi + yi - 2.0 * xi)).astype(yi.dtype),
+                         y, v, x, gy)
+                v = _axpy(-self.eta, gv, v)
+            return (y, v), (loss_y, loss_v)
+
+        y0 = tmap(jnp.asarray, x)
+        (y, v), (ly, lv) = jax.lax.scan(step, (y0, cs["v"]), batches)
+        v_next = tmap(lambda vi, yi:
+                      ((1.0 - self.lam) * vi + self.lam * yi).astype(vi.dtype),
+                      v, y)
+        upload = tmap(jnp.subtract, y, x)
+        if self.upload_dtype:
+            dt = jnp.dtype(self.upload_dtype)
+            upload = tmap(lambda t: t.astype(dt), upload)
+        return ({"v": v_next}, upload,
+                {"local_loss": ly.mean(), "personal_loss": lv.mean()})
+
+
+def feddeper_star(base: FedDeper) -> FedDeper:
+    """FedDeper*: same strategy, run with tau/2 local steps to align compute
+    cost with single-model baselines (the caller halves the batch stack)."""
+    return base
+
+
+STRATEGIES = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "scaffold": Scaffold,
+    "feddeper": FedDeper,
+}

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    FedDataset,
+    heterogeneity_stats,
+    lm_client_batch,
+    make_federated_classification,
+)

@@ -1,0 +1,164 @@
+"""Seeded synthetic federated datasets (offline container: no downloads).
+
+Classification (MNIST/CIFAR-like): class-prototype Gaussians, learnable by
+MLP/CNN, federated by two non-i.i.d schemes:
+
+  * ``shards``    -- McMahan et al. 2017 pathological split: sort by label,
+                     deal each client ``shards_per_client`` label shards
+                     (the paper's "non-i.i.d splits as (McMahan...)").
+  * ``dirichlet`` -- per-client class mixture ~ Dir(alpha).
+
+Personal test splits (Fig. 7) mix each client's own label distribution
+with a fraction of common (global) samples, per the paper's setup.
+
+LM streams: per-client skewed Markov token sources for the datacenter
+regime (each mesh client group sees a different distribution -- the
+statistical heterogeneity the technique targets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FedDataset:
+    train: Dict[str, np.ndarray]          # per-client: x (n, Ni, ...), y (n, Ni)
+    test: Dict[str, np.ndarray]           # global:     x (Nt, ...),    y (Nt,)
+    personal_test: Dict[str, np.ndarray]  # per-client: x (n, Np, ...), y (n, Np)
+
+
+def _make_pool(rng, input_shape, num_classes, n_samples, noise=0.6,
+               sep=1.0):
+    """Gaussian class-prototype pool.  Returns x (N, *shape), y (N,)."""
+    protos = rng.normal(0, sep, size=(num_classes,) + tuple(input_shape))
+    y = rng.integers(0, num_classes, size=(n_samples,))
+    x = protos[y] + rng.normal(0, noise, size=(n_samples,) + tuple(input_shape))
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def _dirichlet_splits(rng, y, n_clients, alpha, per_client):
+    num_classes = int(y.max()) + 1
+    by_class = [np.flatnonzero(y == c) for c in range(num_classes)]
+    for idxs in by_class:
+        rng.shuffle(idxs)
+    ptr = [0] * num_classes
+    out = []
+    for i in range(n_clients):
+        mix = rng.dirichlet([alpha] * num_classes)
+        counts = rng.multinomial(per_client, mix)
+        sel = []
+        for c, k in enumerate(counts):
+            take = by_class[c][ptr[c]:ptr[c] + k]
+            # wrap around if a class pool is exhausted (resample)
+            if len(take) < k:
+                extra = rng.choice(by_class[c], k - len(take))
+                take = np.concatenate([take, extra])
+            ptr[c] += k
+            sel.append(take)
+        sel = np.concatenate(sel) if sel else np.zeros((0,), np.int64)
+        rng.shuffle(sel)
+        out.append(sel[:per_client])
+    return out
+
+
+def _shard_splits(rng, y, n_clients, shards_per_client, per_client):
+    order = np.argsort(y, kind="stable")
+    n_shards = n_clients * shards_per_client
+    shards = np.array_split(order, n_shards)
+    perm = rng.permutation(n_shards)
+    out = []
+    for i in range(n_clients):
+        sel = np.concatenate([shards[s] for s in
+                              perm[i * shards_per_client:
+                                   (i + 1) * shards_per_client]])
+        rng.shuffle(sel)
+        if len(sel) < per_client:
+            sel = np.concatenate([sel, rng.choice(sel, per_client - len(sel))])
+        out.append(sel[:per_client])
+    return out
+
+
+def make_federated_classification(
+        *, input_shape=(784,), num_classes=10, n_clients=10,
+        per_client=500, test_size=2000, personal_test=64,
+        split="shards", alpha=0.3, shards_per_client=2,
+        common_frac=0.25, noise=0.6, seed=0) -> FedDataset:
+    rng = np.random.default_rng(seed)
+    pool_n = n_clients * per_client * 2 + test_size
+    x, y = _make_pool(rng, input_shape, num_classes, pool_n, noise=noise)
+    xt, yt = x[:test_size], y[:test_size]
+    x, y = x[test_size:], y[test_size:]
+
+    if split == "dirichlet":
+        idxs = _dirichlet_splits(rng, y, n_clients, alpha, per_client)
+    else:
+        idxs = _shard_splits(rng, y, n_clients, shards_per_client, per_client)
+
+    train = {
+        "x": np.stack([x[i] for i in idxs]),
+        "y": np.stack([y[i] for i in idxs]),
+    }
+
+    # personal test: (1-common_frac) from the client's own label dist +
+    # common_frac common samples (paper: "a small number of common data")
+    n_own = int(personal_test * (1 - common_frac))
+    n_common = personal_test - n_own
+    # class prototypes estimated from the global test split (same Gaussians)
+    protos = np.stack([
+        xt[yt == c].mean(0) if (yt == c).any() else np.zeros(input_shape)
+        for c in range(num_classes)])
+    px, py = [], []
+    for i in range(n_clients):
+        own_y = rng.choice(train["y"][i], n_own)  # client's label dist
+        own_x = protos[own_y] + rng.normal(
+            0, noise, size=(n_own,) + tuple(input_shape))
+        com_sel = rng.integers(0, len(xt), n_common)
+        px.append(np.concatenate([own_x.astype(np.float32), xt[com_sel]]))
+        py.append(np.concatenate([own_y.astype(np.int32), yt[com_sel]]))
+
+    return FedDataset(
+        train=train,
+        test={"x": xt, "y": yt},
+        personal_test={"x": np.stack(px), "y": np.stack(py)},
+    )
+
+
+def heterogeneity_stats(ds: FedDataset) -> Dict[str, float]:
+    """Quantify label skew: mean TV distance between client label dists
+    and the global label dist (0 = iid)."""
+    y = ds.train["y"]
+    n_classes = int(y.max()) + 1
+    glob = np.bincount(y.reshape(-1), minlength=n_classes) / y.size
+    tv = []
+    for i in range(y.shape[0]):
+        ci = np.bincount(y[i], minlength=n_classes) / y[i].size
+        tv.append(0.5 * np.abs(ci - glob).sum())
+    return {"mean_tv": float(np.mean(tv)), "max_tv": float(np.max(tv))}
+
+
+# ---------------------------------------------------------------------------
+# LM token streams (datacenter regime)
+# ---------------------------------------------------------------------------
+
+def lm_client_batch(*, vocab: int, n_clients: int, client: int, round_k: int,
+                    tau: int, batch: int, seq_len: int, seed: int = 0,
+                    skew: float = 2.0):
+    """Deterministic per-(client, round) token batch with client-skewed
+    unigram distributions (Zipf with client-specific permutation).
+
+    Returns dict(tokens (tau, b, S), labels (tau, b, S)) as numpy."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, client, round_k]))
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    base = 1.0 / ranks ** 1.1
+    perm_rng = np.random.default_rng(np.random.SeedSequence([seed, client]))
+    perm = perm_rng.permutation(vocab)
+    probs = base[perm]  # client-specific head of the distribution
+    probs = probs ** skew
+    probs /= probs.sum()
+    toks = rng.choice(vocab, size=(tau, batch, seq_len + 1), p=probs)
+    return {"tokens": toks[..., :-1].astype(np.int32),
+            "labels": toks[..., 1:].astype(np.int32)}

@@ -1,0 +1,51 @@
+"""Fused FedDeper alternating update as a Pallas TPU kernel.
+
+The paper's local step (Alg. 1 lines 7-8) touches five same-shaped arrays
+(y, v, x, gy, gv) and writes two.  Executed as separate XLA ops the update
+phase costs ~10 HBM array passes; fused it is exactly 5 reads + 2 writes.
+For the datacenter regime (72B-scale client models) the update phase is
+purely memory-bound, so pass count == wall time.
+
+Tiling: inputs are flattened and padded to (rows, 1024) -- 8x128 VPU lanes
+-- and blocked over rows; all five operands stream through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024  # 8 sublanes x 128 lanes
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _kernel(eta, rho, y_ref, v_ref, x_ref, gy_ref, gv_ref, yo_ref, vo_ref):
+    y = y_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    gy = gy_ref[...].astype(jnp.float32)
+    gv = gv_ref[...].astype(jnp.float32)
+    yo_ref[...] = (y - eta * gy - rho * (v + y - 2.0 * x)).astype(
+        yo_ref.dtype)
+    vo_ref[...] = (v - eta * gv).astype(vo_ref.dtype)
+
+
+def deper_update_2d(y, v, x, gy, gv, *, eta: float, rho: float,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = False):
+    """All operands (R, LANES); returns (y', v')."""
+    R, L = y.shape
+    assert L == LANES and R % block_rows == 0, (y.shape, block_rows)
+    grid = (R // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, eta, rho),
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(y.shape, y.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        interpret=interpret,
+    )(y, v, x, gy, gv)

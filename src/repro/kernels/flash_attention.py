@@ -1,0 +1,119 @@
+"""Blocked online-softmax (flash) attention as a Pallas TPU kernel.
+
+Grid (B*H, num_q_blocks, num_kv_blocks) iterated sequentially on TPU;
+running max / sum / accumulator live in VMEM scratch across the kv
+dimension (the "revisiting" pattern).  GQA is handled in the index maps:
+query head h reads kv head h // G -- no materialized broadcast of K/V.
+Causal + sliding-window masking is positional; fully-masked blocks are
+skipped with ``pl.when`` (halves the FLOPs of causal attention).
+
+MXU alignment: q/k/v blocks are (block_q|block_kv, head_dim) with
+head_dim padded to a multiple of 128 by the wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(scale, causal, window, cap, block_q, block_kv, nk,
+            q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask  # zero fully-masked rows exactly
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+
+    if causal or window is not None:
+        # skip blocks that are fully masked
+        live = jnp.asarray(True)
+        if causal:
+            live &= k_start <= q_start + block_q - 1
+        if window is not None:
+            live &= (q_start - (k_start + block_kv - 1)) < window
+        pl.when(live)(compute)
+    else:
+        compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True,
+                         window: Optional[int] = None,
+                         cap: Optional[float] = None,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = False):
+    """q: (B*H, S, D), k/v: (B*K, S, D) -- head-major layout.
+
+    The wrapper in ops.py handles (B,S,H,D) <-> head-major reshapes and
+    head-dim padding."""
+    BH, Sq, D = q.shape
+    BK, Sk, _ = k.shape
+    G = BH // BK  # query heads per kv head (within a batch row group)
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    assert Sq % block_q == 0 and Sk % block_kv == 0
+    nq, nk = Sq // block_q, Sk // block_kv
+    scale = D ** -0.5
+
+    kernel = functools.partial(_kernel, scale, causal, window, cap,
+                               block_q, block_kv, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda h, i, j: (h // G, j, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda h, i, j: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Grouped matmul (MoE expert compute) as a Pallas TPU kernel.
+
+``(E, T, d) x (E, d, f) -> (E, T, f)`` -- one matmul per expert over its
+capacity buffer.  This is MegaBlocks' grouped GEMM rethought for the MXU:
+grid (E, T/bt, f/bf, d/bd) with a float32 VMEM accumulator carried across
+the contraction dimension (sequential innermost grid axis), 128-aligned
+blocks feeding the 128x128 systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(nd, x_ref, w_ref, o_ref, acc_ref):
+    kd = pl.program_id(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kd == nd - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick(n, target):
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def gmm_pallas(x, w, *, block_t: int = 256, block_f: int = 256,
+               block_d: int = 512, interpret: bool = False):
+    """x: (E, T, d), w: (E, d, f) -> (E, T, f)."""
+    E, T, d = x.shape
+    _, _, f = w.shape
+    bt, bf, bd = _pick(T, block_t), _pick(f, block_f), _pick(d, block_d)
+    grid = (E, T // bt, f // bf, d // bd)
+    kernel = functools.partial(_kernel, d // bd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, T, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,102 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute in
+``interpret=True`` mode -- the kernel body runs step-by-step in Python/XLA
+for correctness validation; on TPU they compile natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import deper_update as _deper
+from repro.kernels import flash_attention as _flash
+from repro.kernels import gmm as _gmm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# deper_update over pytrees
+# ---------------------------------------------------------------------------
+
+def _leaf_update(y, v, x, gy, gv, *, eta, rho):
+    shape, dtype = y.shape, y.dtype
+    n = y.size
+    L = _deper.LANES
+    rows = max(1, -(-n // L))
+    # pick a row block that divides the padded row count
+    block = _gmm._pick(rows, _deper.DEFAULT_BLOCK_ROWS)
+
+    def prep(t):
+        t = t.reshape(-1).astype(jnp.float32)
+        return jnp.pad(t, (0, rows * L - n)).reshape(rows, L)
+
+    y2, v2 = _deper.deper_update_2d(
+        prep(y), prep(v), prep(x), prep(gy), prep(gv), eta=eta, rho=rho,
+        block_rows=block, interpret=_interpret())
+    return (y2.reshape(-1)[:n].reshape(shape).astype(dtype),
+            v2.reshape(-1)[:n].reshape(shape).astype(dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "rho"))
+def deper_update(y, v, x, gy, gv, *, eta: float, rho: float):
+    """Fused FedDeper update over parameter pytrees.  Returns (y', v')."""
+    flat_y, treedef = jax.tree.flatten(y)
+    flat = [
+        _leaf_update(yl, vl, xl, gyl, gvl, eta=eta, rho=rho)
+        for yl, vl, xl, gyl, gvl in zip(
+            flat_y, jax.tree.leaves(v), jax.tree.leaves(x),
+            jax.tree.leaves(gy), jax.tree.leaves(gv))
+    ]
+    y_new = jax.tree.unflatten(treedef, [f[0] for f in flat])
+    v_new = jax.tree.unflatten(treedef, [f[1] for f in flat])
+    return y_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "cap", "block_q",
+                                    "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    cap: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128):
+    """q: (B,S,H,D), k/v: (B,S,K,D) -> (B,S,H,D).  Pads D to 128."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    Dp = -(-D // 128) * 128
+    pad = [(0, 0)] * 3 + [(0, Dp - D)]
+    qp = jnp.pad(q, pad) if Dp != D else q
+    kp = jnp.pad(k, pad) if Dp != D else k
+    vp = jnp.pad(v, pad) if Dp != D else v
+    # head-major: (B*H, S, D)
+    qh = qp.transpose(0, 2, 1, 3).reshape(B * H, S, Dp)
+    kh = kp.transpose(0, 2, 1, 3).reshape(B * K, S, Dp)
+    vh = vp.transpose(0, 2, 1, 3).reshape(B * K, S, Dp)
+    # scale uses the *unpadded* head dim
+    scale_fix = (Dp / D) ** 0.5  # kernel scales by Dp^-0.5; correct to D^-0.5
+    qh = qh * scale_fix
+    out = _flash.flash_attention_bhsd(
+        qh, kh, vh, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_kv=block_kv, interpret=_interpret())
+    out = out.reshape(B, H, S, Dp).transpose(0, 2, 1, 3)
+    return out[..., :D]
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def gmm(x, w):
+    """Grouped matmul (E,T,d)x(E,d,f)->(E,T,f) via the Pallas kernel."""
+    return _gmm.gmm_pallas(x, w, interpret=_interpret())

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def deper_update_ref(y, v, x, gy, gv, *, eta: float, rho: float):
+    """FedDeper alternating update (Alg. 1 lines 7-8), one array:
+
+        y' = y - eta*gy - rho*(v + y - 2x)
+        v' = v - eta*gv
+    """
+    y_new = y - eta * gy - rho * (v + y - 2.0 * x)
+    v_new = v - eta * gv
+    return y_new.astype(y.dtype), v_new.astype(v.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None):
+    """q: (B,S,H,D), k/v: (B,S,K,D), H = K*G.  Materializing oracle."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, D)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qf, k.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window is not None:
+        mask &= (idx[:, None] - idx[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bjkd->bkgqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
+
+
+def gmm_ref(x, w):
+    """Grouped matmul: (E, T, d) x (E, d, f) -> (E, T, f)."""
+    return jnp.einsum("etd,edf->etf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

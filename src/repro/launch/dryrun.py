@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh).
+
+The two lines above MUST stay the first statements: jax locks the device
+count on first init, and the dry-run needs 512 host placeholder devices to
+build the production meshes.  (Tests/benchmarks never import this module.)
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out experiments/dryrun.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import corrections, hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_step_spec
+from repro.models import transformer
+
+
+def analytic_bytes_for(cfg, spec_kind: str, meta: dict, variant: str,
+                       tau: int, chips: int, shape) -> float:
+    """First-principles per-device HBM traffic (bf16).  XLA's
+    'bytes accessed' counts every operand of every op (no fusion), so it
+    overestimates; this analytic floor counts weight passes, activation
+    fwd/bwd traffic and cache reads -- the roofline narrative reports both.
+    """
+    n = transformer.active_param_count(cfg)
+    model_shard = 16  # model axis size on both meshes
+    p_loc = 2.0 * n / model_shard  # bf16 param bytes per device
+    d, L = cfg.d_model, cfg.num_layers
+    if spec_kind == "train":
+        tokens_loc = meta.get("tokens_per_round",
+                              meta.get("tokens_per_step", 0)) / chips
+        streams = 2 if variant == "feddeper" else 1
+        weight_passes = 3 * streams * (tau if variant == "feddeper" else 1) \
+            + 4 * streams
+        act = tokens_loc * L * d * 16 * 2 * streams  # fwd store + bwd read
+        return weight_passes * p_loc + act
+    if spec_kind == "prefill":
+        tokens_loc = meta["batch"] * meta["seq"] / chips
+        return p_loc + tokens_loc * L * d * 8 * 2
+    # decode: weights once + full cache read
+    kv = (cfg.kv_lora_rank + cfg.qk_rope_dim) if cfg.use_mla else \
+        2 * cfg.num_kv_heads * cfg.resolved_head_dim
+    n_attn = sum(1 for s in (list(cfg.prefix)
+                             + list(cfg.pattern) * cfg.num_repeats)
+                 if s.kind == "attn")
+    cache = meta["batch"] * meta["cache_len"] * kv * 2.0 * n_attn / chips
+    return p_loc + cache
+
+
+def model_flops_for(cfg, spec_kind: str, meta: dict, variant: str) -> float:
+    """MODEL_FLOPS: 6*N_active*D train / 2*N_active*D inference (global)."""
+    n_active = transformer.active_param_count(cfg)
+    if spec_kind == "train":
+        tokens = meta.get("tokens_per_round", meta.get("tokens_per_step", 0))
+        passes = 2.0 if variant == "feddeper" else 1.0  # y and v grads
+        return 6.0 * n_active * tokens * passes
+    if spec_kind == "prefill":
+        return 2.0 * n_active * meta["batch"] * meta["seq"]
+    return 2.0 * n_active * meta["batch"]  # decode: one token per row
+
+
+def _compile_and_measure(spec, mesh):
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(spec.fn,
+                          in_shardings=spec.in_shardings).lower(*spec.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, (list, tuple)) \
+            else cost_list
+        flops = hlo_analysis.cost_entry(cost, "flops")
+        byts = hlo_analysis.cost_entry(cost, "bytes accessed")
+        colls = hlo_analysis.parse_collectives(compiled.as_text())
+        mem = hlo_analysis.memory_summary(compiled)
+    return {"flops": flops, "bytes": byts, "coll": colls.total_bytes,
+            "coll_counts": colls.counts, "coll_by_op": colls.bytes_by_op,
+            "mem": mem, "lower_s": t_lower, "compile_s": t_compile}
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool,
+            variant: str = "feddeper", tau: int = 4, remat: bool = False,
+            chunkwise: bool = True, dtype=jnp.bfloat16,
+            unroll_layers: bool = True, param_fsdp: bool = False,
+            seq_shard_decode: bool = False, upload_dtype: str = "",
+            tag: str = "") -> dict:
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if shape not in cfg.shapes():
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "full-attention arch: long_500k documented skip"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    unroll = True if unroll_layers else 1
+    kind = INPUT_SHAPES[shape].mode
+    common = dict(variant=variant, remat=remat, chunkwise=chunkwise,
+                  dtype=dtype, unroll=unroll, param_fsdp=param_fsdp,
+                  seq_shard_decode=seq_shard_decode)
+    if upload_dtype and kind == "train" and variant != "sync":
+        from repro.core import FedDeper
+        common["strategy"] = FedDeper(eta=1e-2, rho=1e-3, lam=0.5,
+                                      upload_dtype=upload_dtype)
+
+    if kind == "train" and variant != "sync":
+        # The tau (local-step) scan stays rolled for compile speed, so the
+        # HLO cost model counts its body ONCE.  Reconstruct the true round
+        # cost from two compiles: the full round (= agg + 1 body) and the
+        # aggregation alone (tiny, elementwise).  Then
+        #     round(tau) = agg + tau * (full - agg).
+        # The per-round (non-scanned) client ops (mixing, upload) get
+        # multiplied too -- a documented ~1/tau-param-pass overcount.
+        spec = make_step_spec(cfg, shape, mesh, tau=tau, **common)
+        m_full = _compile_and_measure(spec, mesh)
+
+        from repro.core import FedDeper
+        strat = common.get("strategy") or FedDeper(eta=1e-2, rho=1e-3,
+                                                   lam=0.5)
+        x_sh, ss_sh, cs_sh, _ = spec.in_shardings
+        x_arg, ss_arg, cs_arg, _ = spec.args
+        up_dt = jnp.dtype(strat.upload_dtype) \
+            if getattr(strat, "upload_dtype", "") else None
+        uploads = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, up_dt or l.dtype),
+            cs_arg["v"])  # (C, ...) shaped
+
+        def agg_only(x, ss, up):
+            new_x, new_ss, _ = strat.aggregate(x, ss, up, p=1.0)
+            return new_x, new_ss
+
+        agg_spec = type(spec)(
+            kind="train", args=(x_arg, ss_arg, uploads),
+            in_shardings=(x_sh, ss_sh, cs_sh["v"]), fn=agg_only, meta={})
+        m_agg = _compile_and_measure(agg_spec, mesh)
+        synth = {k: m_agg[k] + tau * max(0.0, m_full[k] - m_agg[k])
+                 for k in ("flops", "bytes", "coll")}
+        meta = dict(spec.meta)
+        measured = {**synth,
+                    "coll_counts": m_full["coll_counts"],
+                    "coll_by_op": m_full["coll_by_op"],
+                    "mem": m_full["mem"],
+                    "lower_s": m_full["lower_s"] + m_agg["lower_s"],
+                    "compile_s": m_full["compile_s"] + m_agg["compile_s"]}
+        spec_kind = "train"
+    else:
+        spec = make_step_spec(cfg, shape, mesh, tau=tau, **common)
+        measured = _compile_and_measure(spec, mesh)
+        meta = spec.meta
+        spec_kind = spec.kind
+
+    ishape = INPUT_SHAPES[shape]
+    if spec_kind == "train":
+        if variant == "sync":
+            corr_B, corr_tau = ishape.global_batch, 1
+        else:
+            corr_B = meta["clients"] * meta["b_local"]
+            corr_tau = tau
+        corr = corrections.correction_for(
+            cfg, spec_kind, B=corr_B, S=ishape.seq_len, variant=variant,
+            tau=corr_tau, chips=chips)
+    elif spec_kind == "prefill":
+        corr = corrections.correction_for(
+            cfg, spec_kind, B=ishape.global_batch, S=ishape.seq_len,
+            chips=chips)
+    else:
+        corr = corrections.Correction()
+    flops = measured["flops"] + corr.flops
+    byts = measured["bytes"] + corr.bytes
+    coll = measured["coll"]
+    mflops = model_flops_for(cfg, spec_kind, meta, variant)
+    abytes = analytic_bytes_for(cfg, spec_kind, meta, variant, tau, chips,
+                                shape)
+    compute_s = flops / hlo_analysis.PEAK_FLOPS
+    memory_s = byts / hlo_analysis.HBM_BW
+    coll_s = coll / hlo_analysis.ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "variant": variant, "kind": spec_kind, "status": "ok",
+        "tag": tag, "param_fsdp": param_fsdp,
+        "seq_shard_decode": seq_shard_decode,
+        "unroll_layers": unroll_layers,
+        "chips": chips, "tau": tau, "remat": remat,
+        "lower_s": round(measured["lower_s"], 1),
+        "compile_s": round(measured["compile_s"], 1),
+        "memory": measured["mem"], "meta": meta,
+        "params": transformer.param_count(cfg),
+        "active_params": transformer.active_param_count(cfg),
+        "flops_per_device": flops,
+        "hlo_flops_raw": measured["flops"],
+        "scan_correction_flops": corr.flops,
+        "bytes_per_device": byts,
+        "analytic_bytes_per_device": abytes,
+        "analytic_memory_s": abytes / hlo_analysis.HBM_BW,
+        "collective_bytes_per_device": coll,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / (flops * chips)) if flops else 0.0,
+        "collective_counts": measured["coll_counts"],
+        "collective_bytes_by_op": measured["coll_by_op"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="train_4k",
+                    help="input shape or 'all'")
+    ap.add_argument("--mesh", default="pod1",
+                    choices=["pod1", "pod2", "both"])
+    ap.add_argument("--variant", default="feddeper",
+                    choices=["feddeper", "sync"])
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--no-chunkwise", action="store_true",
+                    help="xLSTM: recurrent instead of chunkwise mLSTM")
+    ap.add_argument("--serve-fsdp", action="store_true",
+                    help="shard serve params over the data axes too")
+    ap.add_argument("--seq-decode", action="store_true",
+                    help="shard_map flash-decode over seq-sharded caches")
+    ap.add_argument("--upload-dtype", default="",
+                    help="FedDeper delta upload dtype (e.g. float8_e4m3fn)")
+    ap.add_argument("--rolled", action="store_true",
+                    help="keep the layer scan rolled (fast compile; "
+                         "HLO flops undercount layers -- use model_flops)")
+    ap.add_argument("--tag", default="", help="label for perf iterations")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    archs = list(ALL_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod1": [False], "pod2": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_one(arch, shape, multi_pod=mp,
+                                  variant=args.variant, tau=args.tau,
+                                  remat=args.remat,
+                                  chunkwise=not args.no_chunkwise,
+                                  param_fsdp=args.serve_fsdp,
+                                  seq_shard_decode=args.seq_decode,
+                                  upload_dtype=args.upload_dtype,
+                                  unroll_layers=not args.rolled,
+                                  tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc(limit=8)}
+                    failures += 1
+                line = json.dumps(rec)
+                print(line, flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Mesh construction for the production dry-run target.
+
+TPU v5e: 16x16 = 256 chips per pod; multi-pod = 2 pods = 512 chips.
+Functions, not module constants -- importing this module never touches jax
+device state (device count is locked on first jax init)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+
+def _auto(n):
+    from jax.sharding import AxisType
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_smoke_mesh():
+    """1-device mesh with production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+@dataclass(frozen=True)
+class MeshRoles:
+    """Which mesh axes play which FL/parallelism role."""
+    client: str            # FL client axis (cross-client sync axis)
+    model: str             # tensor/expert-parallel axis
+    fsdp: Optional[str]    # intra-client param sharding axis (multi-pod)
+    dp: Tuple[str, ...]    # data-parallel axes for serving batch dims
+
+
+def mesh_roles(mesh) -> MeshRoles:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshRoles(client="pod", model="model", fsdp="data",
+                         dp=("pod", "data"))
+    return MeshRoles(client="data", model="model", fsdp=None, dp=("data",))
+
+
+def num_clients(mesh) -> int:
+    roles = mesh_roles(mesh)
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[roles.client]

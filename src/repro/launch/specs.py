@@ -1,0 +1,210 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape x mesh).
+
+No device allocation happens here: params/caches come from jax.eval_shape
+over the real init functions, so the dry-run lowers exactly the structures
+the runtime would use.  Modality frontends ([audio]/[vlm] carve-out) appear
+as embedding inputs of the right shape."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ArchConfig
+from repro.launch.mesh import MeshRoles, mesh_roles
+from repro.models import transformer
+from repro.sharding import rules
+
+Pytree = Any
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+@dataclass
+class StepSpec:
+    """Everything jit needs: arg structs + in/out shardings + callable."""
+    kind: str                      # 'train' | 'prefill' | 'decode'
+    args: tuple                    # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple
+    fn: Any                        # the step callable to jit
+    meta: Dict[str, Any]
+
+
+def _frontend_spec(cfg, lead_dims, dtype):
+    return sds((*lead_dims, cfg.frontend_tokens, cfg.d_model), dtype)
+
+
+def _batch_struct(cfg, lead_dims, seq, dtype):
+    b: Dict[str, Any] = {
+        "tokens": sds((*lead_dims, seq), jnp.int32),
+        "labels": sds((*lead_dims, seq), jnp.int32),
+    }
+    if cfg.frontend is not None:
+        b["frontend"] = _frontend_spec(cfg, lead_dims, dtype)
+    return b
+
+
+def _replicate(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def make_train_spec(cfg: ArchConfig, shape_name: str, mesh, *,
+                    strategy=None, tau: int = 4, dtype=jnp.bfloat16,
+                    remat: bool = False, chunkwise: bool = True,
+                    unroll=1, b_local: int = 0) -> StepSpec:
+    """One FedDeper round step (the paper's technique) on the mesh.
+
+    ``tau`` is the number of scanned local steps actually LOWERED;
+    ``b_local`` (per-client per-step microbatch) may be pinned so two
+    lowerings with different tau have identical scan bodies (the dry-run
+    differencing trick)."""
+    from repro.core import FedDeper, make_round_step
+    ishape = INPUT_SHAPES[shape_name]
+    roles = mesh_roles(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    C = sizes[roles.client]
+    strategy = strategy or FedDeper(eta=1e-2, rho=1e-3, lam=0.5)
+    b_local = b_local or max(1, ishape.global_batch // (C * tau))
+
+    params = transformer.param_shapes(cfg, dtype)
+    x_shard = rules.param_specs(params, mesh, model=roles.model,
+                                fsdp=roles.fsdp)
+    client_state = jax.eval_shape(
+        lambda p: jax.tree.map(
+            lambda l: jnp.zeros((C,) + l.shape, l.dtype),
+            strategy.client_init(p)), params)
+    cs_shard = rules.param_specs(client_state, mesh, model=roles.model,
+                                 fsdp=roles.fsdp, client=roles.client)
+    server_state = jax.eval_shape(strategy.server_init, params)
+    ss_shard = rules.param_specs(server_state, mesh, model=roles.model,
+                                 fsdp=roles.fsdp)
+
+    batch = _batch_struct(cfg, (C, tau, b_local), ishape.seq_len, dtype)
+    bspec = rules.train_batch_spec(mesh, client=roles.client,
+                                   fsdp=roles.fsdp)
+    b_shard = jax.tree.map(
+        lambda l: NamedSharding(mesh, bspec(len(l.shape))), batch)
+
+    fn = make_round_step(cfg, strategy, chunkwise=chunkwise, remat=remat,
+                         unroll=unroll)
+    return StepSpec(
+        kind="train",
+        args=(params, server_state, client_state, batch),
+        in_shardings=(x_shard, ss_shard, cs_shard, b_shard),
+        fn=fn,
+        meta={"clients": C, "tau": tau, "b_local": b_local,
+              "tokens_per_round": C * tau * b_local * ishape.seq_len},
+    )
+
+
+def make_sync_spec(cfg: ArchConfig, shape_name: str, mesh, *,
+                   dtype=jnp.bfloat16, remat: bool = False,
+                   chunkwise: bool = True, unroll=1) -> StepSpec:
+    """Synchronous data-parallel SGD baseline (= FedAvg tau=1)."""
+    from repro.core import make_sync_train_step
+    ishape = INPUT_SHAPES[shape_name]
+    roles = mesh_roles(mesh)
+    params = transformer.param_shapes(cfg, dtype)
+    x_shard = rules.param_specs(params, mesh, model=roles.model,
+                                fsdp=roles.fsdp)
+    batch = _batch_struct(cfg, (ishape.global_batch,), ishape.seq_len, dtype)
+    b_shard = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(roles.dp, *([None] *
+                                                    (len(l.shape) - 1)))),
+        batch)
+    fn = make_sync_train_step(cfg, chunkwise=chunkwise, remat=remat,
+                              unroll=unroll)
+    return StepSpec(kind="train", args=(params, batch),
+                    in_shardings=(x_shard, b_shard), fn=fn,
+                    meta={"tokens_per_step":
+                          ishape.global_batch * ishape.seq_len})
+
+
+def make_serve_spec(cfg: ArchConfig, shape_name: str, mesh, *,
+                    dtype=jnp.bfloat16, chunkwise: bool = True,
+                    unroll=1, param_fsdp: bool = False,
+                    seq_shard_decode: bool = False) -> StepSpec:
+    """prefill_32k lowers prefill; decode shapes lower one serve_step
+    (one new token against a seq_len-deep cache).
+
+    ``param_fsdp``: additionally shard serve params over the data axes
+    (ZeRO-style) -- required for >100B archs to fit HBM at serve time."""
+    from repro.core import make_decode_step, make_prefill_step
+    ishape = INPUT_SHAPES[shape_name]
+    roles = mesh_roles(mesh)
+    B, S = ishape.global_batch, ishape.seq_len
+    params = transformer.param_shapes(cfg, dtype)
+    fsdp = (roles.fsdp or "data") if param_fsdp else roles.fsdp
+    x_shard = rules.param_specs(params, mesh, model=roles.model,
+                                fsdp=fsdp)
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, dtype))
+    c_shard = rules.cache_specs(cache, mesh, model=roles.model,
+                                dp=roles.dp, prefer_seq=seq_shard_decode)
+
+    if ishape.mode == "prefill":
+        # the context budget includes the VLM patch prefix: text tokens
+        # fill the rest of the window
+        text_len = S - (cfg.frontend_tokens
+                        if (cfg.frontend and not cfg.is_encdec) else 0)
+        batch = {"tokens": sds((B, text_len), jnp.int32)}
+        if cfg.frontend is not None:
+            batch["frontend"] = _frontend_spec(cfg, (B,), dtype)
+        dp = roles.dp
+        b_shard = jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, P(dp if l.shape[0] % _n(mesh, dp) == 0 else None,
+                        *([None] * (len(l.shape) - 1)))), batch)
+        fn = make_prefill_step(cfg, chunkwise=chunkwise, unroll=unroll)
+        return StepSpec(kind="prefill", args=(params, batch, cache),
+                        in_shardings=(x_shard, b_shard, c_shard), fn=fn,
+                        meta={"batch": B, "seq": S})
+
+    tokens = sds((B, 1), jnp.int32)
+    dp_ok = B % _n(mesh, roles.dp) == 0
+    t_shard = NamedSharding(
+        mesh, P(roles.dp if dp_ok else None, None))
+    pos = sds((), jnp.int32)
+    seq_shard = None
+    if seq_shard_decode:
+        seq_shard = {"axis": roles.model,
+                     "dp": roles.dp if dp_ok else (), "mesh": mesh}
+    fn = make_decode_step(cfg, chunkwise=chunkwise, unroll=unroll,
+                          seq_shard=seq_shard)
+    return StepSpec(kind="decode", args=(params, cache, tokens, pos),
+                    in_shardings=(x_shard, c_shard, t_shard,
+                                  NamedSharding(mesh, P())),
+                    fn=fn, meta={"batch": B, "cache_len": S})
+
+
+def _n(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(math.prod(sizes[a] for a in axes))
+
+
+def make_step_spec(cfg, shape_name, mesh, *, variant: str = "feddeper",
+                   tau: int = 4, remat: bool = False,
+                   dtype=jnp.bfloat16, chunkwise: bool = True,
+                   strategy=None, unroll=1, b_local: int = 0,
+                   param_fsdp: bool = False,
+                   seq_shard_decode: bool = False) -> StepSpec:
+    mode = INPUT_SHAPES[shape_name].mode
+    if mode == "train":
+        if variant == "sync":
+            return make_sync_spec(cfg, shape_name, mesh, dtype=dtype,
+                                  remat=remat, chunkwise=chunkwise,
+                                  unroll=unroll)
+        return make_train_spec(cfg, shape_name, mesh, strategy=strategy,
+                               tau=tau, dtype=dtype, remat=remat,
+                               chunkwise=chunkwise, unroll=unroll,
+                               b_local=b_local)
+    return make_serve_spec(cfg, shape_name, mesh, dtype=dtype,
+                           chunkwise=chunkwise, unroll=unroll,
+                           param_fsdp=param_fsdp,
+                           seq_shard_decode=seq_shard_decode)

@@ -1,0 +1,107 @@
+"""Datacenter-regime training driver (runs the real round loop).
+
+On the CPU container this runs reduced configs on a 1-device mesh with the
+same code path the production mesh uses (client axis, tau scan, delta-mean
+aggregation); on TPU hardware it runs unmodified with the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --clients 2 --tau 4 --rounds 20 --batch 2 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
+    save_checkpoint
+from repro.configs import get_config
+from repro.core import FedDeper, STRATEGIES, make_round_step
+from repro.data import lm_client_batch
+from repro.models import init_model, transformer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant (CPU)")
+    ap.add_argument("--strategy", default="feddeper",
+                    choices=sorted(STRATEGIES))
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2, help="per-client b")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eta", type=float, default=0.05)
+    ap.add_argument("--rho", type=float, default=0.01)
+    ap.add_argument("--lam", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    kw = dict(eta=args.eta)
+    if args.strategy == "feddeper":
+        kw.update(rho=args.rho, lam=args.lam)
+    strategy = STRATEGIES[args.strategy](**kw)
+
+    rng = jax.random.PRNGKey(args.seed)
+    x = init_model(cfg, rng)
+    C = args.clients
+    client_state = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (C,) + l.shape).copy(),
+        strategy.client_init(x))
+    server_state = strategy.server_init(x)
+    step = jax.jit(make_round_step(cfg, strategy))
+
+    start = 0
+    if args.ckpt_dir:
+        path = latest_checkpoint(args.ckpt_dir)
+        if path:
+            (x, client_state, server_state), meta = restore_checkpoint(
+                path, (x, client_state, server_state))
+            start = meta["step"]
+            print(f"restored round {start} from {path}")
+
+    def batch_for(round_k):
+        per = [lm_client_batch(vocab=cfg.vocab_size, n_clients=C, client=c,
+                               round_k=round_k, tau=args.tau,
+                               batch=args.batch, seq_len=args.seq,
+                               seed=args.seed)
+               for c in range(C)]
+        out = {}
+        for key in per[0]:
+            out[key] = jnp.asarray(np.stack([p[key] for p in per]))
+        if cfg.frontend is not None:
+            out["frontend"] = jnp.zeros(
+                (C, args.tau, args.batch, cfg.frontend_tokens, cfg.d_model),
+                jnp.float32)
+        return out
+
+    t0 = time.time()
+    for k in range(start, args.rounds):
+        x, server_state, client_state, metrics = step(
+            x, server_state, client_state, batch_for(k))
+        rec = {"round": k + 1,
+               **{m: float(v) for m, v in metrics.items()},
+               "elapsed_s": round(time.time() - t0, 2)}
+        print(json.dumps(rec), flush=True)
+        if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, k + 1,
+                            (x, client_state, server_state))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.rounds,
+                        (x, client_state, server_state))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,16 @@
+"""Model zoo: sequence models per ArchConfig + the paper's classifiers."""
+from repro.models.transformer import (  # noqa: F401
+    active_param_count,
+    decode_step,
+    init_cache,
+    init_model,
+    loss_fn,
+    param_count,
+    param_shapes,
+    prefill,
+)
+from repro.models.classifier import (  # noqa: F401
+    apply_classifier,
+    classifier_loss,
+    init_classifier,
+)

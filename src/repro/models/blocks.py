@@ -1,0 +1,150 @@
+"""One decoder/encoder layer = pre-norm mixer (+optional cross-attn) + FFN.
+
+``LayerSpec.kind`` selects the mixer (attn / mamba / mlstm / slstm),
+``LayerSpec.ffn`` selects dense FFN, MoE, or none (xLSTM blocks carry their
+own projections).  Gemma2-style ``post_norms`` adds norms after each
+sublayer output before the residual add.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import init_rmsnorm, rmsnorm
+
+
+class LayerAux(NamedTuple):
+    load_balance: jax.Array
+    router_z: jax.Array
+    dropped_frac: jax.Array
+
+
+def zero_aux() -> LayerAux:
+    return LayerAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+
+def init_layer(cfg, spec, rng, dtype, *, cross: bool = False):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    p: dict = {"ln1": init_rmsnorm(d, dtype)}
+    if spec.kind == "attn":
+        p["mixer"] = (attn.init_mla(cfg, ks[0], dtype) if cfg.use_mla
+                      else attn.init_gqa(cfg, ks[0], dtype))
+    elif spec.kind == "mamba":
+        p["mixer"] = ssm_mod.init_mamba(cfg, ks[0], dtype)
+    elif spec.kind == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(cfg, ks[0], dtype)
+    elif spec.kind == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(cfg, ks[0], dtype)
+    if cross:
+        p["ln_cross"] = init_rmsnorm(d, dtype)
+        p["cross"] = attn.init_gqa(cfg, ks[1], dtype, cross=True)
+    if spec.ffn == "dense":
+        p["ln2"] = init_rmsnorm(d, dtype)
+        p["ffn"] = ffn_mod.init_ffn(cfg, ks[2], dtype)
+    elif spec.ffn == "moe":
+        p["ln2"] = init_rmsnorm(d, dtype)
+        p["ffn"] = moe_mod.init_moe(cfg, ks[2], dtype)
+    if cfg.post_norms:
+        p["pn1"] = init_rmsnorm(d, dtype)
+        if spec.ffn != "none":
+            p["pn2"] = init_rmsnorm(d, dtype)
+    return p
+
+
+def layer_cache_spec(cfg, spec, batch: int, max_len: int, dtype,
+                     *, cross_len: int = 0):
+    c: dict = {}
+    if spec.kind == "attn":
+        c["mixer"] = (attn.mla_cache_spec(cfg, batch, max_len, dtype)
+                      if cfg.use_mla
+                      else attn.gqa_cache_spec(cfg, spec, batch, max_len,
+                                               dtype))
+    elif spec.kind == "mamba":
+        c["mixer"] = ssm_mod.mamba_cache_spec(cfg, batch, dtype)
+    elif spec.kind == "mlstm":
+        c["mixer"] = xlstm_mod.mlstm_cache_spec(cfg, batch, dtype)
+    elif spec.kind == "slstm":
+        c["mixer"] = xlstm_mod.slstm_cache_spec(cfg, batch, dtype)
+    if cross_len:
+        K, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        z = jnp.zeros((batch, cross_len, K, Dh), dtype)
+        c["cross"] = (z, z)
+    return c
+
+
+def apply_layer(cfg, spec, params, x, *, positions, mode, cache=None,
+                pos=None, memory=None, chunkwise: bool = True,
+                use_pallas: bool = False, causal: bool = True,
+                seq_shard=None):
+    """Returns (x, new_cache, LayerAux)."""
+    eps = cfg.norm_eps
+    new_cache: dict = {}
+    aux = zero_aux()
+
+    h = rmsnorm(params["ln1"], x, eps)
+    mixer_cache = None if cache is None else cache.get("mixer")
+    if spec.kind == "attn":
+        if cfg.use_mla:
+            h, mc = attn.apply_mla(cfg, spec, params["mixer"], h,
+                                   positions=positions, mode=mode,
+                                   cache=mixer_cache, pos=pos,
+                                   seq_shard=seq_shard)
+        else:
+            h, mc = attn.apply_gqa(cfg, spec, params["mixer"], h,
+                                   positions=positions, mode=mode,
+                                   cache=mixer_cache, pos=pos, causal=causal,
+                                   seq_shard=seq_shard)
+    elif spec.kind == "mamba":
+        h, mc = ssm_mod.apply_mamba(cfg, params["mixer"], h, mode=mode,
+                                    cache=mixer_cache)
+    elif spec.kind == "mlstm":
+        h, mc = xlstm_mod.apply_mlstm(cfg, params["mixer"], h, mode=mode,
+                                      cache=mixer_cache, chunkwise=chunkwise)
+    elif spec.kind == "slstm":
+        h, mc = xlstm_mod.apply_slstm(cfg, params["mixer"], h, mode=mode,
+                                      cache=mixer_cache)
+    else:  # pragma: no cover
+        raise ValueError(spec.kind)
+    if cfg.post_norms:
+        h = rmsnorm(params["pn1"], h, eps)
+    x = x + h
+    if mc is not None:
+        new_cache["mixer"] = mc
+    elif cache is not None and "mixer" in cache:
+        new_cache["mixer"] = cache["mixer"]
+
+    if "cross" in params:
+        h = rmsnorm(params["ln_cross"], x, eps)
+        mem_kv = None if cache is None else cache.get("cross")
+        if mode == "decode":
+            h, kv = attn.apply_cross_attention(cfg, params["cross"], h, None,
+                                               mem_cache=mem_kv)
+        else:
+            h, kv = attn.apply_cross_attention(cfg, params["cross"], h,
+                                               memory)
+        x = x + h
+        if mode in ("prefill", "decode"):
+            new_cache["cross"] = kv
+
+    if spec.ffn != "none":
+        h = rmsnorm(params["ln2"], x, eps)
+        if spec.ffn == "dense":
+            h = ffn_mod.apply_ffn(cfg, params["ffn"], h)
+        else:
+            h, moe_aux = moe_mod.apply_moe(
+                cfg, params["ffn"], h, use_pallas_gmm=use_pallas,
+                shardmap_ok=(mode != "train"))
+            aux = LayerAux(*[jnp.asarray(a, jnp.float32) for a in moe_aux])
+        if cfg.post_norms:
+            h = rmsnorm(params["pn2"], h, eps)
+        x = x + h
+
+    return x, (new_cache or None), aux

@@ -1,0 +1,69 @@
+"""The paper's own ML models: MLP and CNN classifiers (pure JAX).
+
+Used by the simulation regime to reproduce Figs. 1, 3-7 and Table 1 on
+synthetic non-i.i.d splits.  CNNs follow the paper's architecture section:
+conv stacks (3x3 or 5x5, stride 1, same padding, 2x2 maxpool after each)
+followed by fully-connected layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cross_entropy, dense_init
+
+
+def init_classifier(cfg, rng, dtype=jnp.float32):
+    ks = iter(jax.random.split(rng, 16))
+    params = {}
+    if cfg.kind == "cnn":
+        h, w, c_in = cfg.input_shape
+        convs = []
+        for c_out in cfg.conv_channels:
+            k = cfg.kernel_size
+            w_conv = dense_init(next(ks), k * k * c_in, c_out, dtype,
+                                shape=(k, k, c_in, c_out))
+            convs.append({"w": w_conv, "b": jnp.zeros((c_out,), dtype)})
+            c_in = c_out
+            h, w = h // 2, w // 2  # 2x2 maxpool
+        params["convs"] = convs
+        flat = h * w * c_in
+    else:
+        (flat,) = cfg.input_shape
+    dims = [flat, *cfg.hidden, cfg.num_classes]
+    params["dense"] = [
+        {"w": dense_init(next(ks), i, o, dtype), "b": jnp.zeros((o,), dtype)}
+        for i, o in zip(dims[:-1], dims[1:])
+    ]
+    return params
+
+
+def apply_classifier(cfg, params, x):
+    """x: (B, *input_shape) -> logits (B, num_classes)."""
+    B = x.shape[0]
+    if cfg.kind == "cnn":
+        x = x.reshape(B, *cfg.input_shape)
+        for conv in params["convs"]:
+            x = jax.lax.conv_general_dilated(
+                x, conv["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + conv["b"]
+            x = jax.nn.relu(x)
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    x = x.reshape(B, -1)
+    for i, layer in enumerate(params["dense"]):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params["dense"]):
+            x = jax.nn.relu(x)
+    return x
+
+
+def classifier_loss(cfg, params, batch):
+    """batch: x (B, ...), y (B,) int.  Returns (loss, metrics)."""
+    logits = apply_classifier(cfg, params, batch["x"])
+    loss = cross_entropy(logits, batch["y"])
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,104 @@
+"""Shared primitive layers: norms, RoPE, activations, initializers.
+
+All models are pure-function pytrees: ``init_*`` builds a nested dict of
+jnp arrays, ``apply``-style functions are stateless.  Initializers use
+truncated-normal with 1/sqrt(fan_in) scale.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, fan_in: int, fan_out: int, dtype=jnp.float32, *,
+               shape=None):
+    """Scaled normal init; ``shape`` overrides (fan_in, fan_out)."""
+    shape = shape if shape is not None else (fan_in, fan_out)
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, (vocab, d),
+                                        jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) parametrization
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float):
+    """Inverse frequencies for rotary embedding (half-dim)."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated by ``positions`` (..., S) or (S,)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (d/2,)
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * inv  # (..., S, d/2)
+    # broadcast over head dim: (..., S, 1, d/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None, logit_cap: Optional[float] = None):
+    """Mean token cross entropy.  logits (..., V) float, labels (...) int."""
+    logits = softcap(logits.astype(jnp.float32), logit_cap)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,30 @@
+"""Dense feed-forward: gated (SwiGLU/GeGLU) or plain MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+
+def init_ffn(cfg, rng, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_up": dense_init(ks[0], d, f, dtype),
+        "w_down": dense_init(ks[1], f, d, dtype),
+    }
+    if cfg.gated_ffn:
+        p["w_gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def apply_ffn(cfg, params, x):
+    act = activation(cfg.act)
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]

@@ -1,0 +1,347 @@
+"""Full sequence models for every assigned architecture.
+
+Layout:  optional encoder stack (Seamless), then a decoder stack made of
+``cfg.prefix`` unrolled layers + ``cfg.pattern`` repeated ``num_repeats``
+times via ``lax.scan`` over stacked params (keeps HLO size independent of
+depth).  Three entry points share weights:
+
+  ``loss_fn``      -- train-mode forward + CE (+ MoE aux, + MTP).
+  ``prefill``      -- populate KV/state caches from a prompt.
+  ``decode_step``  -- one token against the caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.blocks import LayerAux, zero_aux
+from repro.models.common import (cross_entropy, dense_init, embed_init,
+                                 init_rmsnorm, rmsnorm, softcap)
+
+MTP_WEIGHT = 0.3
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(cfg, spec, rng, n, dtype, **kw):
+    keys = jax.random.split(rng, n)
+    return jax.vmap(lambda k: blocks.init_layer(cfg, spec, k, dtype, **kw))(
+        keys)
+
+
+def init_model(cfg, rng, dtype=jnp.float32):
+    ks = jax.random.split(rng, 8)
+    cross = cfg.is_encdec
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                       dtype)
+    params["prefix"] = tuple(
+        blocks.init_layer(cfg, spec, k, dtype, cross=cross)
+        for spec, k in zip(cfg.prefix,
+                           jax.random.split(ks[2], max(1, len(cfg.prefix)))))
+    params["pattern"] = tuple(
+        _stacked_init(cfg, spec, k, cfg.num_repeats, dtype, cross=cross)
+        for spec, k in zip(cfg.pattern,
+                           jax.random.split(ks[3], len(cfg.pattern))))
+    if cfg.is_encdec:
+        from repro.configs.base import LayerSpec
+        enc_spec = LayerSpec(kind="attn", ffn="dense")
+        params["encoder"] = _stacked_init(cfg, enc_spec, ks[4],
+                                          cfg.encoder_layers, dtype)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if cfg.mtp:
+        from repro.configs.base import LayerSpec
+        mtp_spec = LayerSpec(kind="attn", ffn="dense")
+        params["mtp"] = {
+            "proj": dense_init(ks[5], 2 * cfg.d_model, cfg.d_model, dtype),
+            "norm": init_rmsnorm(cfg.d_model, dtype),
+            "layer": blocks.init_layer(cfg, mtp_spec, ks[6], dtype),
+        }
+    return params
+
+
+def param_shapes(cfg, dtype=jnp.float32):
+    """Parameter ShapeDtypeStructs without allocating (for dry-run)."""
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_model(cfg, rng, dtype))
+
+
+def param_count(cfg) -> int:
+    import math
+    shapes = param_shapes(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg) -> int:
+    """MoE: parameters touched per token (routed top-k + shared + dense)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    n_moe_layers = (sum(1 for s in cfg.pattern if s.ffn == "moe")
+                    * cfg.num_repeats
+                    + sum(1 for s in cfg.prefix if s.ffn == "moe"))
+    per_expert = 3 * cfg.d_model * f if cfg.gated_ffn else 2 * cfg.d_model * f
+    inactive = n_moe_layers * (cfg.num_experts - cfg.experts_per_token) \
+        * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# encoder (Seamless)
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, frontend_embeds, *, chunkwise=True, unroll=1):
+    """Bidirectional encoder over stub frontend embeddings (B, M, d)."""
+    from repro.configs.base import LayerSpec
+    enc_spec = LayerSpec(kind="attn", ffn="dense")
+    B, M, _ = frontend_embeds.shape
+    x = frontend_embeds
+    positions = jnp.broadcast_to(jnp.arange(M), (B, M))
+
+    def body(x, layer_params):
+        x, _, _ = blocks.apply_layer(cfg, enc_spec, layer_params, x,
+                                     positions=positions, mode="train",
+                                     causal=False, chunkwise=chunkwise)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=unroll)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder stack
+# ---------------------------------------------------------------------------
+
+def _pin_batch(x):
+    """GSPMD hygiene: re-pin the residual stream's batch dim to the
+    data-parallel mesh axes at layer boundaries (serve path).  Without
+    this, sharding propagation can drop the batch sharding after
+    gather/scatter-heavy layers (MoE dispatch) and replicate whole layers
+    across the data axes."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        names = mesh.axis_names or ()
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        if not dp:
+            return x
+        sizes = dict(zip(names, mesh.axis_sizes))
+        n = 1
+        for a in dp:
+            n *= sizes[a]
+        if x.shape[0] % n:
+            return x
+        spec = P(dp if len(dp) > 1 else dp[0], *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def _sum_aux(a: LayerAux, b: LayerAux) -> LayerAux:
+    return LayerAux(*(x + y for x, y in zip(a, b)))
+
+
+def run_decoder(cfg, params, x, *, positions, mode, cache=None, pos=None,
+                memory=None, chunkwise=True, use_pallas=False, unroll=1,
+                seq_shard=None, remat=False):
+    """x: (B,S,d) embeddings.  Returns (hidden, new_cache, aux)."""
+    aux = zero_aux()
+    new_prefix = []
+    for i, spec in enumerate(cfg.prefix):
+        c = None if cache is None else cache["prefix"][i]
+        x, nc, a = blocks.apply_layer(
+            cfg, spec, params["prefix"][i], x, positions=positions,
+            mode=mode, cache=c, pos=pos, memory=memory,
+            chunkwise=chunkwise, use_pallas=use_pallas,
+            seq_shard=seq_shard)
+        aux = _sum_aux(aux, a)
+        new_prefix.append(nc)
+
+    def unit(carry, xs):
+        x, aux = carry
+        if cache is None:
+            unit_params, unit_cache = xs, (None,) * len(cfg.pattern)
+        else:
+            unit_params, unit_cache = xs
+        new_unit_cache = []
+        for i, spec in enumerate(cfg.pattern):
+            if mode in ("prefill", "decode"):
+                x = _pin_batch(x)
+            x, nc, a = blocks.apply_layer(
+                cfg, spec, unit_params[i], x, positions=positions,
+                mode=mode, cache=unit_cache[i], pos=pos, memory=memory,
+                chunkwise=chunkwise, use_pallas=use_pallas,
+                seq_shard=seq_shard)
+            aux = _sum_aux(aux, a)
+            new_unit_cache.append(nc)
+        ys = tuple(new_unit_cache) if any(
+            c is not None for c in new_unit_cache) else None
+        return (x, aux), ys
+
+    xs = params["pattern"] if cache is None \
+        else (params["pattern"], cache["pattern"])
+    body = jax.checkpoint(unit) if remat else unit
+    (x, aux), pattern_cache = jax.lax.scan(body, (x, aux), xs,
+                                           unroll=unroll)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"prefix": tuple(new_prefix), "pattern": pattern_cache}
+    return x, new_cache, aux
+
+
+def _lm_logits(cfg, params, x):
+    head = params["lm_head"] if not cfg.tie_embeddings \
+        else params["embed"].T
+    return x @ head
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.scale_embed:
+        x = x * (cfg.d_model ** 0.5)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg, params, batch, *, chunkwise=True, use_pallas=False,
+            unroll=1, remat=False):
+    """batch: tokens (B,S), labels (B,S) [= next token], optional
+    frontend (B,M,d), optional loss_mask (B,S).  Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    memory = None
+    n_front = 0
+
+    if cfg.is_encdec:
+        memory = encode(cfg, params, batch["frontend"], chunkwise=chunkwise,
+                        unroll=unroll)
+    elif cfg.frontend is not None:
+        front = batch["frontend"]  # (B, P, d) projected patch embeddings
+        n_front = front.shape[1]
+        x = jnp.concatenate([front.astype(x.dtype), x], axis=1)
+
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (B, x.shape[1]))
+    x, _, aux = run_decoder(cfg, params, x, positions=positions,
+                            mode="train", memory=memory,
+                            chunkwise=chunkwise, use_pallas=use_pallas,
+                            unroll=unroll, remat=remat)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:]
+    logits = _lm_logits(cfg, params, x)
+    mask = batch.get("loss_mask")
+    ce = cross_entropy(logits, labels, mask, logit_cap=cfg.logit_softcap)
+    loss = ce
+    metrics = {"ce": ce}
+
+    n_moe = (sum(1 for s in cfg.pattern if s.ffn == "moe") * cfg.num_repeats
+             + sum(1 for s in cfg.prefix if s.ffn == "moe"))
+    if n_moe:
+        lb = aux.load_balance / n_moe
+        rz = aux.router_z / n_moe
+        loss = loss + cfg.router_aux_coef * lb + cfg.router_z_coef * rz
+        metrics.update(load_balance=lb, router_z=rz,
+                       dropped_frac=aux.dropped_frac / n_moe)
+
+    if cfg.mtp:
+        # DeepSeek MTP: h'_t = Layer(proj([h_t ; emb(tok_{t+1})])), predict
+        # tok_{t+2}.  labels[t] = tok_{t+1}  =>  emb(labels)[:, :-1] pairs
+        # with x[:, :-1] to predict labels[:, 1:].
+        mtp = params["mtp"]
+        nxt = _embed_tokens(cfg, params, labels[:, :-1])
+        h = jnp.concatenate([x[:, :-1], nxt], axis=-1) @ mtp["proj"]
+        h = rmsnorm(mtp["norm"], h, cfg.norm_eps)
+        from repro.configs.base import LayerSpec
+        h, _, _ = blocks.apply_layer(
+            cfg, LayerSpec(kind="attn", ffn="dense"), mtp["layer"], h,
+            positions=positions[:, :S - 1], mode="train",
+            chunkwise=chunkwise)
+        mtp_logits = _lm_logits(cfg, params, h)
+        mtp_ce = cross_entropy(mtp_logits, labels[:, 1:],
+                               logit_cap=cfg.logit_softcap)
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,
+               cross_len: int = 0):
+    cross_len = cross_len or (cfg.frontend_tokens if cfg.is_encdec else 0)
+
+    def one(spec):
+        return blocks.layer_cache_spec(cfg, spec, batch, max_len, dtype,
+                                       cross_len=cross_len)
+
+    prefix = tuple(one(s) for s in cfg.prefix)
+
+    def stacked(spec):
+        c = one(spec)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.num_repeats,) + a.shape, a.dtype), c)
+
+    pattern = tuple(stacked(s) for s in cfg.pattern)
+    return {"prefix": prefix, "pattern": pattern}
+
+
+def prefill(cfg, params, batch, cache, *, chunkwise=True, use_pallas=False,
+            unroll=1):
+    """Populate caches from a prompt.  Returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    memory = None
+    n_front = 0
+    if cfg.is_encdec:
+        memory = encode(cfg, params, batch["frontend"], chunkwise=chunkwise,
+                        unroll=unroll)
+    elif cfg.frontend is not None and "frontend" in batch:
+        front = batch["frontend"]
+        n_front = front.shape[1]
+        x = jnp.concatenate([front.astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (B, x.shape[1]))
+    x, new_cache, _ = run_decoder(cfg, params, x, positions=positions,
+                                  mode="prefill", cache=cache, memory=memory,
+                                  chunkwise=chunkwise, use_pallas=use_pallas,
+                                  unroll=unroll)
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = softcap(_lm_logits(cfg, params, x), cfg.logit_softcap)
+    return logits, new_cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, chunkwise=True,
+                unroll=1, seq_shard=None):
+    """tokens: (B,1) int32, pos: scalar int32 global position of the token.
+
+    Returns (logits (B,1,V), new_cache)."""
+    B = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    x, new_cache, _ = run_decoder(cfg, params, x, positions=positions,
+                                  mode="decode", cache=cache, pos=pos,
+                                  chunkwise=chunkwise, unroll=unroll,
+                                  seq_shard=seq_shard)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = softcap(_lm_logits(cfg, params, x), cfg.logit_softcap)
+    return logits, new_cache

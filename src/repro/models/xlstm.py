@@ -1,0 +1,279 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence) with exponential gating and
+max-state stabilization.
+
+TPU adaptation: no warp-level primitives -- the mLSTM train path offers two
+formulations validated against each other: a recurrent ``lax.scan``
+(baseline/oracle, also the decode step) and a *chunkwise* form (intra-chunk
+quadratic + inter-chunk state carry, the linear-attention chunking idiom
+that feeds the MXU).  sLSTM is inherently sequential: ``lax.scan`` over
+time with a block-diagonal (per-head) recurrent matrix.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, init_rmsnorm, rmsnorm
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array  # (B, H, dh, dh) matrix memory
+    n: jax.Array  # (B, H, dh)     normalizer
+    m: jax.Array  # (B, H)         stabilizer (log space)
+    conv: jax.Array  # (B, c-1, di) conv tail
+
+
+def _mdims(cfg):
+    d = cfg.d_model
+    di = cfg.mlstm_expand * d
+    H = cfg.num_heads
+    return d, di, H, di // H
+
+
+def init_mlstm(cfg, rng, dtype):
+    d, di, H, dh = _mdims(cfg)
+    c = 4
+    ks = jax.random.split(rng, 8)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": dense_init(ks[1], c, di, dtype, shape=(c, di)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * H, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                                ).astype(dtype),
+        "norm": init_rmsnorm(di, dtype),
+        "down": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_qkvif(cfg, params, x, conv_state=None):
+    from repro.models.ssm import _causal_conv
+    d, di, H, dh = _mdims(cfg)
+    B, S, _ = x.shape
+    xz = x @ params["up"]
+    xi, z = xz[..., :di], xz[..., di:]
+    cx, conv_state = _causal_conv(
+        {"conv_w": params["conv_w"], "conv_b": params["conv_b"]}, xi,
+        conv_state)
+    cx = jax.nn.silu(cx)
+    q = (cx @ params["wq"]).reshape(B, S, H, dh)
+    k = (cx @ params["wk"]).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = (xi @ params["wv"]).reshape(B, S, H, dh)
+    gates = (cx @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    ig, fg = gates[..., :H], gates[..., H:]  # (B,S,H) raw
+    return q, k, v, ig, _logsig(fg), z, conv_state
+
+
+def mlstm_cache_spec(cfg, batch: int, dtype):
+    d, di, H, dh = _mdims(cfg)
+    return MLSTMCache(C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, H, dh), jnp.float32),
+                      m=jnp.full((batch, H), -1e30, jnp.float32),
+                      conv=jnp.zeros((batch, 3, di), dtype))
+
+
+def _mlstm_step(state, inp):
+    """One recurrent step.  q,k,v: (B,H,dh); i,f raw/log gates (B,H)."""
+    C, n, m = state
+    q, k, v, ig, lf = inp
+    m_new = jnp.maximum(lf + m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]
+    f_p = jnp.exp(lf + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_p * n + i_p * k
+    h_num = jnp.einsum("bhij,bhi->bhj", C, q.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)),
+                        jnp.exp(-m_new))[..., None]
+    h = h_num / denom
+    return (C, n, m_new), h
+
+
+def mlstm_recurrent(q, k, v, ig, lf, state):
+    """Scan over time.  q..: (B,S,H,dh), gates (B,S,H).  Oracle path."""
+    def step(carry, inp):
+        return _mlstm_step(carry, inp)
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          ig.transpose(1, 0, 2), lf.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state  # (B,S,H,dh)
+
+
+def mlstm_chunkwise(q, k, v, ig, lf, state, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic attention with decay
+    mask + inter-chunk matrix-state recurrence.  MXU-friendly."""
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nC = S // L
+
+    qf = q.astype(jnp.float32).reshape(B, nC, L, H, dh)
+    kf = k.astype(jnp.float32).reshape(B, nC, L, H, dh)
+    vf = v.astype(jnp.float32).reshape(B, nC, L, H, dh)
+    igc = ig.reshape(B, nC, L, H)
+    lfc = lf.reshape(B, nC, L, H)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ic, fc = inp  # (B,L,H,dh), gates (B,L,H)
+        F = jnp.cumsum(fc, axis=1)  # inclusive logcumsum of forget gates
+        Ftot = F[:, -1]  # (B,H)
+        # log weights of each source position s surviving to chunk end
+        lw = ic + (Ftot[:, None] - F)  # (B,L,H)
+        m_next = jnp.maximum(Ftot + m, jnp.max(lw, axis=1))
+        # --- inter-chunk: contribution of carried state to queries
+        #   decay to position t: exp(F_t + m - m_next)
+        dec_q = jnp.exp(F + (m - m_next)[:, None])  # (B,L,H)
+        h_inter = jnp.einsum("bhij,blhi->blhj", C, qc) * dec_q[..., None]
+        n_inter = jnp.einsum("bhi,blhi->blh", n, qc) * dec_q
+        # --- intra-chunk: masked quadratic
+        #   D[t,s] = exp(F_t - F_s + i_s - m_next)  for s <= t
+        logD = (F[:, :, None] - F[:, None, :, :] + ic[:, None]
+                - m_next[:, None, None])  # (B,L,L,H): [t,s]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)
+        s_qk = jnp.einsum("blhi,bshi->blsh", qc, kc) * D
+        h_intra = jnp.einsum("blsh,bshj->blhj", s_qk, vc)
+        n_intra = jnp.einsum("blsh->blh", s_qk)
+        # combine with max-stabilized normalizer
+        num = h_inter + h_intra
+        den = jnp.maximum(jnp.abs(n_inter + n_intra),
+                          jnp.exp(-m_next)[:, None])
+        h = num / den[..., None]
+        # --- state update for next chunk
+        wsrc = jnp.exp(lw - m_next[:, None])  # (B,L,H)
+        C_new = jnp.exp(Ftot + m - m_next)[..., None, None] * C + \
+            jnp.einsum("blhi,blhj->bhij", kc * wsrc[..., None], vc)
+        n_new = jnp.exp(Ftot + m - m_next)[..., None] * n + \
+            jnp.einsum("blhi->bhi", kc * wsrc[..., None])
+        return (C_new, n_new, m_next), h
+
+    xs = tuple(t.transpose(1, 0, 2, 3, 4) if t.ndim == 5
+               else t.transpose(1, 0, 2, 3)
+               for t in (qf, kf, vf, igc, lfc))
+    state, hs = jax.lax.scan(chunk_step, state, xs)
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh), state
+
+
+def apply_mlstm(cfg, params, x, *, mode, cache=None, chunkwise=True):
+    d, di, H, dh = _mdims(cfg)
+    B, S, _ = x.shape
+    conv_in = cache.conv if (mode == "decode") else None
+    q, k, v, ig, lf, z, conv_state = _mlstm_qkvif(cfg, params, x, conv_in)
+
+    if mode == "decode":
+        state = (cache.C, cache.n, cache.m)
+        state, h = _mlstm_step(
+            state, (q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+                    v[:, 0].astype(jnp.float32), ig[:, 0], lf[:, 0]))
+        h = h[:, None]
+        new_cache = MLSTMCache(*state, conv=conv_state.astype(cache.conv.dtype))
+    else:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+        fn = mlstm_chunkwise if chunkwise else mlstm_recurrent
+        h, state = fn(q, k, v, ig, lf, state)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = MLSTMCache(*state, conv=conv_state.astype(x.dtype))
+
+    h = h.astype(x.dtype).reshape(B, S, di)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    return (h * jax.nn.silu(z)) @ params["down"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    h: jax.Array  # (B, d)
+    m: jax.Array  # (B, d)
+
+
+def init_slstm(cfg, rng, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f = int(cfg.slstm_ff_expand * d)
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),   # z, i, f, o pre-acts
+        "r": dense_init(ks[1], dh, 4 * dh, dtype, shape=(H, dh, 4 * dh)),
+        "b": jnp.tile(jnp.concatenate(
+            [jnp.zeros((d,)), jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+             jnp.zeros((d,))]), (1,)).astype(dtype),
+        "norm": init_rmsnorm(d, dtype),
+        "ff_gate": dense_init(ks[2], d, f, dtype),
+        "ff_down": dense_init(ks[3], f, d, dtype),
+    }
+
+
+def slstm_cache_spec(cfg, batch: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z, m=z - 1e30)
+
+
+def _slstm_step(cfg, params, state, wx):
+    """wx: precomputed input projection (B, 4d)."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    c, n, h, m = state
+    B = h.shape[0]
+    rh = jnp.einsum("bhi,hij->bhj", h.reshape(B, H, dh).astype(jnp.float32),
+                    params["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    pre = wx.astype(jnp.float32) + rh + params["b"].astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    lf = _logsig(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(zt)
+    n = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return SLSTMCache(c, n, h_new, m_new), h_new
+
+
+def apply_slstm(cfg, params, x, *, mode, cache=None):
+    B, S, d = x.shape
+    wx = x @ params["w_in"]  # (B,S,4d)
+    if mode == "decode":
+        state, h = _slstm_step(cfg, params, cache, wx[:, 0])
+        hs = h[:, None]
+        new_cache = state
+    else:
+        state0 = SLSTMCache(*(jnp.zeros((B, d), jnp.float32),) * 3,
+                            m=jnp.full((B, d), -1e30, jnp.float32))
+
+        def step(carry, wxt):
+            return _slstm_step(cfg, params, carry, wxt)
+
+        state, hs = jax.lax.scan(step, state0, wx.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+        new_cache = state if mode == "prefill" else None
+    hs = rmsnorm(params["norm"], hs.astype(x.dtype), cfg.norm_eps)
+    out = (jax.nn.gelu(hs @ params["ff_gate"], approximate=True)
+           @ params["ff_down"])
+    return out, new_cache

@@ -1,0 +1,96 @@
+"""Functional optimizers (no optax in the container -- built from scratch).
+
+API (optax-like):  opt = sgd(...); state = opt.init(params);
+                   params, state = opt.update(grads, state, params, lr)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple]
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+            return new_params, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        step = jax.tree.map(lambda m, g: momentum * m + g, mu, grads) \
+            if nesterov else mu
+        new_params = jax.tree.map(
+            lambda p, s: (p - lr * s).astype(p.dtype), params, step)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(
+            jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, mi, vi: (p - lr * (mi / bc1 /
+                                         (jnp.sqrt(vi / bc2) + eps)
+                                         + weight_decay * p)).astype(p.dtype),
+            params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def schedule(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1),
+                           1.0)
+        return base_lr * frac
+
+    return schedule
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup_steps: int = 0, min_frac: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return base_lr * warm * cos
+
+    return schedule

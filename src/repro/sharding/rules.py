@@ -1,0 +1,197 @@
+"""PartitionSpec rules: parameter, client-state, batch and cache shardings.
+
+Key-name driven: the last dict key on a leaf's path determines the
+*logical* template for its trailing dims ('O' = output-feature dim ->
+tensor-parallel over the model axis, 'I' = input-feature dim -> FSDP axis,
+'E' = expert dim -> expert-parallel over the model axis, ...).  Extra
+leading dims (lax.scan layer stacking, client axes) are unsharded / client
+sharded.  Every axis assignment is divisibility-checked against the mesh
+and dropped (replicated) when it does not divide -- so one rule set serves
+all 10 architectures on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# logical template per trailing-dims, keyed by the leaf's last path key.
+#   O: out-feature  -> model axis (tensor parallel)
+#   I: in-feature   -> fsdp axis (multi-pod ZeRO-style)
+#   E: expert       -> model axis (expert parallel)
+#   V: vocab        -> model axis
+#   .: never sharded
+_KEY_RULES: Dict[str, Tuple[str, ...]] = {
+    # embeddings / heads
+    "embed": ("V", "I"),
+    "lm_head": ("I", "V"),
+    # attention / generic projections (in, out)
+    "wq": ("I", "O"), "wk": ("I", "O"), "wv": ("I", "O"),
+    "wo": ("O", "I"),
+    "bq": ("O",), "bk": ("O",), "bv": ("O",),
+    # MLA
+    "wdq": ("I", "O"), "wuq": ("I", "O"), "wdkv": ("I", "O"),
+    "wuk": ("I", "O"), "wuv": ("I", "O"),
+    # dense ffn
+    "w_up": ("I", "O"), "w_gate": ("I", "O"), "w_down": ("O", "I"),
+    "ff_gate": ("I", "O"), "ff_down": ("O", "I"),
+    # moe expert weights (E, d, f): expert-parallel over the model axis
+    "we_gate": ("E", "I", "."), "we_up": ("E", "I", "."),
+    "we_down": ("E", ".", "I"),
+    "router": ("I", "."),
+    # ssm / xlstm
+    "in_proj": ("I", "O"), "out_proj": ("O", "I"),
+    "x_proj": ("O", "."), "dt_proj": (".", "O"),
+    "conv_w": (".", "O"), "conv_b": ("O",),
+    "dt_bias": ("O",), "A_log": ("O", "."), "D": ("O",),
+    "up": ("I", "O"), "down": ("O", "I"),
+    "w_if": ("O", "."), "b_if": (".",),
+    "w_in": ("I", "O"), "r": (".", ".", "."), "b": (".",),
+    # misc
+    "proj": ("I", "O"),  # mtp combiner
+    "scale": (".",),
+}
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis_ok(mesh_sizes, axis: Optional[str], dim: int) -> bool:
+    return axis is not None and axis in mesh_sizes and \
+        dim % mesh_sizes[axis] == 0
+
+
+def logical_template(path, ndim: int) -> Tuple[str, ...]:
+    key = _path_keys(path)[-1]
+    base = _KEY_RULES.get(key, (".",) * ndim)
+    # pad leading stacked dims (lax.scan layer stacking) with '.'
+    if ndim > len(base):
+        base = (".",) * (ndim - len(base)) + tuple(base)
+    elif ndim < len(base):
+        base = tuple(base[-ndim:])
+    return tuple(base)
+
+
+def param_pspec(path, shape, *, model: str = "model",
+                fsdp: Optional[str] = None, mesh_sizes=None) -> P:
+    tmpl = logical_template(path, len(shape))
+    out = []
+    expert_failed = False
+    for sym, dim in zip(tmpl, shape):
+        axis = None
+        if sym in ("O", "E", "V"):
+            axis = model
+        elif sym == "I":
+            axis = fsdp
+        if not _axis_ok(mesh_sizes, axis, dim):
+            if sym == "E":
+                expert_failed = True
+            axis = None
+        out.append(axis)
+    if expert_failed:
+        # expert count doesn't divide the model axis (e.g. granite's 40
+        # experts on 16 chips): fall back to tensor parallelism *within*
+        # each expert, megatron-style -- shard the per-expert hidden dim
+        # ('.' in the template: f for w_gate/w_up/w_down) so gate/up are
+        # column-parallel and down is row-parallel (one all-reduce).
+        for prefer_dot in (True, False):
+            done = False
+            for i, (sym, dim) in enumerate(zip(tmpl, shape)):
+                if sym == "E" or out[i] is not None:
+                    continue
+                if prefer_dot and sym != ".":
+                    continue
+                if _axis_ok(mesh_sizes, model, dim):
+                    out[i] = model
+                    done = True
+                    break
+            if done:
+                break
+    return P(*out)
+
+
+def param_specs(shapes: Pytree, mesh: Mesh, *, model: str = "model",
+                fsdp: Optional[str] = None,
+                client: Optional[str] = None) -> Pytree:
+    """NamedSharding pytree for a params(-shaped) pytree.  ``client``
+    prepends a client axis for per-client state (leading C dim)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = []
+    for path, leaf in flat:
+        shape = leaf.shape
+        if client is not None:
+            spec = param_pspec(path, shape[1:], model=model, fsdp=fsdp,
+                               mesh_sizes=sizes)
+            cax = client if _axis_ok(sizes, client, shape[0]) else None
+            spec = P(cax, *spec)
+        else:
+            spec = param_pspec(path, shape, model=model, fsdp=fsdp,
+                               mesh_sizes=sizes)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, [s for s in out])
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def train_batch_spec(mesh: Mesh, *, client: str, fsdp: Optional[str] = None,
+                     batch_dims: int = 2):
+    """Round batch (C, tau, b, S[, ...]): C over the client axis, b over the
+    fsdp axis (multi-pod)."""
+    def f(leaf_ndim: int) -> P:
+        spec = [client, None, fsdp]
+        spec += [None] * (leaf_ndim - 3)
+        return P(*spec)
+
+    return f
+
+
+def data_parallel_spec(mesh: Mesh, axes) -> P:
+    """Batch (B, ...) sharded over the given axes tuple on dim 0."""
+    return P(axes)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache_shapes: Pytree, mesh: Mesh, *, model: str = "model",
+                dp: Any = None, prefer_seq: bool = False) -> Pytree:
+    """KV/state cache shardings for serving.
+
+    Per leaf (B, L, ...trailing): B over the data-parallel axes when
+    divisible; then the *largest* trailing dim over the model axis when
+    divisible (kv heads for K%16==0, latent r for MLA, d_inner for SSM
+    states); when heads don't divide (kv=8 archs) the sequence dim L takes
+    the model axis instead -- sequence-parallel decode attention, which
+    GSPMD lowers with a cross-shard softmax reduction."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes[model]
+
+    def one(leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        dp_axes = tuple(a for a in (dp if isinstance(dp, tuple) else (dp,))
+                        if a)
+        if dp_axes:
+            n = int(np.prod([sizes[a] for a in dp_axes]))
+            if shape[0] % n == 0:
+                spec[0] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        # trailing dims: optionally force the sequence dim (dim 1, for the
+        # shard_map flash-decode path), else largest-first for model axis
+        rest = list(range(1, len(shape)))
+        if not prefer_seq:
+            rest.sort(key=lambda i: -shape[i])
+        for i in rest:
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                spec[i] = model
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_shapes)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run on the single real CPU device -- the 512-device XLA_FLAGS
+# override belongs to launch/dryrun.py ONLY.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

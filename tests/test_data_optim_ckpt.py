@@ -1,0 +1,140 @@
+"""Substrate tests: synthetic data pipeline, optimizers, checkpointing."""
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint import (latest_checkpoint, restore_checkpoint,
+                              save_checkpoint)
+from repro.data import (heterogeneity_stats, lm_client_batch,
+                        make_federated_classification)
+from repro.optim import adamw, cosine_schedule, linear_warmup, sgd
+
+settings.register_profile("ci2", max_examples=20, deadline=None)
+settings.load_profile("ci2")
+
+
+# ---------------------------------------------------------------------- data
+
+def test_dataset_deterministic():
+    a = make_federated_classification(n_clients=4, per_client=64, seed=7)
+    b = make_federated_classification(n_clients=4, per_client=64, seed=7)
+    np.testing.assert_array_equal(a.train["x"], b.train["x"])
+    np.testing.assert_array_equal(a.train["y"], b.train["y"])
+
+
+def test_shards_split_is_heterogeneous():
+    ds = make_federated_classification(n_clients=10, per_client=200,
+                                       split="shards", seed=0)
+    stats = heterogeneity_stats(ds)
+    assert stats["mean_tv"] > 0.5  # pathological split: strong skew
+    # each client sees few distinct labels
+    for i in range(10):
+        assert len(np.unique(ds.train["y"][i])) <= 4
+
+
+@given(st.floats(0.05, 10.0), st.integers(0, 20))
+def test_dirichlet_alpha_controls_skew(alpha, seed):
+    ds = make_federated_classification(n_clients=8, per_client=128,
+                                       split="dirichlet", alpha=alpha,
+                                       seed=seed)
+    stats = heterogeneity_stats(ds)
+    assert 0.0 <= stats["mean_tv"] <= 1.0
+    assert ds.train["x"].shape == (8, 128, 784)
+
+
+def test_dirichlet_more_skew_than_high_alpha():
+    lo = heterogeneity_stats(make_federated_classification(
+        n_clients=8, per_client=256, split="dirichlet", alpha=0.1, seed=3))
+    hi = heterogeneity_stats(make_federated_classification(
+        n_clients=8, per_client=256, split="dirichlet", alpha=50.0, seed=3))
+    assert lo["mean_tv"] > hi["mean_tv"]
+
+
+def test_lm_client_batch_deterministic_and_skewed():
+    a = lm_client_batch(vocab=128, n_clients=4, client=1, round_k=3, tau=2,
+                        batch=2, seq_len=16, seed=5)
+    b = lm_client_batch(vocab=128, n_clients=4, client=1, round_k=3, tau=2,
+                        batch=2, seq_len=16, seed=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["tokens"][..., 1:], a["labels"][..., :-1])
+    # different clients see different unigram heads
+    c = lm_client_batch(vocab=128, n_clients=4, client=2, round_k=3, tau=2,
+                        batch=2, seq_len=16, seed=5)
+    ha = np.bincount(a["tokens"].reshape(-1), minlength=128)
+    hc = np.bincount(c["tokens"].reshape(-1), minlength=128)
+    assert np.argmax(ha) != np.argmax(hc) or \
+        0.5 * np.abs(ha / ha.sum() - hc / hc.sum()).sum() > 0.1
+
+
+# --------------------------------------------------------------------- optim
+
+def _quadratic_converges(opt, lr, steps=200):
+    target = jnp.asarray([1.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    for i in range(steps):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(g, state, params, lr)
+    return float(jnp.max(jnp.abs(params["w"] - target)))
+
+
+@pytest.mark.parametrize("opt,lr", [
+    (sgd(), 0.1), (sgd(momentum=0.9), 0.05),
+    (sgd(momentum=0.9, nesterov=True), 0.05),
+    (adamw(weight_decay=0.0), 0.05),
+])
+def test_optimizers_converge(opt, lr):
+    assert _quadratic_converges(opt, lr) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(weight_decay=0.5)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    params, _ = opt.update({"w": jnp.zeros(4)}, state, params, 0.1)
+    assert float(params["w"][0]) < 1.0
+
+
+def test_schedules():
+    warm = linear_warmup(1.0, 10)
+    assert float(warm(jnp.int32(0))) == 0.0
+    assert float(warm(jnp.int32(10))) == 1.0
+    cos = cosine_schedule(1.0, 100, warmup_steps=10, min_frac=0.1)
+    vals = [float(cos(jnp.int32(t))) for t in (0, 10, 55, 100)]
+    assert vals[0] == 0.0 and abs(vals[1] - 1.0) < 1e-6
+    assert vals[1] > vals[2] > vals[3] >= 0.1 - 1e-6
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)},
+            "tup": (jnp.zeros(2), jnp.asarray(3))}
+    d = str(tmp_path / "ckpt")
+    p = save_checkpoint(d, 7, tree, metadata={"note": "x"})
+    assert latest_checkpoint(d) == p
+    restored, meta = restore_checkpoint(p, tree)
+    assert meta["step"] == 7 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 3))}
+    p = save_checkpoint(str(tmp_path), 1, tree)
+    with pytest.raises(ValueError):
+        restore_checkpoint(p, {"a": jnp.zeros((3, 2))})
+
+
+def test_latest_checkpoint_ordering(tmp_path):
+    d = str(tmp_path)
+    for step in (3, 12, 7):
+        save_checkpoint(d, step, {"a": jnp.zeros(1)})
+    assert latest_checkpoint(d).endswith("ckpt_00000012.npz")

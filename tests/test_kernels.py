@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import deper_update, flash_attention, gmm
+
+
+@pytest.mark.parametrize("shape", [(8,), (100,), (130, 33), (4, 7, 9),
+                                   (1024,), (2048, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_deper_update_shapes(shape, dtype):
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 5)
+    y, v, x, gy, gv = (jax.random.normal(k, shape, jnp.float32).astype(dtype)
+                       for k in ks)
+    eta, rho = 0.05, 0.013
+    y2, v2 = deper_update({"p": y}, {"p": v}, {"p": x}, {"p": gy},
+                          {"p": gv}, eta=eta, rho=rho)
+    ry, rv = ref.deper_update_ref(
+        y.astype(jnp.float32), v.astype(jnp.float32),
+        x.astype(jnp.float32), gy.astype(jnp.float32),
+        gv.astype(jnp.float32), eta=eta, rho=rho)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y2["p"], np.float32), ry,
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(v2["p"], np.float32), rv,
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (1, 128, 4, 4, 64),    # MHA
+    (2, 256, 4, 2, 64),    # GQA
+    (1, 128, 8, 1, 32),    # MQA
+    (1, 384, 6, 2, 128),   # non-pow2 blocks
+])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 64, None), (True, None, 50.0),
+    (False, None, None),
+])
+def test_flash_attention_sweep(B, S, H, K, D, causal, window, cap):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, cap=cap)
+    r = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    out = flash_attention(q, k, v)
+    r = ref.flash_attention_ref(q, k, v)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("E,T,d,f", [(2, 16, 32, 48), (4, 64, 96, 80),
+                                     (8, 128, 256, 128), (3, 40, 56, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_sweep(E, T, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = (jax.random.normal(ks[0], (E, T, d)) / np.sqrt(d)).astype(dtype)
+    w = jax.random.normal(ks[1], (E, d, f)).astype(dtype)
+    out = gmm(x, w)
+    r = ref.gmm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+def test_deper_update_in_strategy_matches_plain():
+    """FedDeper with use_pallas=True must equal the tree-map path."""
+    from repro.core import FedDeper
+    rng = jax.random.PRNGKey(4)
+    ks = jax.random.split(rng, 4)
+    x = {"w": jax.random.normal(ks[0], (33, 17)),
+         "b": jax.random.normal(ks[1], (9,))}
+
+    def grad_fn(p, mb):
+        loss = sum(jnp.sum(jnp.square(l - mb)) for l in jax.tree.leaves(p))
+        return loss, jax.tree.map(lambda l: 2 * (l - mb), p)
+
+    batches = jnp.arange(3, dtype=jnp.float32)  # tau=3 scalar "batches"
+    for use_pallas in (False, True):
+        strat = FedDeper(eta=0.03, rho=0.01, lam=0.5,
+                         use_pallas=use_pallas)
+        cs, up, _ = strat.local_round(x, None, strat.client_init(x),
+                                      batches, grad_fn)
+        if use_pallas:
+            got = (cs, up)
+        else:
+            want = (cs, up)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)

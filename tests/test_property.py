@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.kernels.ref import deper_update_ref
+from repro.models.common import apply_rope, cross_entropy, softcap
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(-2.0, 2.0, allow_nan=False)
+small_arrays = st.lists(floats, min_size=4, max_size=32).map(
+    lambda l: np.array(l, np.float32))
+
+
+@given(small_arrays, st.floats(0.0, 0.5), st.floats(0.0, 0.3))
+def test_deper_update_rho0_is_sgd(a, eta, rho):
+    """rho=0: the y-stream reduces to plain SGD on the same gradients."""
+    y, v, x = a, a * 0.5, a * 0.25
+    gy, gv = a * 0.1, a * 0.2
+    y2, v2 = deper_update_ref(y, v, x, gy, gv, eta=eta, rho=0.0)
+    np.testing.assert_allclose(y2, y - eta * gy, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v2, v - eta * gv, rtol=1e-6, atol=1e-6)
+
+
+@given(small_arrays, st.floats(0.01, 0.3))
+def test_deper_update_fixed_point(a, rho):
+    """At y = v = x with zero gradients, the update is a fixed point."""
+    y2, v2 = deper_update_ref(a, a, a, a * 0, a * 0, eta=0.1, rho=rho)
+    np.testing.assert_allclose(y2, a, rtol=1e-6)
+    np.testing.assert_allclose(v2, a, rtol=1e-6)
+
+
+@given(small_arrays, st.floats(0.01, 0.3), st.floats(0.01, 0.5))
+def test_deper_update_reflection_direction(a, rho, eta):
+    """The regularizer pushes y opposite to the local drift (v - x):
+    with zero gradients, (y2 - y) = -rho * ((v - x) + (y - x))."""
+    y, v, x = a * 0.3, a, a * 0.1
+    y2, _ = deper_update_ref(y, v, x, 0 * a, 0 * a, eta=eta, rho=rho)
+    np.testing.assert_allclose(y2 - y, -rho * ((v - x) + (y - x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(2, 40), st.integers(0, 1000))
+def test_cross_entropy_bounds(n_classes, seed):
+    """CE of uniform logits == log(V); CE >= 0 always."""
+    rng = np.random.default_rng(seed)
+    logits = np.zeros((4, n_classes), np.float32)
+    labels = rng.integers(0, n_classes, (4,))
+    ce = float(cross_entropy(jnp.asarray(logits), jnp.asarray(labels)))
+    np.testing.assert_allclose(ce, np.log(n_classes), rtol=1e-5)
+    logits = rng.normal(size=(4, n_classes)).astype(np.float32)
+    assert float(cross_entropy(jnp.asarray(logits),
+                               jnp.asarray(labels))) >= 0.0
+
+
+@given(st.integers(1, 64), st.integers(0, 10_000))
+def test_rope_preserves_norm(pos, seed):
+    """Rotary embedding is a rotation: vector norms are invariant."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(1, 3, 2, 16)).astype(np.float32)
+    out = apply_rope(jnp.asarray(x), jnp.full((1, 3), pos), 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+@given(st.floats(1.0, 100.0), small_arrays)
+def test_softcap_bounds(cap, a):
+    """softcap output is bounded by cap and monotone."""
+    out = np.asarray(softcap(jnp.asarray(a * 100), cap))
+    assert np.all(np.abs(out) <= cap + 1e-5)
+    order = np.argsort(a)
+    assert np.all(np.diff(out[order]) >= -1e-6)
+
+
+@given(st.integers(1, 6), st.integers(0, 100))
+def test_aggregation_mean_identity(c, seed):
+    """If every client uploads the same delta, x moves by exactly delta."""
+    from repro.core import FedAvg
+    rng = np.random.default_rng(seed)
+    x = {"w": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
+    delta = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+    uploads = {"w": jnp.broadcast_to(delta, (c, 5))}
+    new_x, _, _ = FedAvg().aggregate(x, {}, uploads, p=1.0)
+    np.testing.assert_allclose(np.asarray(new_x["w"]),
+                               np.asarray(x["w"] + delta), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(st.integers(2, 8), st.integers(1, 8), st.integers(0, 50))
+def test_moe_capacity_positions_unique(e, k, seed):
+    """Dispatch positions within each expert must be unique (no token
+    overwrites another's slot)."""
+    rng = np.random.default_rng(seed)
+    T = 16
+    flat_e = rng.integers(0, e, (T * k,))
+    onehot = np.eye(e, dtype=np.int32)[flat_e]
+    pos = np.cumsum(onehot, 0) - onehot
+    pos = pos[np.arange(T * k), flat_e]
+    for ei in range(e):
+        ps = pos[flat_e == ei]
+        assert len(set(ps.tolist())) == len(ps)
+
+
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(8, 64),
+       st.integers(0, 99))
+def test_moe_sort_positions_equal_cumsum(e, k, t, seed):
+    """The sort-based dispatch positions (perf fix P3) must equal the
+    one-hot cumsum formulation exactly (stable order = token-major)."""
+    rng = np.random.default_rng(seed)
+    flat_e = rng.integers(0, e, (t * k,)).astype(np.int32)
+    onehot = np.eye(e, dtype=np.int32)[flat_e]
+    pos_ref = (np.cumsum(onehot, 0) - onehot)[np.arange(t * k), flat_e]
+    order = np.argsort(flat_e, kind="stable")
+    sorted_e = flat_e[order]
+    counts = np.bincount(flat_e, minlength=e)
+    starts = np.cumsum(counts) - counts
+    ranks = np.arange(t * k) - starts[sorted_e]
+    pos_sort = np.zeros(t * k, np.int64)
+    pos_sort[order] = ranks
+    np.testing.assert_array_equal(pos_sort, pos_ref)

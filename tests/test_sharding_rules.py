@@ -1,0 +1,103 @@
+"""Sharding-rule unit tests (no multi-device needed: specs are symbolic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Duck-typed mesh carrying names/shape only (rules never touch
+    devices beyond axis sizes for spec construction)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, object)
+
+
+def _mesh(multi_pod=False):
+    if multi_pod:
+        return jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_pspec_templates():
+    sizes = {"data": 16, "model": 16}
+    spec = rules.param_pspec([_K("embed")], (256_000, 4096), model="model",
+                             fsdp=None, mesh_sizes=sizes)
+    assert spec == P("model", None)
+    spec = rules.param_pspec([_K("wq")], (4096, 8192), model="model",
+                             fsdp="data", mesh_sizes=sizes)
+    assert spec == P("data", "model")
+    # stacked layer dim gets None
+    spec = rules.param_pspec([_K("pattern"), _K("0"), _K("mixer"),
+                              _K("wq")], (28, 4096, 8192), model="model",
+                             fsdp=None, mesh_sizes=sizes)
+    assert spec == P(None, None, "model")
+    # moe expert weights: expert-parallel
+    spec = rules.param_pspec([_K("ffn"), _K("we_gate")], (64, 512, 128),
+                             model="model", fsdp=None, mesh_sizes=sizes)
+    assert spec == P("model", None, None)
+
+
+def _K(key):
+    class KObj:
+        def __init__(self, k):
+            self.key = k
+    return KObj(key)
+
+
+def test_divisibility_fallback():
+    sizes = {"data": 16, "model": 16}
+    # 24 heads * 64 = 1536 divisible; but a dim of 9 is not
+    spec = rules.param_pspec([_K("wq")], (9, 1536), model="model",
+                             fsdp="data", mesh_sizes=sizes)
+    assert spec == P(None, "model")
+    # 10 experts don't divide 16 -> megatron fallback shards the hidden
+    # dim ('.') of the expert weight instead
+    spec = rules.param_pspec([_K("we_gate")], (10, 512, 64), model="model",
+                             fsdp=None, mesh_sizes=sizes)
+    assert spec == P(None, None, "model")
+    spec = rules.param_pspec([_K("we_down")], (10, 64, 512), model="model",
+                             fsdp=None, mesh_sizes=sizes)
+    assert spec == P(None, "model", None)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-v3-671b",
+                                  "jamba-v0.1-52b", "xlstm-125m"])
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_config(arch)
+    shapes = transformer.param_shapes(cfg, jnp.bfloat16)
+    mesh = _mesh()
+    specs = rules.param_specs(shapes, mesh, model="model", fsdp=None)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(
+        specs, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_shapes) == len(flat_specs)
+    for leaf, s in zip(flat_shapes, flat_specs):
+        assert len([a for a in s.spec if a is not None]) <= len(leaf.shape)
+
+
+def test_client_axis_prepended():
+    cfg = get_config("llama3.2-3b")
+    shapes = transformer.param_shapes(cfg, jnp.bfloat16)
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((16,) + l.shape, l.dtype), shapes)
+    mesh = _mesh()
+    specs = rules.param_specs(stacked, mesh, model="model", fsdp=None,
+                              client="data")
+    one = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "spec"))[0]
+    assert one.spec[0] == "data"
+
+
+def test_cache_specs_prefer_heads_else_sequence():
+    mesh = _mesh()
+    # kv heads divisible by model size (1 here) -> largest trailing dim
+    cache = {"k": jax.ShapeDtypeStruct((128, 32768, 8, 128), jnp.bfloat16)}
+    specs = rules.cache_specs(cache, mesh, model="model", dp=("data",))
+    s = specs["k"].spec
+    assert s[0] == "data"  # batch over dp
+    assert "model" in tuple(a for a in s if a)  # some dim model-sharded
