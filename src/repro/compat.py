@@ -1,0 +1,60 @@
+"""Shims over jax API renames so one codebase runs on the pinned
+container jax (0.4.x) and on current releases.
+
+  * ``shard_map``      -- ``jax.shard_map`` (>=0.5) vs
+                          ``jax.experimental.shard_map.shard_map``
+  * ``make_mesh``      -- ``axis_types=`` kwarg only exists on >=0.5;
+                          0.4.x meshes are implicitly all-auto
+  * ``axis_types_auto``-- ``jax.sharding.AxisType.Auto`` tuple, or None
+  * ``set_mesh``       -- ``jax.set_mesh`` vs entering the Mesh itself
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, mesh=None, **kw):
+        if mesh is None:
+            # new-style ambient mesh (set by `with mesh:` / set_mesh)
+            from jax.interpreters import pxla
+            mesh = pxla.thread_resources.env.physical_mesh
+            if mesh.empty:
+                raise ValueError("shard_map: mesh=None requires an "
+                                 "ambient mesh context")
+        return _shard_map_04x(f, mesh=mesh, **kw)
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` (>=0.5); 0.4.x spells it psum(1, name),
+    which constant-folds to the mesh axis size."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def axis_types_auto(n: int):
+    """(AxisType.Auto,) * n where AxisType exists; None on 0.4.x (whose
+    meshes are always auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else (axis_type.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None):
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # 0.4.x: Mesh is its own context manager

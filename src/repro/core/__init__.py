@@ -7,12 +7,19 @@ from repro.core.strategies import (  # noqa: F401
     STRATEGIES,
     Strategy,
 )
+from repro.core.async_rounds import (  # noqa: F401
+    AsyncSimConfig,
+    init_async_state,
+    make_async_round_fn,
+    staleness_weights,
+)
 from repro.core.rounds import (  # noqa: F401
     SimConfig,
     init_sim_state,
     make_global_eval,
     make_personal_eval,
     make_round_fn,
+    peek_sampled_clients,
     run_rounds,
 )
 from repro.core.federated import (  # noqa: F401

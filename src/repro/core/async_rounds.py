@@ -1,0 +1,275 @@
+"""Buffered asynchronous aggregation regime (FedBuff-style).
+
+The synchronous regimes (`rounds.py` simulation, `federated.py`
+datacenter) block every round on the slowest sampled client -- exactly
+the straggler regime the paper's motivation (slow, unstable convergence
+under heterogeneity and limited bandwidth) cares about.  This module adds
+the third regime: a versioned global model with a bounded upload buffer.
+
+  * up to ``m_concurrent`` clients train simultaneously, each against the
+    global-model *snapshot it pulled* (slow clients keep training on old
+    versions while fast clients lap them);
+  * client wall-clock is a per-client delay drawn once from a configurable
+    straggler distribution (``AsyncSimConfig.client_delays``);
+  * completed uploads land in a buffer together with their staleness
+    ``s = version_now - version_pulled``; once ``buffer_size`` uploads have
+    arrived the server applies one staleness-discounted aggregate with
+    polynomial weights ``(1 + s)^-alpha`` and bumps the version.
+
+A client's local computation depends only on its pulled snapshot and its
+own batch draws, so the simulator runs the tau local steps eagerly at
+dispatch time and holds the finished payload until the client's simulated
+finish time -- semantically identical to training during the delay.
+
+Degenerate case (tested bit-for-bit in ``tests/test_async_rounds.py``):
+``delay=0, buffer_size=m_concurrent, alpha=0`` reproduces the synchronous
+``make_round_fn`` trajectory exactly, for every strategy.
+
+See DESIGN.md §4 for buffer semantics and the staleness-weighting math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rounds import _personal_model
+from repro.core.strategies import Strategy, tmap
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AsyncSimConfig:
+    """Async-regime knobs.  ``delay`` is the mean client delay in simulated
+    time units; staleness comes from version drift, so only delay *ratios*
+    between clients matter, not the unit."""
+    n_clients: int
+    m_concurrent: int        # clients training simultaneously (slots)
+    buffer_size: int         # uploads per aggregation (FedBuff's K)
+    tau: int
+    batch_size: int
+    alpha: float = 0.5       # staleness discount exponent; 0 = no discount
+    delay: float = 0.0       # mean per-client delay; 0 = all instant
+    delay_dist: str = "lognormal"  # 'constant' | 'uniform' | 'lognormal'
+    delay_sigma: float = 1.0       # lognormal shape (straggler heaviness)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (1 <= self.m_concurrent <= self.n_clients):
+            raise ValueError("need 1 <= m_concurrent <= n_clients")
+        if self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+
+    @property
+    def p(self) -> float:
+        """Per-aggregation participation fraction (Scaffold's c-update)."""
+        return self.buffer_size / self.n_clients
+
+    def client_delays(self) -> np.ndarray:
+        """Deterministic per-client delays, drawn once per config."""
+        if self.delay <= 0:
+            return np.zeros(self.n_clients)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0xA57C]))
+        if self.delay_dist == "constant":
+            d = np.full(self.n_clients, float(self.delay))
+        elif self.delay_dist == "uniform":
+            d = rng.uniform(0.0, 2.0 * self.delay, self.n_clients)
+        elif self.delay_dist == "lognormal":
+            # mean-normalized heavy tail: E[d] = delay for any sigma
+            d = self.delay * rng.lognormal(
+                -0.5 * self.delay_sigma ** 2, self.delay_sigma,
+                self.n_clients)
+        else:
+            raise ValueError(f"unknown delay_dist {self.delay_dist!r}")
+        return d
+
+
+def staleness_weights(staleness, alpha: float) -> jax.Array:
+    """Polynomial staleness discount (Xie et al. 2019; FedBuff):
+    w_i = (1 + s_i)^-alpha.  alpha=0 recovers the uniform mean."""
+    s = jnp.asarray(staleness, jnp.float32)
+    return (1.0 + s) ** (-alpha)
+
+
+def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree):
+    """Async simulation state: the jax parts mirror ``init_sim_state``
+    (same PRNG stream); scheduling bookkeeping lives host-side."""
+    client = strategy.client_init(x)
+    clients = tmap(lambda t: jnp.broadcast_to(
+        t, (acfg.n_clients,) + t.shape).copy(), client) \
+        if jax.tree.leaves(client) else {}
+    pms = tmap(lambda t: jnp.broadcast_to(
+        t, (acfg.n_clients,) + t.shape).copy(), x)
+    return {
+        "x": x,
+        "clients": clients,
+        "pms": pms,
+        "server": strategy.server_init(x),
+        "rng": jax.random.PRNGKey(acfg.seed),
+        "round": 0,              # completed aggregations
+        "version": 0,            # global model version
+        "t": 0.0,                # simulated wall-clock
+        "slots": [None] * acfg.m_concurrent,
+        "buffer": [],            # delivered uploads awaiting aggregation
+        "delays": acfg.client_delays(),
+    }
+
+
+def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
+                        data: Dict[str, jax.Array]):
+    """Returns ``async_round(state) -> (state, metrics)`` advancing the
+    event simulation until exactly one buffered aggregation completes --
+    the same contract as ``make_round_fn``, so ``run_rounds`` drives it.
+
+    data: per-client arrays with leading (n_clients, N_i) dims."""
+    n, tau, b = acfg.n_clients, acfg.tau, acfg.batch_size
+    n_i = jax.tree.leaves(data)[0].shape[1]
+
+    @jax.jit
+    def train_cohort(xs, ctxs, cs, batches):
+        """tau local steps for a cohort of dispatched clients; every operand
+        carries the cohort axis (each client sees its own pulled model).
+
+        Retraces once per distinct cohort size f in [1, m_concurrent]
+        (in practice the first full dispatch plus the small refill sizes
+        the delay pattern produces).  Padding every dispatch to
+        m_concurrent with masked lanes would cap this at one compile but
+        costs wasted lane compute and complicates the bit-for-bit
+        degenerate-case guarantee, so the simulator keeps the honest
+        shapes."""
+        def per_client(x_i, ctx_i, cs_i, batches_i):
+            new_cs, upload, metrics = strategy.local_round(
+                x_i, ctx_i, cs_i, batches_i, grad_fn)
+            pm = _personal_model(strategy, x_i, new_cs, upload)
+            return new_cs, upload, pm, metrics
+
+        return jax.vmap(per_client)(xs, ctxs, cs, batches)
+
+    @jax.jit
+    def agg_plain(x, server, uploads):
+        return strategy.aggregate(x, server, uploads, acfg.p)
+
+    @jax.jit
+    def agg_weighted(x, server, uploads, w):
+        return strategy.aggregate(x, server, uploads, acfg.p, weights=w)
+
+    def _dispatch(state):
+        """Fill free slots: sample idle clients, draw their batches, run
+        their local rounds against the current model, schedule delivery."""
+        free = [i for i, s in enumerate(state["slots"]) if s is None]
+        if not free:
+            return
+        f = len(free)
+        rng, k_sel, k_batch = jax.random.split(state["rng"], 3)
+        state["rng"] = rng
+        busy = [s["client"] for s in state["slots"] if s is not None]
+        if busy:
+            p = np.ones(n)
+            p[busy] = 0.0
+            idx = jax.random.choice(k_sel, n, (f,), replace=False,
+                                    p=jnp.asarray(p / p.sum()))
+        else:
+            # identical draw to make_round_fn (degenerate-case equivalence)
+            idx = jax.random.choice(k_sel, n, (f,), replace=False)
+        bidx = jax.random.randint(k_batch, (f, tau, b), 0, n_i)
+        batches = tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx),
+                       data)
+        cs = tmap(lambda t: t[idx], state["clients"]) \
+            if jax.tree.leaves(state["clients"]) else {}
+        ctx = strategy.broadcast(state["x"], state["server"])
+        bcast = lambda t: jnp.broadcast_to(t, (f,) + t.shape)  # noqa: E731
+        new_cs, uploads, pms, metrics = train_cohort(
+            tmap(bcast, state["x"]), tmap(bcast, ctx), cs, batches)
+
+        idx_np = np.asarray(idx)
+        for j, slot in enumerate(free):
+            c = int(idx_np[j])
+            state["slots"][slot] = {
+                "client": c,
+                "version": state["version"],
+                "finish_t": state["t"] + float(state["delays"][c]),
+                "payload": tmap(lambda t: t[j], (new_cs, uploads, pms)),
+                "metrics": {k: v[j] for k, v in metrics.items()},
+            }
+
+    def _aggregate(state):
+        """Apply the staleness-weighted aggregate over the full buffer."""
+        buf, state["buffer"] = state["buffer"], []
+        uploads = tmap(lambda *ts: jnp.stack(ts),
+                       *[item["upload"] for item in buf])
+        stal = np.array([item["staleness"] for item in buf], np.float32)
+        if acfg.alpha == 0.0:
+            # uniform weights: take the legacy path, bit-identical to sync
+            x, server, agg_m = agg_plain(state["x"], state["server"],
+                                         uploads)
+        else:
+            w = staleness_weights(stal, acfg.alpha)
+            x, server, agg_m = agg_weighted(state["x"], state["server"],
+                                            uploads, w)
+        state["x"], state["server"] = x, server
+        state["version"] += 1
+        state["round"] += 1
+        metrics = {}
+        keys = buf[0]["metrics"].keys()
+        for k in keys:
+            metrics[k] = jnp.stack([item["metrics"][k]
+                                    for item in buf]).mean()
+        metrics.update(agg_m)
+        metrics.update({
+            "staleness_mean": float(stal.mean()),
+            "staleness_max": float(stal.max()),
+            "sim_time": float(state["t"]),
+            "version": float(state["version"]),
+        })
+        return metrics
+
+    def _deliver_until_aggregate(state):
+        """Advance simulated time, delivering finished clients in slot
+        order, until one aggregation fires.  Returns its metrics."""
+        while True:
+            pending = [i for i, s in enumerate(state["slots"])
+                       if s is not None]
+            if not pending:
+                return None  # nothing in flight: caller must dispatch
+            state["t"] = max(state["t"],
+                             min(state["slots"][i]["finish_t"]
+                                 for i in pending))
+            for i in pending:
+                s = state["slots"][i]
+                if s is None or s["finish_t"] > state["t"]:
+                    continue
+                new_cs, upload, pm = s["payload"]
+                c = s["client"]
+                if jax.tree.leaves(state["clients"]):
+                    state["clients"] = tmap(
+                        lambda all_, nw: all_.at[c].set(nw),
+                        state["clients"], new_cs)
+                state["pms"] = tmap(lambda all_, nw: all_.at[c].set(nw),
+                                    state["pms"], pm)
+                state["buffer"].append({
+                    "upload": upload,
+                    "staleness": state["version"] - s["version"],
+                    "metrics": s["metrics"],
+                })
+                state["slots"][i] = None
+                if len(state["buffer"]) >= acfg.buffer_size:
+                    # finishers still in their slots deliver on a later
+                    # pass, carrying post-bump (larger) staleness
+                    return _aggregate(state)
+            _dispatch(state)
+
+    def async_round(state):
+        state = dict(state, slots=list(state["slots"]),
+                     buffer=list(state["buffer"]))
+        while True:
+            _dispatch(state)
+            metrics = _deliver_until_aggregate(state)
+            if metrics is not None:
+                return state, metrics
+
+    return async_round

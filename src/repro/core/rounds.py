@@ -108,6 +108,16 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     return jax.jit(round_fn)
 
 
+def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:
+    """The cohort the NEXT ``round_fn(state)`` call will sample, without
+    advancing the state.  Replays make_round_fn's rng splits -- kept here
+    so the split layout lives in exactly one module (used by straggler
+    accounting in benchmarks/examples)."""
+    _, k_sel, _ = jax.random.split(state["rng"], 3)
+    return jax.random.choice(k_sel, sim.n_clients, (sim.m_sampled,),
+                             replace=False)
+
+
 def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,
                eval_every: int = 10, log=None):
     """Drive K rounds; returns (state, history list of metric dicts)."""

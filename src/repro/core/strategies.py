@@ -18,8 +18,12 @@ Protocol (all pytrees are params-shaped unless noted):
   local_round(x, ctx, cs, batches, grad_fn)
                    -> (new_cs, upload, metrics);  ``batches`` is a pytree
                       stacked over a leading tau axis, scanned.
-  aggregate(x, ss, uploads, p) -> (new_x, new_ss, metrics); ``uploads``
-                      stacked over the sampled-client axis.
+  aggregate(x, ss, uploads, p, weights=None)
+                   -> (new_x, new_ss, metrics); ``uploads`` stacked over
+                      the sampled-client axis.  ``weights`` (optional,
+                      (m,)) are per-upload aggregation weights -- the
+                      async regime's staleness discounts; None keeps the
+                      uniform mean.  Overrides must accept the kwarg.
 
 ``grad_fn(params, minibatch) -> (loss, grads)``.
 """
@@ -50,6 +54,16 @@ def tree_mean0(tree: Pytree) -> Pytree:
     return tmap(lambda t: t.mean(0), tree)
 
 
+def tree_weighted_mean(tree: Pytree, w: jax.Array) -> Pytree:
+    """Weighted mean over the leading (client) axis: sum_i w_i t_i / sum_i
+    w_i.  Computed in float32 -- uploads may be low-precision (fp8) and the
+    weights are the async regime's staleness discounts."""
+    w = jnp.asarray(w, jnp.float32)
+    wn = w / w.sum()
+    return tmap(lambda t: jnp.tensordot(wn, t.astype(jnp.float32),
+                                        axes=(0, 0)), tree)
+
+
 @dataclass(frozen=True)
 class Strategy:
     eta: float = 0.01        # local learning rate
@@ -73,8 +87,12 @@ class Strategy:
     def broadcast(self, x: Pytree, server_state: Pytree) -> Pytree:
         return None
 
-    def aggregate(self, x, server_state, uploads, p):
-        delta = tree_mean0(uploads)
+    def aggregate(self, x, server_state, uploads, p, weights=None):
+        """``weights`` (optional, shape (m,)): per-upload aggregation
+        weights -- the async regime's staleness discounts.  ``None`` (the
+        synchronous regimes) keeps the uniform mean, bit-for-bit."""
+        delta = tree_mean0(uploads) if weights is None \
+            else tree_weighted_mean(uploads, weights)
         if self.server_momentum:
             mu = tmap(lambda m, d:
                       (self.server_momentum * m
@@ -171,9 +189,13 @@ class Scaffold(Strategy):
         }
         return {"c_i": c_i_new}, upload, {"local_loss": losses.mean()}
 
-    def aggregate(self, x, server_state, uploads, p):
-        dv = tree_mean0(uploads["dv"])
-        dc = tree_mean0(uploads["dc"])
+    def aggregate(self, x, server_state, uploads, p, weights=None):
+        if weights is None:
+            dv = tree_mean0(uploads["dv"])
+            dc = tree_mean0(uploads["dc"])
+        else:
+            dv = tree_weighted_mean(uploads["dv"], weights)
+            dc = tree_weighted_mean(uploads["dc"], weights)
         x = _axpy(self.server_lr, dv, x)
         # c += (m/n) mean(dc); doubles the uplink (the paper's 2x overhead)
         c = _axpy(p, dc, server_state["c"])

@@ -3,4 +3,5 @@ from repro.data.synthetic import (  # noqa: F401
     heterogeneity_stats,
     lm_client_batch,
     make_federated_classification,
+    make_federated_lm,
 )

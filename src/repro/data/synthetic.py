@@ -143,6 +143,17 @@ def heterogeneity_stats(ds: FedDataset) -> Dict[str, float]:
 # LM token streams (datacenter regime)
 # ---------------------------------------------------------------------------
 
+def _client_unigram_probs(vocab: int, client: int, seed: int,
+                          skew: float) -> np.ndarray:
+    """Client-skewed Zipf unigram distribution: shared Zipf(1.1) base,
+    client-specific head via a seeded permutation, sharpened by ``skew``."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    base = 1.0 / ranks ** 1.1
+    perm_rng = np.random.default_rng(np.random.SeedSequence([seed, client]))
+    probs = base[perm_rng.permutation(vocab)] ** skew
+    return probs / probs.sum()
+
+
 def lm_client_batch(*, vocab: int, n_clients: int, client: int, round_k: int,
                     tau: int, batch: int, seq_len: int, seed: int = 0,
                     skew: float = 2.0):
@@ -152,13 +163,24 @@ def lm_client_batch(*, vocab: int, n_clients: int, client: int, round_k: int,
     Returns dict(tokens (tau, b, S), labels (tau, b, S)) as numpy."""
     rng = np.random.default_rng(
         np.random.SeedSequence([seed, client, round_k]))
-    ranks = np.arange(1, vocab + 1, dtype=np.float64)
-    base = 1.0 / ranks ** 1.1
-    perm_rng = np.random.default_rng(np.random.SeedSequence([seed, client]))
-    perm = perm_rng.permutation(vocab)
-    probs = base[perm]  # client-specific head of the distribution
-    probs = probs ** skew
-    probs /= probs.sum()
+    probs = _client_unigram_probs(vocab, client, seed, skew)
     toks = rng.choice(vocab, size=(tau, batch, seq_len + 1), p=probs)
     return {"tokens": toks[..., :-1].astype(np.int32),
             "labels": toks[..., 1:].astype(np.int32)}
+
+
+def make_federated_lm(*, vocab: int, n_clients: int, per_client: int,
+                      seq_len: int, seed: int = 0, skew: float = 2.0):
+    """Materialized per-client LM corpus for the buffered-async regime:
+    same client-skewed Zipf unigrams as ``lm_client_batch`` but as fixed
+    arrays {'tokens': (n, Ni, S), 'labels': (n, Ni, S)} so the async
+    simulator can draw per-client minibatches by index."""
+    out_t, out_l = [], []
+    for c in range(n_clients):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, c, 0xF3D]))
+        probs = _client_unigram_probs(vocab, c, seed, skew)
+        toks = rng.choice(vocab, size=(per_client, seq_len + 1), p=probs)
+        out_t.append(toks[..., :-1])
+        out_l.append(toks[..., 1:])
+    return {"tokens": np.stack(out_t).astype(np.int32),
+            "labels": np.stack(out_l).astype(np.int32)}

@@ -10,21 +10,19 @@ from typing import Optional, Tuple
 
 import jax
 
-
-def _auto(n):
-    from jax.sharding import AxisType
-    return (AxisType.Auto,) * n
+from repro.compat import axis_types_auto, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes, axis_types=axis_types_auto(len(axes)))
 
 
 def make_smoke_mesh():
     """1-device mesh with production axis names (CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"),
+                     axis_types=axis_types_auto(2))
 
 
 @dataclass(frozen=True)

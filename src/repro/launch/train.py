@@ -1,4 +1,4 @@
-"""Datacenter-regime training driver (runs the real round loop).
+"""Training driver for the datacenter and buffered-async regimes.
 
 On the CPU container this runs reduced configs on a 1-device mesh with the
 same code path the production mesh uses (client axis, tau scan, delta-mean
@@ -6,6 +6,14 @@ aggregation); on TPU hardware it runs unmodified with the production mesh.
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --clients 2 --tau 4 --rounds 20 --batch 2 --seq 128
+
+``--regime async`` swaps the synchronous round loop for the buffered
+asynchronous regime (core/async_rounds.py): clients draw heterogeneous
+delays, the server aggregates staleness-discounted buffers:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --regime async --clients 8 --concurrent 4 --buffer 2 \
+      --delay 5 --rounds 20 --batch 2 --seq 64
 """
 from __future__ import annotations
 
@@ -20,9 +28,60 @@ import numpy as np
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
 from repro.configs import get_config
-from repro.core import FedDeper, STRATEGIES, make_round_step
-from repro.data import lm_client_batch
+from repro.core import (AsyncSimConfig, STRATEGIES, init_async_state,
+                        make_async_round_fn, make_round_step)
+from repro.core.federated import make_lm_grad_fn
+from repro.data import lm_client_batch, make_federated_lm
 from repro.models import init_model, transformer
+
+
+def run_async(cfg, strategy, args):
+    """Buffered-async LM training: heterogeneous client delays, versioned
+    global model, staleness-discounted aggregation."""
+    if cfg.frontend is not None:
+        raise SystemExit("--regime async supports token-only archs")
+    acfg = AsyncSimConfig(
+        n_clients=args.clients, m_concurrent=args.concurrent,
+        buffer_size=args.buffer, tau=args.tau, batch_size=args.batch,
+        alpha=args.alpha, delay=args.delay, delay_dist=args.delay_dist,
+        seed=args.seed)
+    data = {k: jnp.asarray(v) for k, v in make_federated_lm(
+        vocab=cfg.vocab_size, n_clients=args.clients,
+        per_client=args.per_client, seq_len=args.seq,
+        seed=args.seed).items()}
+    grad_fn = make_lm_grad_fn(cfg)
+    x = init_model(cfg, jax.random.PRNGKey(args.seed))
+    state = init_async_state(acfg, strategy, x)
+    round_fn = make_async_round_fn(acfg, strategy, grad_fn, data)
+
+    # checkpoint the model pytrees + rng at aggregation boundaries;
+    # in-flight slots/buffer are dropped, so a restart redispatches (the
+    # staleness clock restarts too -- same semantics as clients rejoining)
+    def ckpt_tree(s):
+        return (s["x"], s["clients"], s["pms"], s["server"], s["rng"])
+
+    start = 0
+    if args.ckpt_dir:
+        path = latest_checkpoint(args.ckpt_dir)
+        if path:
+            tree, meta = restore_checkpoint(path, ckpt_tree(state))
+            (state["x"], state["clients"], state["pms"], state["server"],
+             state["rng"]) = tree
+            start = state["round"] = state["version"] = meta["step"]
+            print(f"restored aggregation {start} from {path}")
+
+    t0 = time.time()
+    for k in range(start, args.rounds):
+        state, metrics = round_fn(state)
+        rec = {"round": k + 1,
+               **{m: float(v) for m, v in metrics.items()},
+               "elapsed_s": round(time.time() - t0, 2)}
+        print(json.dumps(rec), flush=True)
+        if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, k + 1, ckpt_tree(state))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.rounds, ckpt_tree(state))
+    return 0
 
 
 def main(argv=None):
@@ -43,6 +102,21 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    # buffered-async regime (core/async_rounds.py)
+    ap.add_argument("--regime", default="datacenter",
+                    choices=("datacenter", "async"))
+    ap.add_argument("--concurrent", type=int, default=4,
+                    help="async: clients training simultaneously")
+    ap.add_argument("--buffer", type=int, default=2,
+                    help="async: uploads per aggregation")
+    ap.add_argument("--alpha", type=float, default=0.5,
+                    help="async: staleness discount exponent")
+    ap.add_argument("--delay", type=float, default=5.0,
+                    help="async: mean client delay (0 = no stragglers)")
+    ap.add_argument("--delay-dist", default="lognormal",
+                    choices=("constant", "uniform", "lognormal"))
+    ap.add_argument("--per-client", type=int, default=64,
+                    help="async: LM sequences materialized per client")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -52,6 +126,9 @@ def main(argv=None):
     if args.strategy == "feddeper":
         kw.update(rho=args.rho, lam=args.lam)
     strategy = STRATEGIES[args.strategy](**kw)
+
+    if args.regime == "async":
+        return run_async(cfg, strategy, args)
 
     rng = jax.random.PRNGKey(args.seed)
     x = init_model(cfg, rng)

@@ -20,6 +20,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models.common import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
 
 NEG_INF = -2.0 ** 30  # large-but-finite; avoids NaNs in fully-masked rows
@@ -220,7 +221,7 @@ def _shard_map_decode(q, kc, vc, k_new, v_new, pos, *, cap, seq_shard):
                                            cap=cap, axis=axis)
         return out, k_, v_
 
-    return jax.shard_map(body, mesh=seq_shard.get("mesh"),
+    return shard_map(body, mesh=seq_shard.get("mesh"),
                          in_specs=(qspec, cspec, cspec, qspec, qspec, P()),
                          out_specs=(qspec, cspec, cspec))(
         q, kc, vc, k_new, v_new, pos)
@@ -462,6 +463,6 @@ def _mla_shard_map_decode(q_lat, q_rope, ckv, krope, valid, *, scale, cap,
         return _mla_decode_core(ql, qr, c, kr, val, scale=scale, cap=cap,
                                 axis=axis)
 
-    return jax.shard_map(body, mesh=seq_shard.get("mesh"),
+    return shard_map(body, mesh=seq_shard.get("mesh"),
                          in_specs=(qspec, qspec, cspec, cspec, P()),
                          out_specs=qspec)(q_lat, q_rope, ckv, krope, valid)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.models.common import activation
 from repro.models.moe import MoEAux, _capacity
 
@@ -65,7 +66,7 @@ def apply_moe_shardmap(cfg, params, x, *, data_axes=("data",),
     def body(xt, router_w, wg, wu, wd):
         # xt: (T_loc, d); wg/wu: (E_loc, d, f); wd: (E_loc, f, d)
         T_loc = xt.shape[0]
-        n_model = jax.lax.axis_size(model_axis)
+        n_model = axis_size(model_axis)
         E_loc = wg.shape[0]
         cap = _capacity(cfg, T_loc)  # per-token-shard capacity
         logits, probs, gates, eidx, flat_e, pos = _local_dispatch(
@@ -108,7 +109,7 @@ def apply_moe_shardmap(cfg, params, x, *, data_axes=("data",),
             stats = jax.lax.pmean(stats, a)
         return out, stats
 
-    sm = jax.shard_map(
+    sm = shard_map(
         body, mesh=mesh,
         in_specs=(P(tok_axes, None), P(), P(model_axis, None, None),
                   P(model_axis, None, None), P(model_axis, None, None)),

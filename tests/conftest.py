@@ -7,3 +7,12 @@ assert "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", "")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Minimal environment for subprocess-based tests.  The JAX_PLATFORMS pin
+# must survive the stripping: without it jax init probes accelerator
+# plugins and can block for minutes on CPU-only hosts.
+SUBPROC_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": "/usr/bin:/bin",
+    "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+}

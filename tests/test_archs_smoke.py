@@ -13,6 +13,17 @@ from repro.models import (decode_step, init_cache, init_model, loss_fn,
                           prefill)
 
 
+# compile-heavy reduced variants (tens of seconds each on CPU): their
+# train-step smoke runs only in the full (`-m ""`) suite; prefill/decode
+# coverage for them stays in the quick suite
+_HEAVY_ARCHS = {"deepseek-v3-671b", "jamba-v0.1-52b"}
+
+
+def _mark_heavy(archs, heavy=_HEAVY_ARCHS):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in heavy else a
+            for a in archs]
+
+
 def make_batch(cfg, rng, B=2, S=16):
     ks = jax.random.split(rng, 3)
     batch = {
@@ -25,7 +36,7 @@ def make_batch(cfg, rng, B=2, S=16):
     return batch
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("arch", _mark_heavy(ALL_ARCHS))
 def test_smoke_train_step(arch):
     cfg = get_config(arch).reduced()
     assert cfg.num_layers <= 3 and cfg.d_model <= 512

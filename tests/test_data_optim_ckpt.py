@@ -1,21 +1,21 @@
-"""Substrate tests: synthetic data pipeline, optimizers, checkpointing."""
+"""Substrate tests: synthetic data pipeline, optimizers, checkpointing.
+
+Hypothesis-free on purpose -- the property-based variants live in
+test_property.py behind its module-level ``pytest.importorskip``, so this
+module keeps collecting (and running) where ``hypothesis`` is absent.
+"""
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.checkpoint import (latest_checkpoint, restore_checkpoint,
                               save_checkpoint)
 from repro.data import (heterogeneity_stats, lm_client_batch,
                         make_federated_classification)
 from repro.optim import adamw, cosine_schedule, linear_warmup, sgd
-
-settings.register_profile("ci2", max_examples=20, deadline=None)
-settings.load_profile("ci2")
 
 
 # ---------------------------------------------------------------------- data
@@ -35,16 +35,6 @@ def test_shards_split_is_heterogeneous():
     # each client sees few distinct labels
     for i in range(10):
         assert len(np.unique(ds.train["y"][i])) <= 4
-
-
-@given(st.floats(0.05, 10.0), st.integers(0, 20))
-def test_dirichlet_alpha_controls_skew(alpha, seed):
-    ds = make_federated_classification(n_clients=8, per_client=128,
-                                       split="dirichlet", alpha=alpha,
-                                       seed=seed)
-    stats = heterogeneity_stats(ds)
-    assert 0.0 <= stats["mean_tv"] <= 1.0
-    assert ds.train["x"].shape == (8, 128, 784)
 
 
 def test_dirichlet_more_skew_than_high_alpha():

@@ -6,13 +6,16 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     os.environ["REPRO_MOE_SHARDMAP"] = "0"   # toggled per-call below
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import axis_types_auto, make_mesh, set_mesh
     from repro.configs import get_config
     from repro.models import moe as moe_mod
     from repro.models.moe_shardmap import apply_moe_shardmap
@@ -20,13 +23,13 @@ _SUBPROC = textwrap.dedent("""
     cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
                               num_experts=4, experts_per_token=2,
                               capacity_factor=8.0, d_model=64, moe_d_ff=32)
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 2), ("data", "model"),
+                     axis_types=axis_types_auto(2))
     params = moe_mod.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
     B, S = 4, 16
     x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.3
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ref_out, ref_aux = jax.jit(
             lambda p, x: moe_mod.apply_moe(cfg, p, x))(params, x)
         sm_out, sm_aux = jax.jit(
@@ -46,7 +49,7 @@ _SUBPROC = textwrap.dedent("""
 def test_moe_shardmap_matches_pjit_path():
     out = subprocess.run([sys.executable, "-c", _SUBPROC],
                          capture_output=True, text=True,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                         env=_SUBPROC_ENV,
                          timeout=560)
     assert "MOE_SHARDMAP_OK" in out.stdout, (out.stdout[-1000:],
                                              out.stderr[-3000:])

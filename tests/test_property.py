@@ -1,9 +1,13 @@
 """Hypothesis property tests on system invariants."""
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.kernels.ref import deper_update_ref
 from repro.models.common import apply_rope, cross_entropy, softcap
@@ -76,6 +80,17 @@ def test_softcap_bounds(cap, a):
     assert np.all(np.diff(out[order]) >= -1e-6)
 
 
+@given(st.floats(0.05, 10.0), st.integers(0, 20))
+def test_dirichlet_alpha_controls_skew(alpha, seed):
+    from repro.data import heterogeneity_stats, make_federated_classification
+    ds = make_federated_classification(n_clients=8, per_client=128,
+                                       split="dirichlet", alpha=alpha,
+                                       seed=seed)
+    stats = heterogeneity_stats(ds)
+    assert 0.0 <= stats["mean_tv"] <= 1.0
+    assert ds.train["x"].shape == (8, 128, 784)
+
+
 @given(st.integers(1, 6), st.integers(0, 100))
 def test_aggregation_mean_identity(c, seed):
     """If every client uploads the same delta, x moves by exactly delta."""
@@ -88,6 +103,15 @@ def test_aggregation_mean_identity(c, seed):
     np.testing.assert_allclose(np.asarray(new_x["w"]),
                                np.asarray(x["w"] + delta), rtol=1e-5,
                                atol=1e-6)
+
+
+@given(st.integers(0, 50), st.floats(0.0, 3.0))
+def test_staleness_weights_bounded_and_monotone(s, alpha):
+    """Async staleness discounts live in (0, 1] and never rank a staler
+    upload above a fresher one."""
+    from repro.core import staleness_weights
+    w = np.asarray(staleness_weights([s, s + 1], alpha))
+    assert 0.0 < w[1] <= w[0] <= 1.0
 
 
 @given(st.integers(2, 8), st.integers(1, 8), st.integers(0, 50))

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
 from repro.models.attention import decode_attention
 
 
@@ -79,6 +80,6 @@ _SUBPROC = textwrap.dedent("""
 def test_seq_sharded_decode_four_shards():
     out = subprocess.run([sys.executable, "-c", _SUBPROC],
                          capture_output=True, text=True,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                         env=_SUBPROC_ENV,
                          timeout=560)
     assert "SEQ_DECODE_OK" in out.stdout, out.stderr[-3000:]

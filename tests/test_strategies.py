@@ -140,6 +140,70 @@ def test_feddeper_fp8_uploads_still_converge(data):
     assert l8 < lf * 1.5 + 0.1, (lf, l8)
 
 
+def test_feddeper_pallas_matches_reference_local_round():
+    """use_pallas=True routes the alternating update through the fused
+    deper_update kernel (interpret mode on CPU); one local round on a
+    small pytree must match the pure-jnp path."""
+    params = {"w": jnp.linspace(-1.0, 1.0, 24).reshape(4, 6),
+              "b": jnp.linspace(0.5, -0.5, 6)}
+    target = {"w": jnp.ones((4, 6)) * 0.3, "b": jnp.zeros(6)}
+
+    def quad_grad_fn(p, mb):
+        def loss(p):
+            return sum(jnp.sum((pi - ti) ** 2 * mb["scale"])
+                       for pi, ti in zip(jax.tree.leaves(p),
+                                         jax.tree.leaves(target)))
+        l, g = jax.value_and_grad(loss)(p)
+        return l, g
+
+    batches = {"scale": jnp.asarray([1.0, 0.7, 1.3])}  # tau = 3
+    cs = {"v": tmap_like(params, 0.9)}
+    out = {}
+    for use_pallas in (False, True):
+        strat = FedDeper(eta=0.05, rho=0.03, lam=0.5,
+                         use_pallas=use_pallas)
+        new_cs, upload, metrics = strat.local_round(
+            params, None, cs, batches, quad_grad_fn)
+        out[use_pallas] = (new_cs["v"], upload)
+        assert np.isfinite(float(metrics["local_loss"]))
+    for ref, ker in zip(jax.tree.leaves(out[False]),
+                        jax.tree.leaves(out[True])):
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def tmap_like(tree, scale):
+    return jax.tree.map(lambda t: t * scale, tree)
+
+
+def test_feddeper_fp8_e4m3_upload_roundtrip(data):
+    """upload_dtype='float8_e4m3fn' quantizes the uploaded deltas to 3
+    mantissa bits; the aggregated global model must stay within e4m3
+    quantization error of the full-precision run after one round."""
+    s_full, _ = run(FedDeper(eta=0.05, rho=0.03, lam=0.5), data, rounds=1)
+    s_fp8, _ = run(FedDeper(eta=0.05, rho=0.03, lam=0.5,
+                            upload_dtype="float8_e4m3fn"), data, rounds=1)
+    x0 = init_classifier(CFG, jax.random.PRNGKey(7))
+    for full, fp8, x0l in zip(jax.tree.leaves(s_full["x"]),
+                              jax.tree.leaves(s_fp8["x"]),
+                              jax.tree.leaves(x0)):
+        delta = np.asarray(full) - np.asarray(x0l)
+        err = np.abs(np.asarray(fp8) - np.asarray(full))
+        # e4m3: 3-bit mantissa -> relative step 2^-3, plus subnormal floor
+        tol = np.abs(delta) * 2.0 ** -3 + 2.0 ** -9
+        assert (err <= tol + 1e-7).all(), float((err - tol).max())
+    # dtype actually reaches the wire: the upload leaves are e4m3
+    strat = FedDeper(eta=0.05, rho=0.03, lam=0.5,
+                     upload_dtype="float8_e4m3fn")
+    x = init_classifier(CFG, jax.random.PRNGKey(7))
+    batches = tmap_like({"x": data["x"][0, :8][None].repeat(2, 0),
+                         "y": data["y"][0, :8][None].repeat(2, 0)}, 1)
+    _, upload, _ = strat.local_round(x, None, strat.client_init(x),
+                                    batches, grad_fn)
+    for leaf in jax.tree.leaves(upload):
+        assert leaf.dtype == jnp.dtype("float8_e4m3fn")
+
+
 def test_server_momentum_accelerates_or_matches(data):
     """Beyond-paper: server momentum (SlowMo/FedAvgM family) composes with
     FedDeper -- the momentum state accumulates and the run stays stable."""

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
 from repro.configs import get_config
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (FedAvg, FedDeper, SimConfig, init_sim_state,
@@ -123,10 +124,27 @@ def test_train_cli_entrypoint():
         [sys.executable, "-m", "repro.launch.train", "--arch",
          "llama3.2-3b", "--reduced", "--clients", "2", "--tau", "2",
          "--rounds", "3", "--batch", "2", "--seq", "32"],
-        capture_output=True, text=True, env={"PYTHONPATH": "src",
-                                             "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, env=_SUBPROC_ENV,
         cwd=".", timeout=560)
     assert out.returncode == 0, out.stderr[-2000:]
     lines = [json.loads(l) for l in out.stdout.strip().splitlines()]
     assert lines[-1]["round"] == 3
     assert np.isfinite(lines[-1]["local_loss"])
+
+
+def test_train_cli_async_entrypoint():
+    """The buffered-async regime through the same CLI (tiny settings)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "llama3.2-3b", "--reduced", "--regime", "async", "--clients", "4",
+         "--concurrent", "2", "--buffer", "2", "--delay", "3", "--tau", "2",
+         "--rounds", "3", "--batch", "2", "--seq", "32",
+         "--per-client", "8"],
+        capture_output=True, text=True, env=_SUBPROC_ENV,
+        cwd=".", timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    lines = [json.loads(l) for l in out.stdout.strip().splitlines()]
+    assert lines[-1]["round"] == 3
+    assert lines[-1]["version"] == 3
+    assert np.isfinite(lines[-1]["local_loss"])
+    assert lines[-1]["sim_time"] > 0
