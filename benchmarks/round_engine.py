@@ -1,0 +1,258 @@
+"""Round-engine benchmark: the tracked perf baseline for the hot path.
+
+Times one jitted round (sync) / one buffered aggregation (async) for all
+four strategies, and for FedDeper both sides of every fusion seam the
+round engine has:
+
+* ``*_unfused``        -- the reference engine: two serial grad passes per
+                          local step, per-step tree-map (or per-LEAF
+                          Pallas launch) updates, undonated round buffers;
+* ``*_fused``          -- the fused engine: one joint twin-gradient pass
+                          (``twin_grad_fn``), fused y/v update, donated
+                          round state;
+* ``*_pallas_unfused`` -- pre-engine Pallas path: one launch per pytree
+                          leaf per step (interpret emulation off-TPU);
+* ``*_pallas_fused``   -- single whole-tree launch per step with the
+                          mixing/upload tail emitted by the final launch.
+
+Every run rewrites ``BENCH_round_engine.json`` at the repo root so each
+PR leaves a perf trajectory.  Schema (validated by ``validate_bench``):
+
+    { bench_name: { "us_per_round": float,        # best-of-reps mean
+                    "peak_bytes":   int | null,   # device peak, if known
+                    "config":       { ... } } }   # exact knobs + speedups
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+import jax
+
+from benchmarks.common import build_task, csv_row
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
+                        SimConfig, init_async_state, init_sim_state,
+                        make_async_round_fn, make_round_fn, twin_grad_fn)
+from repro.models import init_classifier
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_round_engine.json"
+
+# the default quick-bench operating point: the paper's cross-silo setting
+# (MLP on MNIST-like data, n=10 full participation, tau=5 local steps)
+QUICK = dict(n=10, m=10, tau=5, batch=32)
+FULL = dict(n=100, m=20, tau=10, batch=32)
+
+
+def _peak_bytes() -> Optional[int]:
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            return int(stats["peak_bytes_in_use"])
+    except Exception:  # noqa: BLE001  (backend without memory stats)
+        pass
+    return None
+
+
+class _Prepared:
+    """A compiled bench: round_fn plus its rolling state.  The warmup
+    round both compiles and (donating engines) consumes the init state,
+    so every timed block continues from post-warmup state like a real
+    run."""
+
+    def __init__(self, round_fn, state, cfg):
+        self.round_fn, self.cfg = round_fn, cfg
+        self.state, _ = round_fn(state)
+        jax.block_until_ready(jax.tree.leaves(self.state["x"])[0])
+        self.best = float("inf")
+        self.peak_bytes = None
+
+    def block(self, rounds: int) -> None:
+        t0 = time.perf_counter()
+        s = self.state
+        for _ in range(rounds):
+            s, _ = self.round_fn(s)
+        jax.block_until_ready(jax.tree.leaves(s["x"])[0])
+        self.best = min(self.best, (time.perf_counter() - t0) / rounds)
+        self.state = s
+
+    @property
+    def us(self) -> float:
+        return 1e6 * self.best
+
+
+def _prep_sync(task, x0, scale, strategy, *, donate, twin):
+    sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
+                    tau=scale["tau"], batch_size=scale["batch"], seed=0)
+    grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
+    rf = make_round_fn(sim, strategy, grad_fn, task["data"], donate=donate)
+    cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
+               twin_grads=twin, **scale)
+    for k in ("use_pallas", "fuse_grads"):
+        if hasattr(strategy, k):
+            cfg[k] = getattr(strategy, k)
+    return _Prepared(rf, init_sim_state(sim, strategy, x0), cfg)
+
+
+def _prep_async(task, x0, scale, strategy, *, donate, twin):
+    acfg = AsyncSimConfig(n_clients=scale["n"], m_concurrent=scale["m"],
+                          buffer_size=scale["m"], tau=scale["tau"],
+                          batch_size=scale["batch"], alpha=0.5, delay=10.0,
+                          delay_dist="lognormal", seed=0)
+    grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
+    arf = make_async_round_fn(acfg, strategy, grad_fn, task["data"],
+                              donate=donate)
+    cfg = dict(regime="async", model=MLP_MNIST.name, donate=donate,
+               twin_grads=twin, alpha=acfg.alpha, delay=acfg.delay, **scale)
+    for k in ("use_pallas", "fuse_grads"):
+        if hasattr(strategy, k):
+            cfg[k] = getattr(strategy, k)
+    return _Prepared(arf, init_async_state(acfg, strategy, x0), cfg)
+
+
+def validate_bench(obj) -> None:
+    """Raise ValueError unless ``obj`` matches the BENCH schema."""
+    if not isinstance(obj, dict) or not obj:
+        raise ValueError("bench json must be a non-empty dict")
+    for name, entry in obj.items():
+        if not isinstance(name, str):
+            raise ValueError(f"bench name {name!r} is not a string")
+        if not isinstance(entry, dict):
+            raise ValueError(f"{name}: entry must be a dict")
+        missing = {"us_per_round", "peak_bytes", "config"} - set(entry)
+        if missing:
+            raise ValueError(f"{name}: missing keys {sorted(missing)}")
+        us = entry["us_per_round"]
+        if not isinstance(us, (int, float)) or us <= 0:
+            raise ValueError(f"{name}: us_per_round must be positive")
+        pb = entry["peak_bytes"]
+        if pb is not None and (not isinstance(pb, int) or pb < 0):
+            raise ValueError(f"{name}: peak_bytes must be null or int >= 0")
+        if not isinstance(entry["config"], dict):
+            raise ValueError(f"{name}: config must be a dict")
+
+
+ETA = dict(eta=0.05)
+DEPER = dict(eta=0.05, rho=0.03, lam=0.5)
+
+
+def _benches():
+    """name -> (kind, strategy, opts).  FedDeper appears once per engine
+    seam; the other strategies track the plain (donated) engine."""
+    return {
+        "fedavg_sync": ("sync", FedAvg(**ETA), dict(donate=True,
+                                                    twin=False)),
+        "fedprox_sync": ("sync", FedProx(mu=1.0, **ETA), dict(donate=True,
+                                                              twin=False)),
+        "scaffold_sync": ("sync", Scaffold(**ETA), dict(donate=True,
+                                                        twin=False)),
+        "feddeper_sync_unfused": (
+            "sync", FedDeper(fuse_grads=False, **DEPER),
+            dict(donate=False, twin=False)),
+        "feddeper_sync_fused": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True)),
+        "feddeper_sync_pallas_unfused": (
+            "sync", FedDeper(use_pallas=True, fuse_grads=False, **DEPER),
+            dict(donate=False, twin=False, slow_pallas=True)),
+        "feddeper_sync_pallas_fused": (
+            "sync", FedDeper(use_pallas=True, fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True)),
+        "feddeper_async_unfused": (
+            "async", FedDeper(fuse_grads=False, **DEPER),
+            dict(donate=False, twin=False)),
+        "feddeper_async_fused": (
+            "async", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True)),
+    }
+
+
+# fused rows whose config records the speedup over their unfused twin
+_SPEEDUP_PAIRS = {
+    "feddeper_sync_fused": "feddeper_sync_unfused",
+    "feddeper_sync_pallas_fused": "feddeper_sync_pallas_unfused",
+    "feddeper_async_fused": "feddeper_async_unfused",
+}
+
+
+def round_engine_rows(quick: bool = True, *,
+                      include: Optional[Iterable[str]] = None,
+                      rounds: Optional[int] = None, reps: int = 4,
+                      out_path: Optional[Path] = BENCH_PATH) -> List[str]:
+    """Run the engine benches, rewrite BENCH_round_engine.json (unless
+    ``out_path=None``), return CSV rows.  ``include`` limits to a subset
+    (CI smoke); ``rounds`` overrides the per-bench round count."""
+    scale = QUICK if quick else FULL
+    task = build_task(MLP_MNIST, scale["n"])
+    x0 = init_classifier(MLP_MNIST, jax.random.PRNGKey(42))
+    prepared: Dict[str, _Prepared] = {}
+    n_rounds: Dict[str, int] = {}
+    for name, (kind, strategy, opts) in _benches().items():
+        if include is not None and name not in include:
+            continue
+        # the per-leaf interpret path is ~10x a treemap round on CPU:
+        # keep its timed block short so the bench stays runnable
+        n_rounds[name] = rounds if rounds is not None else \
+            (3 if opts.get("slow_pallas") else (12 if quick else 30))
+        if kind == "sync":
+            prepared[name] = _prep_sync(task, x0, scale, strategy,
+                                        donate=opts["donate"],
+                                        twin=opts["twin"])
+        else:
+            prepared[name] = _prep_async(task, x0, scale, strategy,
+                                         donate=opts["donate"],
+                                         twin=opts["twin"])
+    # fused/unfused pairs run INTERLEAVED rep blocks so machine-speed
+    # drift between the two sides cancels out of the tracked ratio;
+    # everything else runs its reps back to back
+    # peak_bytes is read right after a bench's own timed blocks; device
+    # peaks are cumulative (no portable reset), so the value means "peak
+    # observed by the time this bench finished" -- null off-TPU/GPU
+    paired = set()
+    for fused, unfused in _SPEEDUP_PAIRS.items():
+        if fused in prepared and unfused in prepared:
+            paired.update((fused, unfused))
+            for _ in range(reps):
+                prepared[unfused].block(n_rounds[unfused])
+                prepared[fused].block(n_rounds[fused])
+            prepared[unfused].peak_bytes = prepared[fused].peak_bytes = \
+                _peak_bytes()
+    for name, p in prepared.items():
+        if name not in paired:
+            for _ in range(reps):
+                p.block(n_rounds[name])
+            p.peak_bytes = _peak_bytes()
+
+    results: Dict[str, Dict] = {}
+    for name, p in prepared.items():
+        p.cfg["rounds"] = n_rounds[name]
+        results[name] = {"us_per_round": p.us, "peak_bytes": p.peak_bytes,
+                         "config": p.cfg}
+
+    rows = []
+    for name, entry in results.items():
+        derived = {"rounds": entry["config"]["rounds"]}
+        ref = _SPEEDUP_PAIRS.get(name)
+        if ref and ref in results:
+            speedup = results[ref]["us_per_round"] / entry["us_per_round"]
+            entry["config"]["speedup_vs_unfused"] = round(speedup, 3)
+            derived["speedup_vs_unfused"] = speedup
+        rows.append(csv_row(f"round_engine/{name}", entry["us_per_round"],
+                            derived))
+
+    if out_path is not None and results:
+        written = results
+        if include is not None and out_path.exists():
+            # subset runs (CI smoke) refresh their rows in place, keeping
+            # the rest of the tracked baseline intact
+            try:
+                written = json.loads(out_path.read_text())
+            except json.JSONDecodeError:
+                written = {}
+            written.update(results)
+        validate_bench(written)
+        out_path.write_text(json.dumps(written, indent=2, sort_keys=True)
+                            + "\n")
+    return rows

@@ -18,9 +18,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import async_bench, kernel_bench, paper_figs, roofline
+    from benchmarks import (async_bench, kernel_bench, paper_figs,
+                            roofline, round_engine)
     benches = {
         "async": lambda: async_bench.async_vs_sync(quick),
+        "round_engine": lambda: round_engine.round_engine_rows(quick),
         "fig1": lambda: paper_figs.fig1_heterogeneity(quick),
         "fig3": lambda: paper_figs.fig3_hyperparams(quick),
         "fig4_6": lambda: paper_figs.fig4_6_convergence(quick),

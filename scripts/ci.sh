@@ -11,3 +11,36 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q -m "not slow" "$@"
+
+# Quick-mode round-engine bench smoke: run the headline fused-vs-unfused
+# pairs end to end and fail on schema errors.  BENCH_round_engine.json is
+# regenerated only when missing -- an existing tracked baseline (rounds=12,
+# reps=3) is never clobbered with the smoke's 2-round samples; those go to
+# a scratch file that is schema-validated alongside the checked-in one.
+# A full baseline refresh is `python -m benchmarks.run --only round_engine`.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'PY'
+import json
+import tempfile
+from pathlib import Path
+
+from benchmarks.round_engine import (BENCH_PATH, round_engine_rows,
+                                     validate_bench)
+
+scratch = None if not BENCH_PATH.exists() else \
+    Path(tempfile.NamedTemporaryFile(suffix=".json", delete=False).name)
+try:
+    rows = round_engine_rows(
+        quick=True, rounds=2, reps=1, out_path=scratch or BENCH_PATH,
+        include=("feddeper_sync_unfused", "feddeper_sync_fused",
+                 "feddeper_sync_pallas_unfused",
+                 "feddeper_sync_pallas_fused"))
+    for r in rows:
+        print(r)
+    validate_bench(json.loads(BENCH_PATH.read_text()))
+    if scratch is not None:
+        validate_bench(json.loads(scratch.read_text()))
+finally:
+    if scratch is not None:
+        scratch.unlink(missing_ok=True)
+print(f"ci.sh: bench smoke OK ({BENCH_PATH} schema valid)")
+PY

@@ -6,6 +6,8 @@ from repro.core.strategies import (  # noqa: F401
     Scaffold,
     STRATEGIES,
     Strategy,
+    tree_weighted_mean,
+    twin_grad_fn,
 )
 from repro.core.async_rounds import (  # noqa: F401
     AsyncSimConfig,
@@ -15,12 +17,15 @@ from repro.core.async_rounds import (  # noqa: F401
 )
 from repro.core.rounds import (  # noqa: F401
     SimConfig,
+    broadcast_client_store,
+    gather_client_state,
     init_sim_state,
     make_global_eval,
     make_personal_eval,
     make_round_fn,
     peek_sampled_clients,
     run_rounds,
+    scatter_client_rows,
 )
 from repro.core.federated import (  # noqa: F401
     make_decode_step,

@@ -29,6 +29,7 @@ See DESIGN.md §4 for buffer semantics and the staleness-weighting math.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Dict
 
@@ -36,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rounds import _personal_model
+from repro.core.rounds import (_personal_model, broadcast_client_store,
+                               gather_client_state, scatter_client_rows)
 from repro.core.strategies import Strategy, tmap
 
 Pytree = Any
@@ -98,13 +100,13 @@ def staleness_weights(staleness, alpha: float) -> jax.Array:
 
 def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree):
     """Async simulation state: the jax parts mirror ``init_sim_state``
-    (same PRNG stream); scheduling bookkeeping lives host-side."""
-    client = strategy.client_init(x)
-    clients = tmap(lambda t: jnp.broadcast_to(
-        t, (acfg.n_clients,) + t.shape).copy(), client) \
-        if jax.tree.leaves(client) else {}
-    pms = tmap(lambda t: jnp.broadcast_to(
-        t, (acfg.n_clients,) + t.shape).copy(), x)
+    (same PRNG stream, same store layout via the shared helpers);
+    scheduling bookkeeping lives host-side.  ``x`` is copied so the
+    donating aggregate never invalidates caller-held params."""
+    x = tmap(jnp.copy, x)
+    clients = broadcast_client_store(strategy.client_init(x),
+                                     acfg.n_clients)
+    pms = broadcast_client_store(x, acfg.n_clients)
     return {
         "x": x,
         "clients": clients,
@@ -121,19 +123,34 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree):
 
 
 def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
-                        data: Dict[str, jax.Array]):
+                        data: Dict[str, jax.Array], *, donate: bool = True):
     """Returns ``async_round(state) -> (state, metrics)`` advancing the
     event simulation until exactly one buffered aggregation completes --
     the same contract as ``make_round_fn``, so ``run_rounds`` drives it.
 
-    data: per-client arrays with leading (n_clients, N_i) dims."""
+    data: per-client arrays with leading (n_clients, N_i) dims.
+
+    ``donate=True`` (default) mirrors ``make_round_fn``: the global model
+    and the client/pms stores update in place, so a state passed to
+    ``async_round`` is CONSUMED -- keep using only the returned state.
+    ``donate=False`` restores the copying semantics bit-for-bit."""
     n, tau, b = acfg.n_clients, acfg.tau, acfg.batch_size
     n_i = jax.tree.leaves(data)[0].shape[1]
+    _donate = (lambda *a: functools.partial(jax.jit, donate_argnums=a)) \
+        if donate else (lambda *a: jax.jit)
+    _scatter = scatter_client_rows if donate else \
+        jax.jit(lambda store, i, nw: tmap(lambda a, b_: a.at[i].set(b_),
+                                          store, nw))
 
-    @jax.jit
+    @_donate(0, 2)
     def train_cohort(xs, ctxs, cs, batches):
         """tau local steps for a cohort of dispatched clients; every operand
         carries the cohort axis (each client sees its own pulled model).
+
+        ``xs`` (the per-cohort model broadcast) and ``cs`` (the gathered
+        client state) are freshly materialized per dispatch and donated:
+        their buffers are reused for the cohort-shaped outputs (uploads/
+        pms and new_cs), halving the transient dispatch allocation.
 
         Retraces once per distinct cohort size f in [1, m_concurrent]
         (in practice the first full dispatch plus the small refill sizes
@@ -150,11 +167,15 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
 
         return jax.vmap(per_client)(xs, ctxs, cs, batches)
 
-    @jax.jit
+    # x and server are donated: the versioned global model updates in
+    # place at every aggregation (_aggregate immediately rebinds
+    # state["x"]/state["server"] to the outputs, so the consumed inputs
+    # are never touched again)
+    @_donate(0, 1)
     def agg_plain(x, server, uploads):
         return strategy.aggregate(x, server, uploads, acfg.p)
 
-    @jax.jit
+    @_donate(0, 1)
     def agg_weighted(x, server, uploads, w):
         return strategy.aggregate(x, server, uploads, acfg.p, weights=w)
 
@@ -179,8 +200,7 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         bidx = jax.random.randint(k_batch, (f, tau, b), 0, n_i)
         batches = tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx),
                        data)
-        cs = tmap(lambda t: t[idx], state["clients"]) \
-            if jax.tree.leaves(state["clients"]) else {}
+        cs = gather_client_state(state["clients"], idx)
         ctx = strategy.broadcast(state["x"], state["server"])
         bcast = lambda t: jnp.broadcast_to(t, (f,) + t.shape)  # noqa: E731
         new_cs, uploads, pms, metrics = train_cohort(
@@ -244,13 +264,10 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
                 if s is None or s["finish_t"] > state["t"]:
                     continue
                 new_cs, upload, pm = s["payload"]
-                c = s["client"]
+                c = jnp.int32(s["client"])
                 if jax.tree.leaves(state["clients"]):
-                    state["clients"] = tmap(
-                        lambda all_, nw: all_.at[c].set(nw),
-                        state["clients"], new_cs)
-                state["pms"] = tmap(lambda all_, nw: all_.at[c].set(nw),
-                                    state["pms"], pm)
+                    state["clients"] = _scatter(state["clients"], c, new_cs)
+                state["pms"] = _scatter(state["pms"], c, pm)
                 state["buffer"].append({
                     "upload": upload,
                     "staleness": state["version"] - s["version"],

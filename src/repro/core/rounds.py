@@ -4,6 +4,17 @@ Reproduces the paper's experiments (n=10 cross-silo / n=100 cross-device,
 client sampling, non-i.i.d splits) on a single host.  The whole round --
 sampling, gather, tau local steps per selected client, scatter, aggregate --
 is one jitted function.
+
+Round buffers are DONATED by default (``make_round_fn(..., donate=True)``):
+the state pytree -- dominated by the ``n_clients x params`` client/
+personal-model stores -- is consumed by each jitted round call and its
+buffers are reused for the output state, so the scatter updates in place
+instead of doubling peak memory every round.  The contract that donation
+imposes on callers: a state that has been passed to ``round_fn`` is dead
+(its arrays are deleted); keep using only the returned state.
+``init_sim_state`` defensively copies ``x`` so the caller's own params
+survive round 1.  ``donate=False`` restores the copying behaviour
+bit-for-bit (tested).
 """
 from __future__ import annotations
 
@@ -32,14 +43,40 @@ class SimConfig:
         return self.m_sampled / self.n_clients
 
 
+def broadcast_client_store(template: Pytree, n: int) -> Pytree:
+    """Per-client store from a single-client template: leading n axis,
+    materialized (the stores are scattered into every round).  Shared by
+    the sync and async regimes.  Stateless strategies ({}) stay {}."""
+    if not jax.tree.leaves(template):
+        return {}
+    return tmap(lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(),
+                template)
+
+
+def gather_client_state(clients: Pytree, idx: jax.Array) -> Pytree:
+    """Rows ``idx`` of the client store; {} for stateless strategies --
+    the one empty-client-state path for both regimes."""
+    if not jax.tree.leaves(clients):
+        return {}
+    return tmap(lambda t: t[idx], clients)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def scatter_client_rows(store: Pytree, idx, new: Pytree) -> Pytree:
+    """``store.at[idx].set(new)`` with the store DONATED, so the
+    ``n_clients x params`` buffer updates in place instead of being
+    copied per call (the async regime's eager delivery path)."""
+    return tmap(lambda all_, nw: all_.at[idx].set(nw), store, new)
+
+
 def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree):
-    """Returns the full simulation state pytree."""
-    client = strategy.client_init(x)
-    clients = tmap(lambda t: jnp.broadcast_to(t, (sim.n_clients,) + t.shape)
-                   .copy(), client) if jax.tree.leaves(client) else {}
+    """Returns the full simulation state pytree.  ``x`` is copied: the
+    state owns every buffer it holds, so donating rounds never invalidate
+    caller-held params."""
+    x = tmap(jnp.copy, x)
+    clients = broadcast_client_store(strategy.client_init(x), sim.n_clients)
     # personalized-model store (Fig. 7): last local model per client
-    pms = tmap(lambda t: jnp.broadcast_to(t, (sim.n_clients,) + t.shape)
-               .copy(), x)
+    pms = broadcast_client_store(x, sim.n_clients)
     return {
         "x": x,
         "clients": clients,
@@ -59,9 +96,14 @@ def _personal_model(strategy: Strategy, x, cs, upload):
 
 
 def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
-                  data: Dict[str, jax.Array]):
+                  data: Dict[str, jax.Array], *, donate: bool = True):
     """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
-    {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state)."""
+    {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state).
+
+    ``donate=True`` donates the state pytree into the jitted call
+    (``donate_argnums``) -- the client/pms stores update in place; the
+    passed-in state must not be reused afterwards.  ``donate=False``
+    keeps the old copying semantics, bit-for-bit."""
     n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
     n_i = jax.tree.leaves(data)[0].shape[1]
 
@@ -70,9 +112,7 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
         idx = jax.random.choice(k_sel, n, (m,), replace=False)  # (m,)
 
         # gather sampled client state + their data
-        cs = tmap(lambda t: t[idx], state["clients"]) \
-            if jax.tree.leaves(state["clients"]) else \
-            [{} for _ in range(1)][0]
+        cs = gather_client_state(state["clients"], idx)
         bidx = jax.random.randint(k_batch, (m, tau, b), 0, n_i)
         batches = tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx),
                        data)  # (m, tau, b, ...)
@@ -105,6 +145,8 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
             "rng": rng, "round": state["round"] + 1,
         }, metrics
 
+    if donate:
+        return jax.jit(round_fn, donate_argnums=(0,))
     return jax.jit(round_fn)
 
 
@@ -112,7 +154,8 @@ def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:
     """The cohort the NEXT ``round_fn(state)`` call will sample, without
     advancing the state.  Replays make_round_fn's rng splits -- kept here
     so the split layout lives in exactly one module (used by straggler
-    accounting in benchmarks/examples)."""
+    accounting in benchmarks/examples).  Call BEFORE handing the state to
+    a donating round_fn."""
     _, k_sel, _ = jax.random.split(state["rng"], 3)
     return jax.random.choice(k_sel, sim.n_clients, (sim.m_sampled,),
                              replace=False)
@@ -137,19 +180,31 @@ def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,
 
 def make_global_eval(apply_loss_fn, test_data, batch: int = 512):
     """apply_loss_fn(params, batch)->(loss, metrics w/ acc).  Full-split
-    eval of the global model."""
+    eval of the global model.
+
+    The split is reshaped to (n_batches, batch, ...) once and scanned, so
+    compile time is independent of ``n_total // batch`` (the old Python-
+    unrolled loop re-traced the loss once per batch).  Same batches as
+    before: trailing remainder dropped, whole split in one batch when
+    n_total < batch."""
     n_total = jax.tree.leaves(test_data)[0].shape[0]
-    n_batches = max(1, n_total // batch)
+    if n_total == 0:
+        raise ValueError("make_global_eval: empty eval split (the old "
+                         "Python-loop version deferred this to a NaN at "
+                         "call time)")
+    b = min(batch, n_total)
+    n_batches = max(1, n_total // b)
+    stacked = tmap(lambda t: t[:n_batches * b]
+                   .reshape((n_batches, b) + t.shape[1:]), test_data)
 
     @jax.jit
     def eval_x(x):
-        losses, accs = [], []
-        for i in range(n_batches):
-            mb = tmap(lambda t: t[i * batch:(i + 1) * batch], test_data)
+        def body(_, mb):
             loss, m = apply_loss_fn(x, mb)
-            losses.append(loss)
-            accs.append(m["acc"])
-        return jnp.stack(losses).mean(), jnp.stack(accs).mean()
+            return _, (loss, m["acc"])
+
+        _, (losses, accs) = jax.lax.scan(body, None, stacked)
+        return losses.mean(), accs.mean()
 
     def eval_fn(state):
         loss, acc = eval_x(state["x"])

@@ -57,11 +57,51 @@ def tree_mean0(tree: Pytree) -> Pytree:
 def tree_weighted_mean(tree: Pytree, w: jax.Array) -> Pytree:
     """Weighted mean over the leading (client) axis: sum_i w_i t_i / sum_i
     w_i.  Computed in float32 -- uploads may be low-precision (fp8) and the
-    weights are the async regime's staleness discounts."""
+    weights are the async regime's staleness discounts.
+
+    Zero-weight-sum guard: all-zero weights (every buffered upload
+    discounted to nothing) fall back to the uniform mean instead of
+    dividing by zero; any positive sum is divided through unchanged."""
     w = jnp.asarray(w, jnp.float32)
-    wn = w / w.sum()
+    s = w.sum()
+    safe = jnp.where(s > 0, s, 1.0)
+    wn = jnp.where(s > 0, w / safe, 1.0 / w.shape[0])
     return tmap(lambda t: jnp.tensordot(wn, t.astype(jnp.float32),
                                         axes=(0, 0)), tree)
+
+
+def twin_grad_fn(loss_fn: Callable[[Pytree, Pytree], Tuple[jax.Array, Any]]
+                 ) -> GradFn:
+    """Build a ``grad_fn`` from a differentiable ``loss_fn(params, batch)
+    -> (loss, aux)`` that also carries a ``.twin`` attribute evaluating
+    BOTH FedDeper streams in ONE joint forward/backward:
+
+        twin(y, v, mb) -> (loss_y, grad_y, loss_v, grad_v)
+
+    differentiating ``loss(y) + loss(v)`` w.r.t. the stacked ``(y, v)``
+    pair.  The cross-terms are identically zero, so the gradients equal
+    two separate ``grad_fn`` calls (bitwise on XLA CPU/TPU -- the same
+    per-stream subgraphs are emitted, just scheduled as one pass), while
+    the engine sees a single gradient evaluation per local step.
+    ``FedDeper(fuse_grads=True)`` uses ``.twin`` when present and falls
+    back to two serial calls otherwise.
+    """
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, mb)
+        return l, g
+
+    def twin(y, v, mb):
+        def joint(pair):
+            ly, _ = loss_fn(pair[0], mb)
+            lv, _ = loss_fn(pair[1], mb)
+            return ly + lv, (ly, lv)
+
+        (_, (ly, lv)), (gy, gv) = jax.value_and_grad(
+            joint, has_aux=True)((y, v))
+        return ly, gy, lv, gv
+
+    grad_fn.twin = twin
+    return grad_fn
 
 
 @dataclass(frozen=True)
@@ -206,11 +246,27 @@ class Scaffold(Strategy):
 # FedDeper  (this paper, Algorithm 1)
 # ---------------------------------------------------------------------------
 
+class _Pair:
+    """Unregistered (hence pytree-LEAF) y/v result pair: lets the fused
+    update emit both streams from one tree traversal without colliding
+    with tuples/dicts that are genuine containers in params trees."""
+    __slots__ = ("y", "v")
+
+    def __init__(self, y, v):
+        self.y, self.v = y, v
+
 @dataclass(frozen=True)
 class FedDeper(Strategy):
     rho: float = 0.03   # depersonalization penalty (rho <= eta * beta)
     lam: float = 0.5    # mixing rate, lambda in [1/2, 1]
     use_pallas: bool = False  # fused deper_update kernel (TPU target)
+    # Fused round engine: evaluate both per-step gradients in one joint
+    # pass (``twin_grad_fn``'s ``.twin`` hook when the caller provides
+    # it), update y and v in one fused op, and -- with use_pallas -- run
+    # ONE whole-tree kernel launch per step with the mixing/upload tail
+    # emitted by the final launch.  False is the bitwise-reference escape
+    # hatch: two serial grad_fn calls, per-leaf updates, separate tail.
+    fuse_grads: bool = True
     # beyond-paper: low-precision delta uploads (e.g. 'float8_e4m3fn')
     # halve the cross-client all-reduce bytes; deltas are small relative
     # to weights so fp8 range suffices (validated in tests)
@@ -219,6 +275,27 @@ class FedDeper(Strategy):
 
     def client_init(self, x):
         return {"v": tmap(jnp.asarray, x)}  # v_0 = x at round 0
+
+    def _grads(self, grad_fn):
+        """(y, v, mb) -> (loss_y, gy, loss_v, gv); one joint pass when
+        fused and the caller's grad_fn carries a ``.twin`` hook."""
+        twin = getattr(grad_fn, "twin", None) if self.fuse_grads else None
+        if twin is not None:
+            return twin
+
+        def serial(y, v, mb):
+            loss_y, gy = grad_fn(y, mb)
+            loss_v, gv = grad_fn(v, mb)
+            return loss_y, gy, loss_v, gv
+        return serial
+
+    def _finish(self, y, v, x):
+        """Mixing (Alg. 1 line 10) + upload (line 11)."""
+        v_next = tmap(lambda vi, yi:
+                      ((1.0 - self.lam) * vi
+                       + self.lam * yi).astype(vi.dtype), v, y)
+        upload = tmap(jnp.subtract, y, x)
+        return v_next, upload
 
     def local_round(self, x, ctx, cs, batches, grad_fn):
         """Alternating SGD (Alg. 1 lines 6-9):
@@ -229,28 +306,50 @@ class FedDeper(Strategy):
         then mixing (line 10):  v_0^{k+1} = (1-lam) v_tau + lam y_tau,
         upload (line 11):       y_tau - x.
         """
+        eta, rho = self.eta, self.rho
+        grads = self._grads(grad_fn)
+        if self.use_pallas:
+            from repro.kernels.ops import deper_update, deper_update_per_leaf
+            kernel = deper_update if self.fuse_grads else deper_update_per_leaf
+
         def step(carry, mb):
             y, v = carry
-            loss_y, gy = grad_fn(y, mb)
-            loss_v, gv = grad_fn(v, mb)
+            loss_y, gy, loss_v, gv = grads(y, v, mb)
             if self.use_pallas:
-                from repro.kernels.ops import deper_update
-                y, v = deper_update(y, v, x, gy, gv,
-                                    eta=self.eta, rho=self.rho)
+                y, v = kernel(y, v, x, gy, gv, eta=eta, rho=rho)
+            elif self.fuse_grads:
+                # one fused elementwise op per leaf-pair (y' and v'
+                # computed together; same expressions as the reference)
+                yv = tmap(lambda yi, vi, xi, gyi, gvi: _Pair(
+                    (yi - eta * gyi
+                     - rho * (vi + yi - 2.0 * xi)).astype(yi.dtype),
+                    (vi - eta * gvi.astype(vi.dtype)).astype(vi.dtype)),
+                    y, v, x, gy, gv)
+                y = tmap(lambda p: p.y, yv)
+                v = tmap(lambda p: p.v, yv)
             else:
                 y = tmap(lambda yi, vi, xi, gi:
-                         (yi - self.eta * gi
-                          - self.rho * (vi + yi - 2.0 * xi)).astype(yi.dtype),
+                         (yi - eta * gi
+                          - rho * (vi + yi - 2.0 * xi)).astype(yi.dtype),
                          y, v, x, gy)
-                v = _axpy(-self.eta, gv, v)
+                v = _axpy(-eta, gv, v)
             return (y, v), (loss_y, loss_v)
 
         y0 = tmap(jnp.asarray, x)
-        (y, v), (ly, lv) = jax.lax.scan(step, (y0, cs["v"]), batches)
-        v_next = tmap(lambda vi, yi:
-                      ((1.0 - self.lam) * vi + self.lam * yi).astype(vi.dtype),
-                      v, y)
-        upload = tmap(jnp.subtract, y, x)
+        if self.use_pallas and self.fuse_grads:
+            # fused tail: the LAST launch also emits mixing + upload while
+            # the operands are on-chip (tau-1 scanned steps + one final)
+            head = tmap(lambda t: t[:-1], batches)
+            last = tmap(lambda t: t[-1], batches)
+            (y, v), (ly, lv) = jax.lax.scan(step, (y0, cs["v"]), head)
+            ly_f, gy, lv_f, gv = grads(y, v, last)
+            y, v, v_next, upload = deper_update(
+                y, v, x, gy, gv, eta=eta, rho=rho, lam=self.lam)
+            ly = jnp.concatenate([ly, ly_f[None]])
+            lv = jnp.concatenate([lv, lv_f[None]])
+        else:
+            (y, v), (ly, lv) = jax.lax.scan(step, (y0, cs["v"]), batches)
+            v_next, upload = self._finish(y, v, x)
         if self.upload_dtype:
             dt = jnp.dtype(self.upload_dtype)
             upload = tmap(lambda t: t.astype(dt), upload)

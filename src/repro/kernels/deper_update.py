@@ -6,18 +6,27 @@ phase costs ~10 HBM array passes; fused it is exactly 5 reads + 2 writes.
 For the datacenter regime (72B-scale client models) the update phase is
 purely memory-bound, so pass count == wall time.
 
+With ``lam`` given, the same launch additionally emits the round tail --
+the mixing step v+ = (1-lam) v' + lam y' (Alg. 1 line 10) and the upload
+y' - x (line 11) -- while the operands are already in VMEM: 5 reads + 4
+writes, versus 5r+2w followed by a separate 3r+2w pass.
+
 Tiling: inputs are flattened and padded to (rows, 1024) -- 8x128 VPU lanes
--- and blocked over rows; all five operands stream through VMEM.
+-- and blocked over rows; all five operands stream through VMEM.  The
+whole-pytree packing (one launch per *step*, not per *leaf*) lives in
+``kernels.tiling.TreeFlattener``; this module only sees 2-D buffers.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 1024  # 8 sublanes x 128 lanes
+from repro.kernels.tiling import LANES  # noqa: F401  (re-exported)
+
 DEFAULT_BLOCK_ROWS = 256
 
 
@@ -32,20 +41,44 @@ def _kernel(eta, rho, y_ref, v_ref, x_ref, gy_ref, gv_ref, yo_ref, vo_ref):
     vo_ref[...] = (v - eta * gv).astype(vo_ref.dtype)
 
 
+def _kernel_mix(eta, rho, lam, y_ref, v_ref, x_ref, gy_ref, gv_ref,
+                yo_ref, vo_ref, mo_ref, uo_ref):
+    y = y_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    gy = gy_ref[...].astype(jnp.float32)
+    gv = gv_ref[...].astype(jnp.float32)
+    y_new = y - eta * gy - rho * (v + y - 2.0 * x)
+    v_new = v - eta * gv
+    yo_ref[...] = y_new.astype(yo_ref.dtype)
+    vo_ref[...] = v_new.astype(vo_ref.dtype)
+    mo_ref[...] = ((1.0 - lam) * v_new + lam * y_new).astype(mo_ref.dtype)
+    uo_ref[...] = (y_new - x).astype(uo_ref.dtype)
+
+
 def deper_update_2d(y, v, x, gy, gv, *, eta: float, rho: float,
+                    lam: Optional[float] = None,
                     block_rows: int = DEFAULT_BLOCK_ROWS,
                     interpret: bool = False):
-    """All operands (R, LANES); returns (y', v')."""
+    """All operands (R, LANES).  Returns (y', v'), or with ``lam`` the
+    4-tuple (y', v', (1-lam) v' + lam y', y' - x) from one launch."""
     R, L = y.shape
     assert L == LANES and R % block_rows == 0, (y.shape, block_rows)
     grid = (R // block_rows,)
     spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    # y'/upload keep y's dtype, v'/mix keep v's (mix replaces v)
+    out_shape = [jax.ShapeDtypeStruct(y.shape, y.dtype),
+                 jax.ShapeDtypeStruct(v.shape, v.dtype)]
+    if lam is not None:
+        out_shape += [jax.ShapeDtypeStruct(v.shape, v.dtype),
+                      jax.ShapeDtypeStruct(y.shape, y.dtype)]
+    kernel = (functools.partial(_kernel, eta, rho) if lam is None
+              else functools.partial(_kernel_mix, eta, rho, lam))
     return pl.pallas_call(
-        functools.partial(_kernel, eta, rho),
+        kernel,
         grid=grid,
         in_specs=[spec] * 5,
-        out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct(y.shape, y.dtype),
-                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        out_specs=[spec] * len(out_shape),
+        out_shape=out_shape,
         interpret=interpret,
     )(y, v, x, gy, gv)

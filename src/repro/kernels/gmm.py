@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import pick_block
+
 
 def _kernel(nd, x_ref, w_ref, o_ref, acc_ref):
     kd = pl.program_id(3)
@@ -32,11 +34,7 @@ def _kernel(nd, x_ref, w_ref, o_ref, acc_ref):
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _pick(n, target):
-    b = min(n, target)
-    while n % b:
-        b -= 1
-    return b
+_pick = pick_block  # shared tiling util (kept under the historical name)
 
 
 def gmm_pallas(x, w, *, block_t: int = 256, block_f: int = 256,

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import deper_update as _deper
 from repro.kernels import flash_attention as _flash
 from repro.kernels import gmm as _gmm
+from repro.kernels.tiling import TreeFlattener, pick_block
 
 
 def _interpret() -> bool:
@@ -31,7 +32,7 @@ def _leaf_update(y, v, x, gy, gv, *, eta, rho):
     L = _deper.LANES
     rows = max(1, -(-n // L))
     # pick a row block that divides the padded row count
-    block = _gmm._pick(rows, _deper.DEFAULT_BLOCK_ROWS)
+    block = pick_block(rows, _deper.DEFAULT_BLOCK_ROWS)
 
     def prep(t):
         t = t.reshape(-1).astype(jnp.float32)
@@ -45,8 +46,11 @@ def _leaf_update(y, v, x, gy, gv, *, eta, rho):
 
 
 @functools.partial(jax.jit, static_argnames=("eta", "rho"))
-def deper_update(y, v, x, gy, gv, *, eta: float, rho: float):
-    """Fused FedDeper update over parameter pytrees.  Returns (y', v')."""
+def deper_update_per_leaf(y, v, x, gy, gv, *, eta: float, rho: float):
+    """Unfused reference: one kernel launch PER PYTREE LEAF (the pre-
+    round-engine hot path).  Kept as the equivalence baseline and the
+    ``fuse_grads=False`` escape hatch; new code wants ``deper_update``,
+    which launches once per step."""
     flat_y, treedef = jax.tree.flatten(y)
     flat = [
         _leaf_update(yl, vl, xl, gyl, gvl, eta=eta, rho=rho)
@@ -57,6 +61,47 @@ def deper_update(y, v, x, gy, gv, *, eta: float, rho: float):
     y_new = jax.tree.unflatten(treedef, [f[0] for f in flat])
     v_new = jax.tree.unflatten(treedef, [f[1] for f in flat])
     return y_new, v_new
+
+
+def _flat_update(yf, vf, xf, gyf, gvf, *, eta, rho, lam, block):
+    """Single-launch fused update on (rows, LANES) buffers.  On TPU this
+    is one ``pallas_call``; elsewhere the identical kernel math runs as
+    one fused XLA elementwise op (interpret-mode grid emulation costs a
+    full-buffer copy per operand per grid step, which would defeat the
+    launch fusion this path exists for).  Both are the same f32
+    elementwise expression, so results are bitwise equal."""
+    if not _interpret():
+        return _deper.deper_update_2d(yf, vf, xf, gyf, gvf, eta=eta,
+                                      rho=rho, lam=lam, block_rows=block)
+    y_new = yf - eta * gyf - rho * (vf + yf - 2.0 * xf)
+    v_new = vf - eta * gvf
+    if lam is None:
+        return y_new, v_new
+    return (y_new, v_new, (1.0 - lam) * v_new + lam * y_new, y_new - xf)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "rho", "lam"))
+def deper_update(y, v, x, gy, gv, *, eta: float, rho: float,
+                 lam: Optional[float] = None):
+    """Fused FedDeper update over parameter pytrees, ONE launch per step:
+    the whole tree is packed into a single padded (rows, LANES) buffer
+    (``TreeFlattener``), so launch count is independent of leaf count.
+
+    Returns (y', v'); with ``lam`` the same launch also emits the round
+    tail, returning (y', v', v_mixed, upload) where
+    ``v_mixed = (1-lam) v' + lam y'`` and ``upload = y' - x``.
+
+    Dtypes follow the 2-D kernel contract: y'/upload keep y's leaf
+    dtypes, v'/v_mixed keep v's (they replace v).
+    """
+    block = None if _interpret() else _deper.DEFAULT_BLOCK_ROWS
+    fl_y = TreeFlattener(y, block_rows=block)
+    fl_v = TreeFlattener(v, block_rows=block)  # same shapes, v's dtypes
+    out = _flat_update(fl_y.flatten(y), fl_v.flatten(v), fl_y.flatten(x),
+                       fl_y.flatten(gy), fl_v.flatten(gv), eta=eta,
+                       rho=rho, lam=lam, block=fl_y.block_rows)
+    unflatteners = (fl_y, fl_v, fl_v, fl_y)
+    return tuple(f.unflatten(o) for f, o in zip(unflatteners, out))
 
 
 # ---------------------------------------------------------------------------

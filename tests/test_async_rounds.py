@@ -146,3 +146,28 @@ def test_alpha_discounts_stale_uploads(data, x0):
     d = sum(float(jnp.abs(a - b).sum()) for a, b in
             zip(jax.tree.leaves(s0["x"]), jax.tree.leaves(s1["x"])))
     assert d > 0
+
+
+def test_async_donate_false_keeps_input_state_usable(data, x0):
+    """make_async_round_fn(donate=False) must neither consume the passed
+    state nor change a bit of the trajectory vs the donating default."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    acfg = AsyncSimConfig(n_clients=8, m_concurrent=4, buffer_size=4,
+                          tau=2, batch_size=16, alpha=0.0, delay=0.0,
+                          seed=3)
+    s_keep = init_async_state(acfg, strategy, x0)
+    arf_nd = make_async_round_fn(acfg, strategy, grad_fn, data,
+                                 donate=False)
+    s1, _ = arf_nd(s_keep)
+    # the input state survives a non-donating round
+    for leaf in jax.tree.leaves(s_keep["x"]) + jax.tree.leaves(
+            s_keep["pms"]):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+    s_don = init_async_state(acfg, strategy, x0)
+    arf_d = make_async_round_fn(acfg, strategy, grad_fn, data, donate=True)
+    s2, _ = arf_d(s_don)
+    for key in ("x", "clients", "pms"):
+        for a, b in zip(jax.tree.leaves(s1[key]), jax.tree.leaves(s2[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)

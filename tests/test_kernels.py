@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ops import deper_update, flash_attention, gmm
+from repro.kernels.ops import (deper_update, deper_update_per_leaf,
+                               flash_attention, gmm)
+from repro.kernels.tiling import LANES, TreeFlattener, pick_block
 
 
 @pytest.mark.parametrize("shape", [(8,), (100,), (130, 33), (4, 7, 9),
@@ -28,6 +30,95 @@ def test_deper_update_shapes(shape, dtype):
                                rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(v2["p"], np.float32), rv,
                                rtol=tol, atol=tol)
+
+
+def _random_tree(key, dtype=jnp.float32):
+    """Mixed-shape tree: sizes straddle lane boundaries, incl. a prime-ish
+    total so the padded row count exercises the flattener's rounding."""
+    ks = jax.random.split(key, 4)
+    return {"w1": jax.random.normal(ks[0], (130, 33), jnp.float32
+                                    ).astype(dtype),
+            "b1": jax.random.normal(ks[1], (9,), jnp.float32).astype(dtype),
+            "deep": {"w2": jax.random.normal(ks[2], (4, 7, 9), jnp.float32
+                                             ).astype(dtype),
+                     "b2": jax.random.normal(ks[3], (2048,), jnp.float32
+                                             ).astype(dtype)}}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_deper_update_single_launch_multi_leaf(dtype):
+    """The single-launch path (whole tree in one buffer) must match both
+    the per-leaf launch reference and the pure-jnp oracle, leaf for
+    leaf."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    y, v, x, gy, gv = (_random_tree(k, dtype) for k in ks)
+    eta, rho = 0.05, 0.013
+    y_s, v_s = deper_update(y, v, x, gy, gv, eta=eta, rho=rho)
+    y_l, v_l = deper_update_per_leaf(y, v, x, gy, gv, eta=eta, rho=rho)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    for got, want in ((y_s, y_l), (v_s, v_l)):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=tol, atol=tol)
+    ry, rv = ref.deper_update_ref(
+        jax.tree.leaves(y)[0].astype(jnp.float32),
+        jax.tree.leaves(v)[0].astype(jnp.float32),
+        jax.tree.leaves(x)[0].astype(jnp.float32),
+        jax.tree.leaves(gy)[0].astype(jnp.float32),
+        jax.tree.leaves(gv)[0].astype(jnp.float32), eta=eta, rho=rho)
+    np.testing.assert_allclose(np.asarray(jax.tree.leaves(y_s)[0],
+                                          np.float32), ry, rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(jax.tree.leaves(v_s)[0],
+                                          np.float32), rv, rtol=tol,
+                               atol=tol)
+
+
+def test_deper_update_lam_emits_mix_and_upload():
+    """With lam the same launch emits the round tail; must equal the
+    2-output launch composed with tree-map mixing/upload within f32 ulp
+    (the two jit graphs may contract mul+add into fma differently, so
+    exact bit equality is not guaranteed across graphs -- the same-graph
+    bitwise pins live in test_round_engine.py)."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    y, v, x, gy, gv = (_random_tree(k) for k in ks)
+    eta, rho, lam = 0.05, 0.013, 0.6
+    y2, v2 = deper_update(y, v, x, gy, gv, eta=eta, rho=rho)
+    y4, v4, mix, up = deper_update(y, v, x, gy, gv, eta=eta, rho=rho,
+                                   lam=lam)
+    want_mix = jax.tree.map(lambda a, b: (1.0 - lam) * a + lam * b, v2, y2)
+    want_up = jax.tree.map(jnp.subtract, y2, x)
+    for got, want in ((y4, y2), (v4, v2), (mix, want_mix), (up, want_up)):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, rtol=0)
+
+
+def test_tree_flattener_roundtrip():
+    tree = _random_tree(jax.random.PRNGKey(9), jnp.bfloat16)
+    fl = TreeFlattener(tree)
+    buf = fl.flatten(tree)
+    assert buf.shape == (fl.rows, LANES) and buf.dtype == jnp.float32
+    assert fl.rows % fl.block_rows == 0
+    back = fl.unflatten(buf)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-2)
+    # block-rows rounding: awkward (prime) row counts never degrade the
+    # block to 1 -- rows are padded UP to a block multiple instead
+    big = {"p": jnp.zeros((523, LANES))}
+    fl2 = TreeFlattener(big, block_rows=256)
+    assert fl2.block_rows == 256 and fl2.rows == 768
+
+
+def test_pick_block_divides():
+    for n, target in [(392, 256), (1, 256), (128, 256), (523, 256),
+                      (96, 40)]:
+        b = pick_block(n, target)
+        assert 1 <= b <= min(n, target) and n % b == 0
 
 
 @pytest.mark.parametrize("B,S,H,K,D", [
@@ -104,3 +195,37 @@ def test_deper_update_in_strategy_matches_plain():
     for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                    atol=1e-6)
+
+
+def test_deper_update_2d_preserves_per_operand_dtypes():
+    """y'/upload keep y's dtype and v'/mix keep v's, also when they
+    differ (direct 2-D callers may mix precisions; the pytree wrapper
+    pre-casts so only this level can catch a regression)."""
+    from repro.kernels.deper_update import deper_update_2d
+    ks = jax.random.split(jax.random.PRNGKey(10), 5)
+    R = 256
+    y, x, gy = (jax.random.normal(k, (R, LANES), jnp.float32)
+                for k in ks[:3])
+    v, gv = (jax.random.normal(k, (R, LANES)).astype(jnp.bfloat16)
+             for k in ks[3:])
+    y2, v2 = deper_update_2d(y, v, x, gy, gv, eta=0.05, rho=0.01,
+                             block_rows=R, interpret=True)
+    assert y2.dtype == jnp.float32 and v2.dtype == jnp.bfloat16
+    y4, v4, mix, up = deper_update_2d(y, v, x, gy, gv, eta=0.05, rho=0.01,
+                                      lam=0.5, block_rows=R, interpret=True)
+    assert y4.dtype == jnp.float32 and v4.dtype == jnp.bfloat16
+    assert mix.dtype == jnp.bfloat16 and up.dtype == jnp.float32
+
+
+def test_deper_update_pytree_mixed_dtypes():
+    """Pytree-level contract matches the 2-D one: y'/upload keep y's
+    leaf dtypes, v'/mix keep v's, also when the two trees differ."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    y, x, gy = (_random_tree(k, jnp.float32) for k in ks[:3])
+    v, gv = (_random_tree(k, jnp.bfloat16) for k in ks[3:])
+    y4, v4, mix, up = deper_update(y, v, x, gy, gv, eta=0.05, rho=0.01,
+                                   lam=0.5)
+    for leaf in jax.tree.leaves(y4) + jax.tree.leaves(up):
+        assert leaf.dtype == jnp.float32
+    for leaf in jax.tree.leaves(v4) + jax.tree.leaves(mix):
+        assert leaf.dtype == jnp.bfloat16

@@ -1,0 +1,230 @@
+"""Fused round engine: every fusion seam pinned to the unfused reference
+(twin gradients, single-launch Pallas updates, donated round buffers),
+plus the tracked-bench schema and the scanned global eval."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (FedDeper, Scaffold, SimConfig, init_sim_state,
+                        make_global_eval, make_round_fn, run_rounds,
+                        twin_grad_fn)
+from repro.data import make_federated_classification
+from repro.models import classifier_loss, init_classifier
+
+CFG = MLP_MNIST
+
+
+def apply_loss(p, b):
+    return classifier_loss(CFG, p, b)
+
+
+def grad_fn(p, mb):
+    (l, m), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = make_federated_classification(n_clients=6, per_client=64,
+                                       split="shards", seed=2)
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(11))
+
+
+SIM = SimConfig(n_clients=6, m_sampled=4, tau=3, batch_size=16, seed=5)
+
+
+def _run(strategy, data, x0, gf=grad_fn, donate=True, rounds=3):
+    state = init_sim_state(SIM, strategy, x0)
+    rf = make_round_fn(SIM, strategy, gf, data, donate=donate)
+    return run_rounds(state, rf, rounds)
+
+
+def _assert_state_equal(a, b, keys=("x", "clients", "pms"), atol=0.0):
+    for key in keys:
+        for la, lb in zip(jax.tree.leaves(a[key]), jax.tree.leaves(b[key])):
+            if atol == 0.0:
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb), err_msg=key)
+            else:
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=atol, rtol=0, err_msg=key)
+
+
+# ------------------------------------------------------------- fusion seams
+
+def test_fused_twin_gradients_match_reference(data, x0):
+    """fuse_grads + the joint twin-gradient pass must reproduce the
+    serial reference within f32 tolerance (bitwise on this backend: the
+    joint pass emits the same per-stream subgraphs)."""
+    ref, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, fuse_grads=False),
+                  data, x0)
+    fused, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, fuse_grads=True),
+                    data, x0, gf=twin_grad_fn(apply_loss))
+    _assert_state_equal(ref, fused, atol=1e-6)
+
+
+def test_fused_without_twin_hook_is_bitwise(data, x0):
+    """Without a .twin hook the fused engine still fuses the update but
+    computes the same serial gradients: bit-for-bit equal."""
+    ref, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, fuse_grads=False),
+                  data, x0)
+    fused, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, fuse_grads=True),
+                    data, x0)
+    _assert_state_equal(ref, fused)
+
+
+def test_single_launch_pallas_matches_reference(data, x0):
+    """One whole-tree launch per step (+ fused mixing/upload tail on the
+    last launch) vs the pure tree-map reference: elementwise f32 with no
+    reduction reordered, so bitwise."""
+    ref, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, fuse_grads=False),
+                  data, x0)
+    sl, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, use_pallas=True,
+                          fuse_grads=True), data, x0)
+    _assert_state_equal(ref, sl)
+
+
+def test_per_leaf_pallas_still_matches_reference(data, x0):
+    """The unfused per-leaf launch path (fuse_grads=False escape hatch)
+    stays available and equal to the reference."""
+    ref, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, fuse_grads=False),
+                  data, x0, rounds=1)
+    pl, _ = _run(FedDeper(eta=0.05, rho=0.03, lam=0.5, use_pallas=True,
+                          fuse_grads=False), data, x0, rounds=1)
+    _assert_state_equal(ref, pl)
+
+
+def test_twin_grad_fn_equals_serial_calls(x0):
+    """twin(y, v, mb) == (grad_fn(y), grad_fn(v)) exactly: the joint loss
+    has zero cross-terms."""
+    tgf = twin_grad_fn(apply_loss)
+    k = jax.random.PRNGKey(3)
+    mb = {"x": jax.random.normal(k, (8, 784)),
+          "y": jax.random.randint(k, (8,), 0, 10)}
+    y = x0
+    v = jax.tree.map(lambda t: t * 0.9 + 0.01, x0)
+    ly, gy, lv, gv = tgf.twin(y, v, mb)
+    ly_s, gy_s = tgf(y, mb)
+    lv_s, gv_s = tgf(v, mb)
+    np.testing.assert_array_equal(np.asarray(ly), np.asarray(ly_s))
+    np.testing.assert_array_equal(np.asarray(lv), np.asarray(lv_s))
+    for a, b in zip(jax.tree.leaves((gy, gv)), jax.tree.leaves((gy_s, gv_s))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   rtol=0)
+
+
+# ----------------------------------------------------------------- donation
+
+def test_donation_degenerate_bitwise(data, x0):
+    """donate=True must not change a single bit of the round outputs."""
+    for strategy in (FedDeper(eta=0.05, rho=0.03, lam=0.5),
+                     Scaffold(eta=0.05)):
+        plain, _ = _run(strategy, data, x0, donate=False)
+        donated, _ = _run(strategy, data, x0, donate=True)
+        _assert_state_equal(plain, donated)
+
+
+def test_donation_leaves_caller_params_alive(data, x0):
+    """init_sim_state copies x, so donating rounds never consume the
+    caller's own params."""
+    state0 = init_sim_state(SIM, FedDeper(eta=0.05), x0)
+    rf = make_round_fn(SIM, FedDeper(eta=0.05), grad_fn, data)
+    state1, _ = rf(state0)
+    # x0 still readable after its derived state was donated
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(x0))
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(state1["x"]))
+    # and the donated input state really was consumed on this backend
+    with pytest.raises(RuntimeError):
+        np.asarray(jax.tree.leaves(state0["x"])[0])
+
+
+# ----------------------------------------------------- scanned global eval
+
+@pytest.mark.parametrize("n_total,batch", [(96, 32), (100, 32), (20, 32)])
+def test_global_eval_scan_matches_python_loop(n_total, batch):
+    """The lax.scan eval must reproduce the old Python-unrolled batching
+    exactly: floor batches, remainder dropped, whole split when
+    n_total < batch."""
+    k = jax.random.PRNGKey(0)
+    test = {"x": jax.random.normal(k, (n_total, 784)),
+            "y": jax.random.randint(k, (n_total,), 0, 10)}
+    x = init_classifier(CFG, jax.random.PRNGKey(1))
+    out = make_global_eval(apply_loss, test, batch=batch)({"x": x})
+
+    b = min(batch, n_total)
+    losses, accs = [], []
+    for i in range(max(1, n_total // b)):
+        mb = {k2: t[i * b:(i + 1) * b] for k2, t in test.items()}
+        loss, m = apply_loss(x, mb)
+        losses.append(loss)
+        accs.append(m["acc"])
+    np.testing.assert_allclose(float(out["test_loss"]),
+                               float(jnp.stack(losses).mean()), rtol=1e-6)
+    np.testing.assert_allclose(float(out["test_acc"]),
+                               float(jnp.stack(accs).mean()), rtol=1e-6)
+
+
+# ------------------------------------------------------------ tracked bench
+
+def test_round_engine_bench_registered_and_importable():
+    """`run.py --only round_engine` must keep resolving: the module
+    imports and the registry names it."""
+    import inspect
+
+    from benchmarks import round_engine, run
+    assert callable(round_engine.round_engine_rows)
+    assert "round_engine" in inspect.getsource(run.main)
+
+
+def test_bench_schema_validator():
+    from benchmarks.round_engine import validate_bench
+    good = {"b": {"us_per_round": 12.5, "peak_bytes": None,
+                  "config": {"n": 10}}}
+    validate_bench(good)
+    for bad in (
+        {},
+        {"b": {"us_per_round": 0.0, "peak_bytes": None, "config": {}}},
+        {"b": {"us_per_round": 1.0, "config": {}}},
+        {"b": {"us_per_round": 1.0, "peak_bytes": -1, "config": {}}},
+        {"b": {"us_per_round": 1.0, "peak_bytes": None, "config": 3}},
+    ):
+        with pytest.raises(ValueError):
+            validate_bench(bad)
+
+
+def test_checked_in_bench_file_is_valid():
+    from benchmarks.round_engine import BENCH_PATH, validate_bench
+    obj = json.loads(BENCH_PATH.read_text())
+    validate_bench(obj)
+    # the tracked headline: the fused engine beats the unfused path
+    fused = obj["feddeper_sync_pallas_fused"]["us_per_round"]
+    unfused = obj["feddeper_sync_pallas_unfused"]["us_per_round"]
+    assert unfused / fused >= 1.3, (unfused, fused)
+
+
+@pytest.mark.slow
+def test_round_engine_smoke_run(tmp_path):
+    """End-to-end smoke of the bench harness at minimal scale."""
+    from benchmarks.round_engine import round_engine_rows, validate_bench
+    out = tmp_path / "bench.json"
+    rows = round_engine_rows(quick=True, rounds=1, reps=1,
+                             include=("feddeper_sync_fused",),
+                             out_path=out)
+    assert len(rows) == 1 and rows[0].startswith("round_engine/")
+    validate_bench(json.loads(out.read_text()))
+
+
+def test_global_eval_rejects_empty_split():
+    with pytest.raises(ValueError, match="empty eval split"):
+        make_global_eval(apply_loss, {"x": jnp.zeros((0, 784)),
+                                      "y": jnp.zeros((0,), jnp.int32)})

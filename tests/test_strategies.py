@@ -62,9 +62,9 @@ def test_tau1_full_participation_is_centralized_sgd(data):
     x0 = init_classifier(CFG, jax.random.PRNGKey(7))
     state = init_sim_state(sim, strategy, x0)
     rf = make_round_fn(sim, strategy, grad_fn, data)
-    new_state, _ = rf(state)
 
     # reproduce the sampled batches by replaying the same rng stream
+    # (BEFORE the round: the donating round_fn consumes the state buffers)
     rng, k_sel, k_batch = jax.random.split(state["rng"], 3)
     idx = jax.random.choice(k_sel, 8, (8,), replace=False)
     n_i = data["x"].shape[1]
@@ -78,8 +78,9 @@ def test_tau1_full_participation_is_centralized_sgd(data):
                           )(xs, ys)
         return losses.mean()
 
-    g = jax.grad(central_loss)(state["x"])
-    manual = jax.tree.map(lambda p, gi: p - 0.05 * gi, state["x"], g)
+    g = jax.grad(central_loss)(x0)
+    manual = jax.tree.map(lambda p, gi: p - 0.05 * gi, x0, g)
+    new_state, _ = rf(state)
     for a, b in zip(jax.tree.leaves(new_state["x"]),
                     jax.tree.leaves(manual)):
         np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
@@ -217,3 +218,56 @@ def test_server_momentum_accelerates_or_matches(data):
     assert mu_norm > 0
     # momentum run must stay in the same loss ballpark (not diverge)
     assert hm[-1]["local_loss"] < h0[-1]["local_loss"] * 3 + 0.5
+
+
+# -------------------------------------------------------- tree_weighted_mean
+
+def test_tree_weighted_mean_normalizes_weights():
+    """Any uniform positive weight vector equals the plain mean, and
+    scaling all weights is a no-op."""
+    from repro.core import tree_weighted_mean
+    t = {"w": jnp.arange(12.0).reshape(4, 3), "b": jnp.linspace(-1, 1, 4)}
+    uniform = jax.tree.map(lambda l: l.mean(0), t)
+    for scale in (1.0, 2.0, 0.25):
+        got = tree_weighted_mean(t, jnp.full(4, scale))
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(uniform)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+    # non-uniform: matches the hand-computed weighted mean
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    got = tree_weighted_mean(t, w)
+    want = (np.asarray(t["w"]) * np.asarray(w)[:, None]).sum(0) / 10.0
+    np.testing.assert_allclose(np.asarray(got["w"]), want, rtol=1e-6)
+    # scaled weights: identical result
+    got2 = tree_weighted_mean(t, w * 7.5)
+    np.testing.assert_allclose(np.asarray(got2["w"]), np.asarray(got["w"]),
+                               rtol=1e-6)
+
+
+def test_tree_weighted_mean_fp8_uploads_nonuniform():
+    """fp8-e4m3 upload leaves aggregate in f32: the weighted mean of the
+    *dequantized* values, exact within f32 arithmetic."""
+    from repro.core import tree_weighted_mean
+    rng = np.random.default_rng(0)
+    vals = rng.normal(0, 0.05, (3, 16)).astype(np.float32)
+    q = jnp.asarray(vals).astype(jnp.float8_e4m3fn)
+    w = jnp.asarray([1.0, 0.5, 0.25])
+    got = tree_weighted_mean({"d": q}, w)["d"]
+    assert got.dtype == jnp.float32
+    deq = np.asarray(q.astype(jnp.float32))
+    want = (deq * np.asarray(w)[:, None]).sum(0) / 1.75
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-7)
+
+
+def test_tree_weighted_mean_zero_weight_sum_guard():
+    """All-zero weights (every upload discounted away) must fall back to
+    the uniform mean instead of producing NaN."""
+    from repro.core import tree_weighted_mean
+    t = {"w": jnp.arange(6.0).reshape(3, 2)}
+    got = tree_weighted_mean(t, jnp.zeros(3))["w"]
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(t["w"].mean(0)), rtol=1e-6)
+    # ... and stays differentiable-safe under jit
+    got_j = jax.jit(lambda w: tree_weighted_mean(t, w))(jnp.zeros(3))["w"]
+    np.testing.assert_array_equal(np.asarray(got_j), np.asarray(got))
