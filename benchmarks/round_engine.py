@@ -13,7 +13,13 @@ round engine has:
 * ``*_pallas_unfused`` -- pre-engine Pallas path: one launch per pytree
                           leaf per step (interpret emulation off-TPU);
 * ``*_pallas_fused``   -- single whole-tree launch per step with the
-                          mixing/upload tail emitted by the final launch.
+                          mixing/upload tail emitted by the final launch;
+* ``*_mesh``           -- the fused engine under the MESH placement
+                          (cohort dim on the mesh's client axis through
+                          shard_map, delta-mean as one psum), interleaved
+                          against the identical vmap row so the tracked
+                          ``speedup_vs_vmap`` ratio prices the shard_map
+                          lowering (1-device mesh on this container).
 
 Every run rewrites ``BENCH_round_engine.json`` at the repo root so each
 PR leaves a perf trajectory.  Schema (validated by ``validate_bench``):
@@ -35,7 +41,8 @@ from benchmarks.common import build_task, csv_row
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
                         SimConfig, init_async_state, init_sim_state,
-                        make_async_round_fn, make_round_fn, twin_grad_fn)
+                        make_async_round_fn, make_placement, make_round_fn,
+                        twin_grad_fn)
 from repro.models import init_classifier
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_round_engine.json"
@@ -69,31 +76,40 @@ class _Prepared:
         self.best = float("inf")
         self.peak_bytes = None
 
-    def block(self, rounds: int) -> None:
+    def block(self, rounds: int) -> float:
+        """Run one timed block; returns its per-round seconds (callers
+        pairing two benches take window-local minima from the return
+        value so a ratio never mixes timings from different blocks)."""
         t0 = time.perf_counter()
         s = self.state
         for _ in range(rounds):
             s, _ = self.round_fn(s)
         jax.block_until_ready(jax.tree.leaves(s["x"])[0])
-        self.best = min(self.best, (time.perf_counter() - t0) / rounds)
+        per_round = (time.perf_counter() - t0) / rounds
+        self.best = min(self.best, per_round)
         self.state = s
+        return per_round
 
     @property
     def us(self) -> float:
         return 1e6 * self.best
 
 
-def _prep_sync(task, x0, scale, strategy, *, donate, twin):
+def _prep_sync(task, x0, scale, strategy, *, donate, twin,
+               placement=None):
     sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
                     tau=scale["tau"], batch_size=scale["batch"], seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
-    rf = make_round_fn(sim, strategy, grad_fn, task["data"], donate=donate)
+    pl = make_placement(placement) if placement else None
+    rf = make_round_fn(sim, strategy, grad_fn, task["data"], donate=donate,
+                       placement=pl)
     cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
-               twin_grads=twin, **scale)
+               twin_grads=twin, placement=placement or "vmap", **scale)
     for k in ("use_pallas", "fuse_grads"):
         if hasattr(strategy, k):
             cfg[k] = getattr(strategy, k)
-    return _Prepared(rf, init_sim_state(sim, strategy, x0), cfg)
+    return _Prepared(rf, init_sim_state(sim, strategy, x0, placement=pl),
+                     cfg)
 
 
 def _prep_async(task, x0, scale, strategy, *, donate, twin):
@@ -160,6 +176,12 @@ def _benches():
         "feddeper_sync_pallas_fused": (
             "sync", FedDeper(use_pallas=True, fuse_grads=True, **DEPER),
             dict(donate=True, twin=True)),
+        # the fused engine with the cohort dim on the mesh's client axis
+        # (1-device mesh on this container: measures the shard_map + psum
+        # lowering overhead against the identical vmap round)
+        "feddeper_sync_mesh": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, placement="mesh")),
         "feddeper_async_unfused": (
             "async", FedDeper(fuse_grads=False, **DEPER),
             dict(donate=False, twin=False)),
@@ -169,11 +191,18 @@ def _benches():
     }
 
 
-# fused rows whose config records the speedup over their unfused twin
+# rows whose config records a speedup ratio against a reference row,
+# timed in INTERLEAVED rep blocks so machine drift cancels out of the
+# tracked ratio: name -> (reference row, config key for the ratio)
 _SPEEDUP_PAIRS = {
-    "feddeper_sync_fused": "feddeper_sync_unfused",
-    "feddeper_sync_pallas_fused": "feddeper_sync_pallas_unfused",
-    "feddeper_async_fused": "feddeper_async_unfused",
+    "feddeper_sync_fused": ("feddeper_sync_unfused", "speedup_vs_unfused"),
+    "feddeper_sync_pallas_fused": ("feddeper_sync_pallas_unfused",
+                                   "speedup_vs_unfused"),
+    "feddeper_async_fused": ("feddeper_async_unfused",
+                             "speedup_vs_unfused"),
+    # placement ratio: mesh vs the identical vmap round (<= 1.0 expected
+    # on a 1-device mesh -- it prices the shard_map lowering)
+    "feddeper_sync_mesh": ("feddeper_sync_fused", "speedup_vs_vmap"),
 }
 
 
@@ -199,7 +228,8 @@ def round_engine_rows(quick: bool = True, *,
         if kind == "sync":
             prepared[name] = _prep_sync(task, x0, scale, strategy,
                                         donate=opts["donate"],
-                                        twin=opts["twin"])
+                                        twin=opts["twin"],
+                                        placement=opts.get("placement"))
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
@@ -211,13 +241,21 @@ def round_engine_rows(quick: bool = True, *,
     # peaks are cumulative (no portable reset), so the value means "peak
     # observed by the time this bench finished" -- null off-TPU/GPU
     paired = set()
-    for fused, unfused in _SPEEDUP_PAIRS.items():
-        if fused in prepared and unfused in prepared:
-            paired.update((fused, unfused))
+    pair_ratio: Dict[str, float] = {}
+    for name, (ref, _key) in _SPEEDUP_PAIRS.items():
+        if name in prepared and ref in prepared:
+            paired.update((name, ref))
+            # the ratio comes from THIS pair's interleaved window only: a
+            # bench appearing in two pairs (feddeper_sync_fused) would
+            # otherwise contribute a global best taken under different
+            # machine load than its comparator's
+            best_ref = best_name = float("inf")
             for _ in range(reps):
-                prepared[unfused].block(n_rounds[unfused])
-                prepared[fused].block(n_rounds[fused])
-            prepared[unfused].peak_bytes = prepared[fused].peak_bytes = \
+                best_ref = min(best_ref, prepared[ref].block(n_rounds[ref]))
+                best_name = min(best_name,
+                                prepared[name].block(n_rounds[name]))
+            pair_ratio[name] = best_ref / best_name
+            prepared[ref].peak_bytes = prepared[name].peak_bytes = \
                 _peak_bytes()
     for name, p in prepared.items():
         if name not in paired:
@@ -234,11 +272,11 @@ def round_engine_rows(quick: bool = True, *,
     rows = []
     for name, entry in results.items():
         derived = {"rounds": entry["config"]["rounds"]}
-        ref = _SPEEDUP_PAIRS.get(name)
-        if ref and ref in results:
-            speedup = results[ref]["us_per_round"] / entry["us_per_round"]
-            entry["config"]["speedup_vs_unfused"] = round(speedup, 3)
-            derived["speedup_vs_unfused"] = speedup
+        pair = _SPEEDUP_PAIRS.get(name)
+        if pair and name in pair_ratio:
+            speedup = pair_ratio[name]
+            entry["config"][pair[1]] = round(speedup, 3)
+            derived[pair[1]] = speedup
         rows.append(csv_row(f"round_engine/{name}", entry["us_per_round"],
                             derived))
 

@@ -15,6 +15,12 @@ from repro.core.async_rounds import (  # noqa: F401
     make_async_round_fn,
     staleness_weights,
 )
+from repro.core.engine import (  # noqa: F401
+    MeshPlacement,
+    VmapPlacement,
+    make_cohort_round,
+    make_placement,
+)
 from repro.core.rounds import (  # noqa: F401
     SimConfig,
     broadcast_client_store,

@@ -37,8 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rounds import (_personal_model, broadcast_client_store,
-                               gather_client_state, scatter_client_rows)
+from repro.core.engine import (VmapPlacement, broadcast_client_store,
+                               draw_cohort_batches, gather_client_state,
+                               make_per_client, sample_cohort,
+                               scatter_client_rows, scatter_cohort_rows,
+                               split_round_rng)
 from repro.core.strategies import Strategy, tmap
 
 Pytree = Any
@@ -123,7 +126,8 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree):
 
 
 def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
-                        data: Dict[str, jax.Array], *, donate: bool = True):
+                        data: Dict[str, jax.Array], *, donate: bool = True,
+                        placement=None):
     """Returns ``async_round(state) -> (state, metrics)`` advancing the
     event simulation until exactly one buffered aggregation completes --
     the same contract as ``make_round_fn``, so ``run_rounds`` drives it.
@@ -133,14 +137,20 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
     ``donate=True`` (default) mirrors ``make_round_fn``: the global model
     and the client/pms stores update in place, so a state passed to
     ``async_round`` is CONSUMED -- keep using only the returned state.
-    ``donate=False`` restores the copying semantics bit-for-bit."""
+    ``donate=False`` restores the copying semantics bit-for-bit.
+
+    ``placement`` (engine.py) maps each dispatch cohort's tau-scans; the
+    default vmap placement is the historical path.  A mesh placement
+    distributes each dispatch over the client axis -- note dispatch sizes
+    must then divide the axis, which heterogeneous delays rarely satisfy,
+    so mesh is practical here only for delay=0 full-buffer setups."""
     n, tau, b = acfg.n_clients, acfg.tau, acfg.batch_size
-    n_i = jax.tree.leaves(data)[0].shape[1]
+    placement = placement or VmapPlacement()
     _donate = (lambda *a: functools.partial(jax.jit, donate_argnums=a)) \
         if donate else (lambda *a: jax.jit)
     _scatter = scatter_client_rows if donate else \
-        jax.jit(lambda store, i, nw: tmap(lambda a, b_: a.at[i].set(b_),
-                                          store, nw))
+        jax.jit(scatter_cohort_rows)
+    per_client = make_per_client(strategy, grad_fn)
 
     @_donate(0, 2)
     def train_cohort(xs, ctxs, cs, batches):
@@ -159,13 +169,9 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         costs wasted lane compute and complicates the bit-for-bit
         degenerate-case guarantee, so the simulator keeps the honest
         shapes."""
-        def per_client(x_i, ctx_i, cs_i, batches_i):
-            new_cs, upload, metrics = strategy.local_round(
-                x_i, ctx_i, cs_i, batches_i, grad_fn)
-            pm = _personal_model(strategy, x_i, new_cs, upload)
-            return new_cs, upload, pm, metrics
-
-        return jax.vmap(per_client)(xs, ctxs, cs, batches)
+        return placement.cohort_map(per_client,
+                                    in_axes=(0, 0, 0, 0))(xs, ctxs, cs,
+                                                          batches)
 
     # x and server are donated: the versioned global model updates in
     # place at every aggregation (_aggregate immediately rebinds
@@ -186,20 +192,17 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         if not free:
             return
         f = len(free)
-        rng, k_sel, k_batch = jax.random.split(state["rng"], 3)
+        rng, k_sel, k_batch = split_round_rng(state["rng"])
         state["rng"] = rng
         busy = [s["client"] for s in state["slots"] if s is not None]
         if busy:
             p = np.ones(n)
             p[busy] = 0.0
-            idx = jax.random.choice(k_sel, n, (f,), replace=False,
-                                    p=jnp.asarray(p / p.sum()))
+            idx = sample_cohort(k_sel, n, f, p=jnp.asarray(p / p.sum()))
         else:
             # identical draw to make_round_fn (degenerate-case equivalence)
-            idx = jax.random.choice(k_sel, n, (f,), replace=False)
-        bidx = jax.random.randint(k_batch, (f, tau, b), 0, n_i)
-        batches = tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx),
-                       data)
+            idx = sample_cohort(k_sel, n, f)
+        batches = draw_cohort_batches(data, k_batch, idx, tau, b)
         cs = gather_client_state(state["clients"], idx)
         ctx = strategy.broadcast(state["x"], state["server"])
         bcast = lambda t: jnp.broadcast_to(t, (f,) + t.shape)  # noqa: E731

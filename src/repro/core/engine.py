@@ -1,0 +1,413 @@
+"""Placement-pluggable cohort engine: ONE round executor for every regime.
+
+The paper's structural property -- tau local alternating-SGD steps with
+zero cross-client traffic, then a single delta-mean all-reduce -- is the
+same round body whether the cohort lives on one device or across a mesh.
+This module owns that body (sample -> gather -> tau-scan local rounds ->
+scatter -> aggregate) and parameterizes WHERE the cohort axis runs via a
+``Placement``:
+
+  * ``VmapPlacement``  -- today's single-device simulation: the cohort is
+    a ``jax.vmap`` leading axis; the delta-mean is a tree mean.  This is
+    the bit-for-bit path ``make_round_fn`` has always produced.
+  * ``MeshPlacement``  -- the datacenter regime: the cohort dim is mapped
+    onto the mesh's client axis (``mesh_roles(mesh).client``) through
+    ``compat.shard_map``; the strategy's delta-mean lowers to the round's
+    ONE cross-client ``psum`` (metric scalars ride in the same collective);
+    client/pms stores are laid out with ``NamedSharding``s derived from
+    ``sharding/rules.py`` so the ``n_clients x params`` buffers are
+    actually distributed over the client axis.
+
+The sync regime (``rounds.make_round_fn``) is a thin wrapper over
+``make_cohort_round``; the async regime (``async_rounds``) drives its
+dispatch cohorts through ``Placement.cohort_map`` and shares the rng
+split layout, batch draw, and scatter helpers below, so all three
+regimes execute the identical per-client body.
+
+Constraints of the mesh placement (checked at construction):
+
+  * ``m_sampled`` must divide evenly over the client axis (each shard
+    trains ``m / axis_size`` cohort lanes);
+  * the client *store* axis (``n_clients``) falls back to replicated when
+    it does not divide the client axis (``sharding/rules.py`` semantics)
+    -- the round still runs, only the store layout degrades.
+
+On a 1-device mesh the mesh placement reproduces the vmap placement
+bitwise on CPU (the psum over a size-1 axis is an identity and the
+mean-of-local-means divides by 1.0 exactly); on k>1 shards the delta-mean
+associates as mean-of-local-means, equal to the flat mean up to f32
+summation order (tolerance recorded in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.strategies import Strategy, tmap
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# shared round-body pieces (both regimes, every placement)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SimConfig:
+    n_clients: int
+    m_sampled: int
+    tau: int
+    batch_size: int
+    seed: int = 0
+
+    @property
+    def p(self) -> float:
+        return self.m_sampled / self.n_clients
+
+
+def split_round_rng(rng) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """THE per-round rng split layout: (next_rng, k_select, k_batch).
+
+    Every consumer -- the sync executor, the async dispatcher, and
+    ``peek_sampled_clients`` -- goes through this one function, so the
+    cohort a round will sample is predictable from the state alone."""
+    rng, k_sel, k_batch = jax.random.split(rng, 3)
+    return rng, k_sel, k_batch
+
+
+def sample_cohort(k_sel, n: int, m: int, p=None) -> jax.Array:
+    """Sample m of n clients without replacement (optionally masked by
+    probability vector ``p`` -- the async regime's busy-client mask)."""
+    if p is not None:
+        return jax.random.choice(k_sel, n, (m,), replace=False, p=p)
+    return jax.random.choice(k_sel, n, (m,), replace=False)
+
+
+def draw_cohort_batches(data: Pytree, k_batch, idx: jax.Array, tau: int,
+                        b: int) -> Pytree:
+    """Per-cohort minibatch stacks: (m, tau, b, ...) drawn i.i.d. from each
+    sampled client's rows."""
+    n_i = jax.tree.leaves(data)[0].shape[1]
+    bidx = jax.random.randint(k_batch, (idx.shape[0], tau, b), 0, n_i)
+    return tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx), data)
+
+
+def broadcast_client_store(template: Pytree, n: int) -> Pytree:
+    """Per-client store from a single-client template: leading n axis,
+    materialized (the stores are scattered into every round).  Stateless
+    strategies ({}) stay {}."""
+    if not jax.tree.leaves(template):
+        return {}
+    return tmap(lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(),
+                template)
+
+
+def gather_client_state(clients: Pytree, idx: jax.Array) -> Pytree:
+    """Rows ``idx`` of the client store; {} for stateless strategies --
+    the one empty-client-state path for every regime."""
+    if not jax.tree.leaves(clients):
+        return {}
+    return tmap(lambda t: t[idx], clients)
+
+
+def scatter_cohort_rows(store: Pytree, idx, new: Pytree) -> Pytree:
+    """``store.at[idx].set(new)`` over the tree; {} passes through.  THE
+    scatter both regimes trace (the donated jit wrapper for eager callers
+    is ``scatter_client_rows``)."""
+    if not jax.tree.leaves(store):
+        return store
+    return tmap(lambda all_, nw: all_.at[idx].set(nw), store, new)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def scatter_client_rows(store: Pytree, idx, new: Pytree) -> Pytree:
+    """Donated-jit ``scatter_cohort_rows``: the ``n_clients x params``
+    buffer updates in place instead of being copied per call (the async
+    regime's eager delivery path)."""
+    return scatter_cohort_rows(store, idx, new)
+
+
+def _personal_model(strategy: Strategy, x, cs, upload):
+    if strategy.name == "feddeper":
+        return cs["v"]
+    if strategy.name == "scaffold":
+        return tmap(jnp.add, x, upload["dv"])
+    return tmap(jnp.add, x, upload)
+
+
+def make_per_client(strategy: Strategy, grad_fn) -> Callable:
+    """The per-client round body every placement maps over the cohort
+    axis: tau local steps + the personal-model view of the result."""
+    def per_client(x_i, ctx_i, cs_i, batches_i):
+        new_cs, upload, metrics = strategy.local_round(
+            x_i, ctx_i, cs_i, batches_i, grad_fn)
+        pm = _personal_model(strategy, x_i, new_cs, upload)
+        return new_cs, upload, pm, metrics
+
+    return per_client
+
+
+# ---------------------------------------------------------------------------
+# placements
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class VmapPlacement:
+    """Single-device cohort: vmap leading axis, tree-mean aggregate.
+    Bit-for-bit the historical ``make_round_fn`` path."""
+
+    name = "vmap"
+
+    def check(self, sim: SimConfig) -> None:
+        pass
+
+    def cohort_map(self, fn, in_axes) -> Callable:
+        return jax.vmap(fn, in_axes=in_axes)
+
+    def place_state(self, state: Pytree) -> Pytree:
+        return state
+
+    def constrain_store(self, store: Pytree) -> Pytree:
+        return store
+
+    def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
+                grad_fn, p: float):
+        per_client = make_per_client(strategy, grad_fn)
+        new_cs, uploads, pms_new, metrics = jax.vmap(
+            per_client, in_axes=(None, None, 0, 0))(x, ctx, cs, batches)
+        x2, server2, agg_metrics = strategy.aggregate(x, server, uploads, p)
+        metrics = {k: v.mean() for k, v in metrics.items()}
+        metrics.update(agg_metrics)
+        return new_cs, pms_new, x2, server2, metrics
+
+
+def _psum_mean_fn(axis: str, metrics_local: Dict[str, jax.Array],
+                  box: Dict) -> Callable:
+    """The mean ``strategy.aggregate`` lowers to psum under shard_map:
+    mean over the local cohort lanes, then ONE ``pmean`` across the client
+    axis.  The per-round metric scalars are bundled into the same psum so
+    the whole round has exactly one cross-client collective; the reduced
+    metrics come back through ``box`` (the aggregate's signature has no
+    metrics channel)."""
+    def mean_fn(tree: Pytree) -> Pytree:
+        local = tmap(lambda t: t.mean(0), tree)
+        reduced, box["metrics"] = jax.lax.pmean((local, metrics_local),
+                                                axis)
+        return reduced
+
+    return mean_fn
+
+
+@dataclass(frozen=True)
+class MeshPlacement:
+    """Datacenter cohort: the cohort dim lives on the mesh's client axis.
+
+    ``shard_map`` wraps the per-client map + aggregate; each shard runs
+    ``m / axis_size`` cohort lanes with ZERO cross-client traffic through
+    the tau-scan, then the delta-mean psum is the round's single
+    collective.  Stores are constrained to ``sharding/rules.param_specs``
+    layouts (client axis on dim 0 when ``n_clients`` divides, trailing
+    dims per the parameter rules)."""
+
+    mesh: Mesh
+    roles: Any = None  # MeshRoles; resolved from the mesh when None
+
+    name = "mesh"
+
+    def __post_init__(self):
+        if self.roles is None:
+            from repro.launch.mesh import mesh_roles
+            object.__setattr__(self, "roles", mesh_roles(self.mesh))
+
+    @property
+    def client_axis(self) -> str:
+        return self.roles.client
+
+    @property
+    def axis_size(self) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return sizes[self.client_axis]
+
+    def check(self, sim: SimConfig) -> None:
+        k = self.axis_size
+        if sim.m_sampled % k:
+            raise ValueError(
+                f"mesh placement: m_sampled={sim.m_sampled} must divide "
+                f"evenly over the client axis {self.client_axis!r} "
+                f"(size {k})")
+
+    def _store_specs(self, store: Pytree) -> Pytree:
+        from repro.sharding.rules import param_specs
+        return param_specs(store, self.mesh, model=self.roles.model,
+                           fsdp=self.roles.fsdp, client=self.client_axis)
+
+    def place_state(self, state: Pytree) -> Pytree:
+        """Lay the state out on the mesh: client/pms stores distributed
+        over the client axis (replicated fallback when n_clients does not
+        divide it), everything else replicated."""
+        rep = NamedSharding(self.mesh, P())
+        out = dict(state)
+        for key in state:
+            if key in ("clients", "pms") and jax.tree.leaves(state[key]):
+                out[key] = tmap(jax.device_put, state[key],
+                                self._store_specs(state[key]))
+            else:
+                out[key] = tmap(lambda t: jax.device_put(t, rep),
+                                state[key])
+        return out
+
+    def constrain_store(self, store: Pytree) -> Pytree:
+        """Pin a scattered store to its rules-derived layout inside jit,
+        so the round's output keeps the distributed layout its input had
+        (donation then reuses the sharded buffers)."""
+        if not jax.tree.leaves(store):
+            return store
+        return tmap(jax.lax.with_sharding_constraint, store,
+                    self._store_specs(store))
+
+    def cohort_map(self, fn, in_axes) -> Callable:
+        """Map ``fn`` over a cohort axis distributed over the client axis
+        (no collective: the async dispatch path).  ``in_axes`` follows
+        vmap conventions restricted to 0 | None."""
+        axis = self.client_axis
+        k = self.axis_size
+        specs = tuple(P(axis) if a == 0 else P() for a in in_axes)
+
+        def mapped(*args):
+            for a, arg in zip(in_axes, args):
+                leaves = jax.tree.leaves(arg)
+                if a == 0 and leaves and leaves[0].shape[0] % k:
+                    # fail fast with the placement's own message instead
+                    # of a deep shard_map dimension error (async dispatch
+                    # cohorts vary in size; see make_async_round_fn)
+                    raise ValueError(
+                        f"mesh placement: cohort size "
+                        f"{leaves[0].shape[0]} must divide evenly over "
+                        f"the client axis {axis!r} (size {k})")
+
+            def body(*shard_args):
+                local_axes = tuple(0 if a == 0 else None for a in in_axes)
+                return jax.vmap(fn, in_axes=local_axes)(*shard_args)
+
+            return shard_map(body, mesh=self.mesh, in_specs=specs,
+                             out_specs=P(axis))(*args)
+
+        return mapped
+
+    def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
+                grad_fn, p: float):
+        axis = self.client_axis
+        per_client = make_per_client(strategy, grad_fn)
+
+        def body(x, server, ctx, cs, batches):
+            new_cs, uploads, pms_new, metrics = jax.vmap(
+                per_client, in_axes=(None, None, 0, 0))(x, ctx, cs,
+                                                        batches)
+            metrics_local = {k: v.mean() for k, v in metrics.items()}
+            box: Dict = {}
+            x2, server2, agg_metrics = strategy.aggregate(
+                x, server, uploads, p,
+                mean_fn=_psum_mean_fn(axis, metrics_local, box))
+            # a strategy that never called mean_fn still needs its metric
+            # scalars reduced (costs a second, scalar-sized collective)
+            metrics_global = box.get("metrics")
+            if metrics_global is None:
+                metrics_global = jax.lax.pmean(metrics_local, axis)
+            metrics_global = dict(metrics_global)
+            metrics_global.update(agg_metrics)
+            return new_cs, pms_new, x2, server2, metrics_global
+
+        c = P(axis)
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(), P(), c, c),
+            out_specs=(c, c, P(), P(), P()))(x, server, ctx, cs, batches)
+
+
+def make_placement(name: str, mesh: Optional[Mesh] = None):
+    """'vmap' -> VmapPlacement(); 'mesh' -> MeshPlacement over ``mesh``
+    (default: all local devices on the client axis)."""
+    if name == "vmap":
+        return VmapPlacement()
+    if name == "mesh":
+        if mesh is None:
+            from repro.launch.mesh import make_client_mesh
+            mesh = make_client_mesh()
+        return MeshPlacement(mesh)
+    raise ValueError(f"unknown placement {name!r} (want 'vmap' | 'mesh')")
+
+
+# ---------------------------------------------------------------------------
+# the cohort executor
+# ---------------------------------------------------------------------------
+
+def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
+                      placement=None) -> Pytree:
+    """Full simulation state pytree.  ``x`` is copied: the state owns
+    every buffer it holds, so donating rounds never invalidate caller-held
+    params.  A mesh placement lays the stores out over the client axis."""
+    x = tmap(jnp.copy, x)
+    clients = broadcast_client_store(strategy.client_init(x), sim.n_clients)
+    # personalized-model store (Fig. 7): last local model per client
+    pms = broadcast_client_store(x, sim.n_clients)
+    state = {
+        "x": x,
+        "clients": clients,
+        "pms": pms,
+        "server": strategy.server_init(x),
+        "rng": jax.random.PRNGKey(sim.seed),
+        "round": jnp.zeros((), jnp.int32),
+    }
+    if placement is not None:
+        state = placement.place_state(state)
+    return state
+
+
+def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
+                      data: Dict[str, jax.Array], *, placement=None,
+                      donate: bool = True):
+    """The round executor: returns jitted ``round_fn(state) -> (state,
+    metrics)`` running sample -> gather -> local rounds -> scatter ->
+    aggregate with the cohort axis placed per ``placement``.
+
+    ``placement=None`` (or ``VmapPlacement()``) is bit-for-bit the
+    historical single-device ``make_round_fn``.  ``donate=True`` donates
+    the state pytree into the jitted call -- the client/pms stores update
+    in place; the passed-in state must not be reused afterwards."""
+    placement = placement or VmapPlacement()
+    placement.check(sim)
+    n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
+
+    def round_fn(state):
+        rng, k_sel, k_batch = split_round_rng(state["rng"])
+        idx = sample_cohort(k_sel, n, m)  # (m,)
+
+        # gather sampled client state + their data
+        cs = gather_client_state(state["clients"], idx)
+        batches = draw_cohort_batches(data, k_batch, idx, tau, b)
+        ctx = strategy.broadcast(state["x"], state["server"])
+
+        new_cs, pms_new, x, server, metrics = placement.execute(
+            strategy, state["x"], state["server"], ctx, cs, batches,
+            grad_fn, sim.p)
+
+        # scatter per-client state back (store layout pinned so donation
+        # reuses the distributed buffers under the mesh placement)
+        clients = placement.constrain_store(
+            scatter_cohort_rows(state["clients"], idx, new_cs))
+        pms = placement.constrain_store(
+            scatter_cohort_rows(state["pms"], idx, pms_new))
+        return {
+            "x": x, "clients": clients, "pms": pms, "server": server,
+            "rng": rng, "round": state["round"] + 1,
+        }, metrics
+
+    if donate:
+        return jax.jit(round_fn, donate_argnums=(0,))
+    return jax.jit(round_fn)

@@ -2,8 +2,15 @@
 
 Reproduces the paper's experiments (n=10 cross-silo / n=100 cross-device,
 client sampling, non-i.i.d splits) on a single host.  The whole round --
-sampling, gather, tau local steps per selected client, scatter, aggregate --
-is one jitted function.
+sampling, gather, tau local steps per selected client, scatter, aggregate
+-- is one jitted function.
+
+The round body itself lives in ``core/engine.py`` (the placement-pluggable
+cohort executor); this module is the simulation-regime surface over it:
+``make_round_fn`` with the default (vmap) placement is bit-for-bit the
+historical single-device path, and ``placement=MeshPlacement(mesh)`` (or
+``make_placement('mesh')``) runs the identical round with the cohort dim
+distributed over the mesh's client axis.
 
 Round buffers are DONATED by default (``make_round_fn(..., donate=True)``):
 the state pytree -- dominated by the ``n_clients x params`` client/
@@ -18,147 +25,63 @@ bit-for-bit (tested).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (  # noqa: F401  (re-exported regime surface)
+    MeshPlacement,
+    SimConfig,
+    VmapPlacement,
+    _personal_model,
+    broadcast_client_store,
+    gather_client_state,
+    init_cohort_state,
+    make_cohort_round,
+    make_placement,
+    sample_cohort,
+    scatter_client_rows,
+    scatter_cohort_rows,
+    split_round_rng,
+)
 from repro.core.strategies import Strategy, tmap
 
 Pytree = Any
 
 
-@dataclass(frozen=True)
-class SimConfig:
-    n_clients: int
-    m_sampled: int
-    tau: int
-    batch_size: int
-    seed: int = 0
-
-    @property
-    def p(self) -> float:
-        return self.m_sampled / self.n_clients
-
-
-def broadcast_client_store(template: Pytree, n: int) -> Pytree:
-    """Per-client store from a single-client template: leading n axis,
-    materialized (the stores are scattered into every round).  Shared by
-    the sync and async regimes.  Stateless strategies ({}) stay {}."""
-    if not jax.tree.leaves(template):
-        return {}
-    return tmap(lambda t: jnp.broadcast_to(t, (n,) + t.shape).copy(),
-                template)
-
-
-def gather_client_state(clients: Pytree, idx: jax.Array) -> Pytree:
-    """Rows ``idx`` of the client store; {} for stateless strategies --
-    the one empty-client-state path for both regimes."""
-    if not jax.tree.leaves(clients):
-        return {}
-    return tmap(lambda t: t[idx], clients)
-
-
-@partial(jax.jit, donate_argnums=(0,))
-def scatter_client_rows(store: Pytree, idx, new: Pytree) -> Pytree:
-    """``store.at[idx].set(new)`` with the store DONATED, so the
-    ``n_clients x params`` buffer updates in place instead of being
-    copied per call (the async regime's eager delivery path)."""
-    return tmap(lambda all_, nw: all_.at[idx].set(nw), store, new)
-
-
-def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree):
+def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree,
+                   placement=None):
     """Returns the full simulation state pytree.  ``x`` is copied: the
     state owns every buffer it holds, so donating rounds never invalidate
-    caller-held params."""
-    x = tmap(jnp.copy, x)
-    clients = broadcast_client_store(strategy.client_init(x), sim.n_clients)
-    # personalized-model store (Fig. 7): last local model per client
-    pms = broadcast_client_store(x, sim.n_clients)
-    return {
-        "x": x,
-        "clients": clients,
-        "pms": pms,
-        "server": strategy.server_init(x),
-        "rng": jax.random.PRNGKey(sim.seed),
-        "round": jnp.zeros((), jnp.int32),
-    }
-
-
-def _personal_model(strategy: Strategy, x, cs, upload):
-    if strategy.name == "feddeper":
-        return cs["v"]
-    if strategy.name == "scaffold":
-        return tmap(jnp.add, x, upload["dv"])
-    return tmap(jnp.add, x, upload)
+    caller-held params.  A mesh placement lays the client/pms stores out
+    over the mesh's client axis."""
+    return init_cohort_state(sim, strategy, x, placement)
 
 
 def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
-                  data: Dict[str, jax.Array], *, donate: bool = True):
+                  data: Dict[str, jax.Array], *, donate: bool = True,
+                  placement=None):
     """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
     {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state).
 
     ``donate=True`` donates the state pytree into the jitted call
     (``donate_argnums``) -- the client/pms stores update in place; the
     passed-in state must not be reused afterwards.  ``donate=False``
-    keeps the old copying semantics, bit-for-bit."""
-    n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
-    n_i = jax.tree.leaves(data)[0].shape[1]
-
-    def round_fn(state):
-        rng, k_sel, k_batch = jax.random.split(state["rng"], 3)
-        idx = jax.random.choice(k_sel, n, (m,), replace=False)  # (m,)
-
-        # gather sampled client state + their data
-        cs = gather_client_state(state["clients"], idx)
-        bidx = jax.random.randint(k_batch, (m, tau, b), 0, n_i)
-        batches = tmap(lambda t: jax.vmap(lambda i, bi: t[i][bi])(idx, bidx),
-                       data)  # (m, tau, b, ...)
-
-        ctx = strategy.broadcast(state["x"], state["server"])
-
-        def per_client(cs_i, batches_i):
-            return strategy.local_round(state["x"], ctx, cs_i, batches_i,
-                                        grad_fn)
-
-        new_cs, uploads, metrics = jax.vmap(per_client)(cs, batches)
-
-        # scatter per-client state back
-        clients = state["clients"]
-        if jax.tree.leaves(clients):
-            clients = tmap(lambda all_, new: all_.at[idx].set(new),
-                           clients, new_cs)
-        pms_new = jax.vmap(
-            lambda cs_i, up_i: _personal_model(strategy, state["x"], cs_i,
-                                               up_i))(new_cs, uploads)
-        pms = tmap(lambda all_, new: all_.at[idx].set(new),
-                   state["pms"], pms_new)
-
-        x, server, agg_metrics = strategy.aggregate(
-            state["x"], state["server"], uploads, sim.p)
-        metrics = {k: v.mean() for k, v in metrics.items()}
-        metrics.update(agg_metrics)
-        return {
-            "x": x, "clients": clients, "pms": pms, "server": server,
-            "rng": rng, "round": state["round"] + 1,
-        }, metrics
-
-    if donate:
-        return jax.jit(round_fn, donate_argnums=(0,))
-    return jax.jit(round_fn)
+    keeps the old copying semantics, bit-for-bit.  ``placement`` picks
+    where the cohort axis runs (engine.py); None = single-device vmap."""
+    return make_cohort_round(sim, strategy, grad_fn, data,
+                             placement=placement, donate=donate)
 
 
 def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:
     """The cohort the NEXT ``round_fn(state)`` call will sample, without
-    advancing the state.  Replays make_round_fn's rng splits -- kept here
-    so the split layout lives in exactly one module (used by straggler
-    accounting in benchmarks/examples).  Call BEFORE handing the state to
-    a donating round_fn."""
-    _, k_sel, _ = jax.random.split(state["rng"], 3)
-    return jax.random.choice(k_sel, sim.n_clients, (sim.m_sampled,),
-                             replace=False)
+    advancing the state.  Replays the engine's ``split_round_rng`` layout
+    -- the split lives in exactly one function, shared with the executor
+    (used by straggler accounting in benchmarks/examples).  Call BEFORE
+    handing the state to a donating round_fn."""
+    _, k_sel, _ = split_round_rng(state["rng"])
+    return sample_cohort(k_sel, sim.n_clients, sim.m_sampled)
 
 
 def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,

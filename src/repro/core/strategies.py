@@ -18,12 +18,20 @@ Protocol (all pytrees are params-shaped unless noted):
   local_round(x, ctx, cs, batches, grad_fn)
                    -> (new_cs, upload, metrics);  ``batches`` is a pytree
                       stacked over a leading tau axis, scanned.
-  aggregate(x, ss, uploads, p, weights=None)
+  aggregate(x, ss, uploads, p, weights=None, mean_fn=None)
                    -> (new_x, new_ss, metrics); ``uploads`` stacked over
                       the sampled-client axis.  ``weights`` (optional,
                       (m,)) are per-upload aggregation weights -- the
                       async regime's staleness discounts; None keeps the
-                      uniform mean.  Overrides must accept the kwarg.
+                      uniform mean.  ``mean_fn`` (optional) replaces the
+                      tree mean over the cohort axis wholesale -- the
+                      mesh placement passes the mean that lowers to the
+                      round's single cross-client ``psum`` under
+                      shard_map.  Contract: an aggregate calls ``mean_fn``
+                      EXACTLY ONCE on one tree containing every upload
+                      leaf (Scaffold means its whole {dv, dc} dict in one
+                      call), so one round = one collective.  Overrides
+                      must accept both kwargs.
 
 ``grad_fn(params, minibatch) -> (loss, grads)``.
 """
@@ -68,6 +76,25 @@ def tree_weighted_mean(tree: Pytree, w: jax.Array) -> Pytree:
     wn = jnp.where(s > 0, w / safe, 1.0 / w.shape[0])
     return tmap(lambda t: jnp.tensordot(wn, t.astype(jnp.float32),
                                         axes=(0, 0)), tree)
+
+
+def resolve_mean(mean_fn, weights):
+    """The cohort mean an ``aggregate`` reduces its uploads with: the
+    caller-supplied ``mean_fn`` when given (the mesh placement's
+    psum-lowering mean), else the plain / staleness-weighted tree mean.
+    The two knobs are mutually exclusive -- the mesh placement's mean is
+    uniform, so silently dropping ``weights`` would turn a staleness-
+    discounted aggregation into a uniform one."""
+    if mean_fn is not None:
+        if weights is not None:
+            raise ValueError(
+                "aggregate: mean_fn and weights are mutually exclusive "
+                "(the placement-supplied mean is uniform; weighted "
+                "mesh aggregation is not implemented)")
+        return mean_fn
+    if weights is None:
+        return tree_mean0
+    return lambda tree: tree_weighted_mean(tree, weights)
 
 
 def twin_grad_fn(loss_fn: Callable[[Pytree, Pytree], Tuple[jax.Array, Any]]
@@ -127,12 +154,14 @@ class Strategy:
     def broadcast(self, x: Pytree, server_state: Pytree) -> Pytree:
         return None
 
-    def aggregate(self, x, server_state, uploads, p, weights=None):
+    def aggregate(self, x, server_state, uploads, p, weights=None,
+                  mean_fn=None):
         """``weights`` (optional, shape (m,)): per-upload aggregation
         weights -- the async regime's staleness discounts.  ``None`` (the
-        synchronous regimes) keeps the uniform mean, bit-for-bit."""
-        delta = tree_mean0(uploads) if weights is None \
-            else tree_weighted_mean(uploads, weights)
+        synchronous regimes) keeps the uniform mean, bit-for-bit.
+        ``mean_fn`` (optional) swaps the cohort mean itself -- see the
+        module docstring's one-collective contract."""
+        delta = resolve_mean(mean_fn, weights)(uploads)
         if self.server_momentum:
             mu = tmap(lambda m, d:
                       (self.server_momentum * m
@@ -229,13 +258,12 @@ class Scaffold(Strategy):
         }
         return {"c_i": c_i_new}, upload, {"local_loss": losses.mean()}
 
-    def aggregate(self, x, server_state, uploads, p, weights=None):
-        if weights is None:
-            dv = tree_mean0(uploads["dv"])
-            dc = tree_mean0(uploads["dc"])
-        else:
-            dv = tree_weighted_mean(uploads["dv"], weights)
-            dc = tree_weighted_mean(uploads["dc"], weights)
+    def aggregate(self, x, server_state, uploads, p, weights=None,
+                  mean_fn=None):
+        # ONE mean call over the whole {dv, dc} dict (not one per stream):
+        # under the mesh placement that is the round's single psum
+        d = resolve_mean(mean_fn, weights)(uploads)
+        dv, dc = d["dv"], d["dc"]
         x = _axpy(self.server_lr, dv, x)
         # c += (m/n) mean(dc); doubles the uplink (the paper's 2x overhead)
         c = _axpy(p, dc, server_state["c"])

@@ -1,6 +1,7 @@
 # NOTE: do not import dryrun here -- it sets XLA_FLAGS at import time and
 # must only be imported as __main__ (python -m repro.launch.dryrun).
 from repro.launch.mesh import (  # noqa: F401
+    make_client_mesh,
     make_production_mesh,
     make_smoke_mesh,
     mesh_roles,

@@ -25,6 +25,18 @@ def make_smoke_mesh():
                      axis_types=axis_types_auto(2))
 
 
+def make_client_mesh(n_devices: Optional[int] = None):
+    """Every local device on the client ('data') axis, model axis 1: the
+    mesh the cohort engine's mesh placement targets by default.  On the
+    CPU container this is a 1-device mesh unless the process was started
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` (the
+    multi-device CI emulation; collectives become host memcpys, so only
+    layouts and collective counts are representative, not timings)."""
+    n = jax.local_device_count() if n_devices is None else n_devices
+    return make_mesh((n, 1), ("data", "model"),
+                     axis_types=axis_types_auto(2))
+
+
 @dataclass(frozen=True)
 class MeshRoles:
     """Which mesh axes play which FL/parallelism role."""

@@ -14,6 +14,19 @@ delays, the server aggregates staleness-discounted buffers:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --regime async --clients 8 --concurrent 4 --buffer 2 \
       --delay 5 --rounds 20 --batch 2 --seq 64
+
+``--placement {vmap,mesh}`` routes the synchronous regime through the
+cohort engine (core/engine.py) instead of the legacy fixed-cohort step:
+client sampling + the placement-pluggable round executor on the
+federated LM corpus.  ``mesh`` distributes the cohort and the client/pms
+stores over the client axis of a mesh spanning every local device (on
+CPU set ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` to
+emulate K devices):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --placement mesh --clients 8 --sampled 4 --tau 4 \
+      --rounds 10 --batch 2 --seq 64
 """
 from __future__ import annotations
 
@@ -27,19 +40,72 @@ import numpy as np
 
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
-from repro.configs import get_config
-from repro.core import (AsyncSimConfig, STRATEGIES, init_async_state,
-                        make_async_round_fn, make_round_step)
+from repro.configs import get_config, list_configs
+from repro.core import (AsyncSimConfig, STRATEGIES, SimConfig,
+                        init_async_state, init_sim_state,
+                        make_async_round_fn, make_placement, make_round_fn,
+                        make_round_step)
 from repro.core.federated import make_lm_grad_fn
 from repro.data import lm_client_batch, make_federated_lm
 from repro.models import init_model, transformer
 
 
+def _require_token_arch(cfg, arch: str, flag: str):
+    """The federated-LM paths train on token streams only; name the archs
+    that work instead of leaving the user to bisect the registry."""
+    if cfg.frontend is not None:
+        token = ", ".join(a for a in sorted(list_configs())
+                          if get_config(a).frontend is None)
+        raise SystemExit(
+            f"{flag} supports token-only archs ({token}); "
+            f"{arch} has a {cfg.frontend!r} frontend")
+
+
+def _ckpt_tree(s):
+    """The checkpointed slice of a round-regime state: model pytrees +
+    rng.  Regime bookkeeping (round/version counters, async slots/buffer)
+    is restored separately or dropped -- see each caller."""
+    return (s["x"], s["clients"], s["pms"], s["server"], s["rng"])
+
+
+def _restore_state(state, args) -> int:
+    """Load the latest checkpoint (if any) into ``state`` in place;
+    returns the round to resume from.  Counter keys are the caller's job:
+    the shared tree carries only what ``_ckpt_tree`` names."""
+    if not args.ckpt_dir:
+        return 0
+    path = latest_checkpoint(args.ckpt_dir)
+    if not path:
+        return 0
+    tree, meta = restore_checkpoint(path, _ckpt_tree(state))
+    (state["x"], state["clients"], state["pms"], state["server"],
+     state["rng"]) = tree
+    print(f"restored round {meta['step']} from {path}")
+    return meta["step"]
+
+
+def _drive_rounds(state, round_fn, args, start: int, rec_extra=None):
+    """The shared round loop: JSON line per round, periodic + final
+    checkpoints.  One copy so every regime inherits identical restore/
+    save/print semantics."""
+    t0 = time.time()
+    for k in range(start, args.rounds):
+        state, metrics = round_fn(state)
+        rec = {"round": k + 1, **(rec_extra or {}),
+               **{m: float(v) for m, v in metrics.items()},
+               "elapsed_s": round(time.time() - t0, 2)}
+        print(json.dumps(rec), flush=True)
+        if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, k + 1, _ckpt_tree(state))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.rounds, _ckpt_tree(state))
+    return 0
+
+
 def run_async(cfg, strategy, args):
     """Buffered-async LM training: heterogeneous client delays, versioned
     global model, staleness-discounted aggregation."""
-    if cfg.frontend is not None:
-        raise SystemExit("--regime async supports token-only archs")
+    _require_token_arch(cfg, args.arch, "--regime async")
     acfg = AsyncSimConfig(
         n_clients=args.clients, m_concurrent=args.concurrent,
         buffer_size=args.buffer, tau=args.tau, batch_size=args.batch,
@@ -54,34 +120,42 @@ def run_async(cfg, strategy, args):
     state = init_async_state(acfg, strategy, x)
     round_fn = make_async_round_fn(acfg, strategy, grad_fn, data)
 
-    # checkpoint the model pytrees + rng at aggregation boundaries;
-    # in-flight slots/buffer are dropped, so a restart redispatches (the
-    # staleness clock restarts too -- same semantics as clients rejoining)
-    def ckpt_tree(s):
-        return (s["x"], s["clients"], s["pms"], s["server"], s["rng"])
+    # checkpoints land at aggregation boundaries; in-flight slots/buffer
+    # are dropped, so a restart redispatches (the staleness clock
+    # restarts too -- same semantics as clients rejoining)
+    start = _restore_state(state, args)
+    state["round"] = state["version"] = start
+    return _drive_rounds(state, round_fn, args, start)
 
-    start = 0
-    if args.ckpt_dir:
-        path = latest_checkpoint(args.ckpt_dir)
-        if path:
-            tree, meta = restore_checkpoint(path, ckpt_tree(state))
-            (state["x"], state["clients"], state["pms"], state["server"],
-             state["rng"]) = tree
-            start = state["round"] = state["version"] = meta["step"]
-            print(f"restored aggregation {start} from {path}")
 
-    t0 = time.time()
-    for k in range(start, args.rounds):
-        state, metrics = round_fn(state)
-        rec = {"round": k + 1,
-               **{m: float(v) for m, v in metrics.items()},
-               "elapsed_s": round(time.time() - t0, 2)}
-        print(json.dumps(rec), flush=True)
-        if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, k + 1, ckpt_tree(state))
-    if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.rounds, ckpt_tree(state))
-    return 0
+def run_engine(cfg, strategy, args):
+    """Engine-based synchronous regime (``--placement``): client sampling
+    + the placement-pluggable cohort executor (core/engine.py) on the
+    federated LM corpus.  ``vmap`` keeps the cohort on one device;
+    ``mesh`` distributes cohort + stores over the client axis of a mesh
+    spanning every local device."""
+    _require_token_arch(cfg, args.arch, "--placement")
+    placement = make_placement(args.placement)
+    m = args.sampled or args.clients
+    sim = SimConfig(n_clients=args.clients, m_sampled=m, tau=args.tau,
+                    batch_size=args.batch, seed=args.seed)
+    data = {k: jnp.asarray(v) for k, v in make_federated_lm(
+        vocab=cfg.vocab_size, n_clients=args.clients,
+        per_client=args.per_client, seq_len=args.seq,
+        seed=args.seed).items()}
+    grad_fn = make_lm_grad_fn(cfg)
+    x = init_model(cfg, jax.random.PRNGKey(args.seed))
+    state = init_sim_state(sim, strategy, x, placement=placement)
+    round_fn = make_round_fn(sim, strategy, grad_fn, data,
+                             placement=placement)
+
+    start = _restore_state(state, args)
+    if start:
+        state["round"] = jnp.asarray(start, jnp.int32)
+        # restored arrays are host-loaded: re-place on the mesh
+        state = placement.place_state(state)
+    return _drive_rounds(state, round_fn, args, start,
+                         rec_extra={"placement": placement.name})
 
 
 def main(argv=None):
@@ -105,6 +179,16 @@ def main(argv=None):
     # buffered-async regime (core/async_rounds.py)
     ap.add_argument("--regime", default="datacenter",
                     choices=("datacenter", "async"))
+    # cohort-engine placement (core/engine.py); None = legacy fixed-cohort
+    # datacenter step
+    ap.add_argument("--placement", default=None, choices=("vmap", "mesh"),
+                    help="sync regime through the cohort engine: 'vmap' "
+                         "single-device, 'mesh' cohort + stores over the "
+                         "client axis of all local devices")
+    ap.add_argument("--sampled", type=int, default=None,
+                    help="engine placement: clients sampled per round "
+                         "(default: all; mesh needs it divisible by the "
+                         "client-axis size)")
     ap.add_argument("--concurrent", type=int, default=4,
                     help="async: clients training simultaneously")
     ap.add_argument("--buffer", type=int, default=2,
@@ -116,7 +200,8 @@ def main(argv=None):
     ap.add_argument("--delay-dist", default="lognormal",
                     choices=("constant", "uniform", "lognormal"))
     ap.add_argument("--per-client", type=int, default=64,
-                    help="async: LM sequences materialized per client")
+                    help="async/--placement: LM sequences materialized "
+                         "per client")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -128,7 +213,13 @@ def main(argv=None):
     strategy = STRATEGIES[args.strategy](**kw)
 
     if args.regime == "async":
+        if args.placement:
+            raise SystemExit("--placement applies to the synchronous "
+                             "regime (async dispatch cohorts vary in "
+                             "size; see core/async_rounds.py)")
         return run_async(cfg, strategy, args)
+    if args.placement:
+        return run_engine(cfg, strategy, args)
 
     rng = jax.random.PRNGKey(args.seed)
     x = init_model(cfg, rng)

@@ -114,6 +114,20 @@ def param_pspec(path, shape, *, model: str = "model",
     return P(*out)
 
 
+def client_store_pspec(path, shape, *, client: str, mesh_sizes,
+                       model: str = "model",
+                       fsdp: Optional[str] = None) -> P:
+    """Spec for one leaf of a per-client store (leading n_clients dim,
+    trailing params dims).  The client dim takes the client axis when
+    ``n_clients`` divides it and falls back to REPLICATED otherwise --
+    never an error -- so the cohort engine's mesh placement runs with any
+    n; the trailing dims follow the parameter rules."""
+    spec = param_pspec(path, shape[1:], model=model, fsdp=fsdp,
+                       mesh_sizes=mesh_sizes)
+    cax = client if _axis_ok(mesh_sizes, client, shape[0]) else None
+    return P(cax, *spec)
+
+
 def param_specs(shapes: Pytree, mesh: Mesh, *, model: str = "model",
                 fsdp: Optional[str] = None,
                 client: Optional[str] = None) -> Pytree:
@@ -125,10 +139,9 @@ def param_specs(shapes: Pytree, mesh: Mesh, *, model: str = "model",
     for path, leaf in flat:
         shape = leaf.shape
         if client is not None:
-            spec = param_pspec(path, shape[1:], model=model, fsdp=fsdp,
-                               mesh_sizes=sizes)
-            cax = client if _axis_ok(sizes, client, shape[0]) else None
-            spec = P(cax, *spec)
+            spec = client_store_pspec(path, shape, client=client,
+                                      model=model, fsdp=fsdp,
+                                      mesh_sizes=sizes)
         else:
             spec = param_pspec(path, shape, model=model, fsdp=fsdp,
                                mesh_sizes=sizes)

@@ -10,8 +10,8 @@ import pytest
 
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (FedDeper, Scaffold, SimConfig, init_sim_state,
-                        make_global_eval, make_round_fn, run_rounds,
-                        twin_grad_fn)
+                        make_global_eval, make_round_fn,
+                        peek_sampled_clients, run_rounds, twin_grad_fn)
 from repro.data import make_federated_classification
 from repro.models import classifier_loss, init_classifier
 
@@ -146,6 +146,29 @@ def test_donation_leaves_caller_params_alive(data, x0):
     # and the donated input state really was consumed on this backend
     with pytest.raises(RuntimeError):
         np.asarray(jax.tree.leaves(state0["x"])[0])
+
+
+# ------------------------------------------------------------ rng contract
+
+def test_peek_sampled_clients_predicts_round_cohort(data, x0):
+    """``peek_sampled_clients`` replays the engine's per-round rng split
+    layout; if the executor's splits drift, the predicted cohort diverges
+    from the one the round actually trains.  Detect the trained cohort
+    from which pms rows changed (sampled clients get a fresh personal
+    model, unsampled rows are untouched)."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    rf = make_round_fn(SIM, strategy, grad_fn, data, donate=False)
+    state = init_sim_state(SIM, strategy, x0)
+    for _ in range(3):  # hold across rounds, not just the seed state
+        predicted = sorted(int(c) for c in peek_sampled_clients(state, SIM))
+        before = [np.asarray(l) for l in jax.tree.leaves(state["pms"])]
+        state, _ = rf(state)
+        after = [np.asarray(l) for l in jax.tree.leaves(state["pms"])]
+        changed = sorted(
+            c for c in range(SIM.n_clients)
+            if any((b[c] != a[c]).any() for b, a in zip(before, after)))
+        assert changed == predicted
+        assert len(predicted) == SIM.m_sampled
 
 
 # ----------------------------------------------------- scanned global eval

@@ -81,6 +81,33 @@ def test_param_specs_cover_all_leaves(arch):
         assert len([a for a in s.spec if a is not None]) <= len(leaf.shape)
 
 
+def test_client_store_divisibility_fallback():
+    """A client-store leaf whose leading (n_clients) axis does not divide
+    the mesh's client axis must come back REPLICATED on that dim -- not
+    error (the engine's mesh placement relies on this to run rounds with
+    awkward n).  Symbolic check on the 4-way sizes; the end-to-end
+    4-device NamedSharding check lives in test_engine_placement.py."""
+    sizes4 = {"data": 4, "model": 1}
+    # n=6 does not divide the 4-way client axis -> client dim replicated
+    spec = rules.client_store_pspec([_K("wq")], (6, 4096, 8192),
+                                    client="data", model="model",
+                                    fsdp=None, mesh_sizes=sizes4)
+    assert spec[0] is None
+    # n=8 divides -> client dim sharded, trailing dims per param rules
+    spec = rules.client_store_pspec([_K("wq")], (8, 4096, 8192),
+                                    client="data", model="model",
+                                    fsdp=None, mesh_sizes=sizes4)
+    assert spec[0] == "data"
+    # ... and the real param_specs path on the 1-device mesh: any n
+    # divides 1, so the client axis is assigned and nothing errors
+    mesh = _mesh()
+    stacked = {"w": jax.ShapeDtypeStruct((5, 16, 8), jnp.float32)}
+    specs = rules.param_specs(stacked, mesh, model="model", fsdp=None,
+                              client="data")
+    assert specs["w"].spec[0] == "data"
+    assert all(a in (None, "data") for a in specs["w"].spec)
+
+
 def test_client_axis_prepended():
     cfg = get_config("llama3.2-3b")
     shapes = transformer.param_shapes(cfg, jnp.bfloat16)
