@@ -19,14 +19,31 @@ round engine has:
                           shard_map, delta-mean as one psum), interleaved
                           against the identical vmap row so the tracked
                           ``speedup_vs_vmap`` ratio prices the shard_map
-                          lowering (1-device mesh on this container).
+                          lowering (1-device mesh on this container);
+* ``*_block{K}``       -- the scan-compiled block driver
+                          (``engine.make_block_fn``): K rounds per jitted
+                          ``lax.scan`` call, one host sync + donation
+                          handoff per block, interleaved against the
+                          host-loop row it is bitwise-equal to
+                          (``speedup_vs_loop``); the vmap K in {4, 12}
+                          rows also record live-memory scaling with K,
+                          and ``mesh_block4`` prices the scan under the
+                          mesh placement.
 
 Every run rewrites ``BENCH_round_engine.json`` at the repo root so each
 PR leaves a perf trajectory.  Schema (validated by ``validate_bench``):
 
     { bench_name: { "us_per_round": float,        # best-of-reps mean
-                    "peak_bytes":   int | null,   # device peak, if known
+                    "peak_bytes":   int,          # temp+output bytes of
+                                                  # the compiled round /
+                                                  # block executable
                     "config":       { ... } } }   # exact knobs + speedups
+
+``peak_bytes`` comes from ``compiled.memory_analysis()`` (XLA's static
+allocation plan: temp buffers + outputs), NOT from runtime device stats
+-- it is deterministic, available on every backend including CPU, and
+null is a schema error.  Async rows probe their dominant jitted pieces
+(full-size dispatch + aggregation) the same way and record the max.
 """
 from __future__ import annotations
 
@@ -41,8 +58,10 @@ from benchmarks.common import build_task, csv_row
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
                         SimConfig, init_async_state, init_sim_state,
-                        make_async_round_fn, make_placement, make_round_fn,
-                        twin_grad_fn)
+                        make_async_round_fn, make_block_fn, make_placement,
+                        make_round_fn, twin_grad_fn)
+from repro.core.engine import make_per_client
+from repro.core.strategies import tmap
 from repro.models import init_classifier
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_round_engine.json"
@@ -53,39 +72,74 @@ QUICK = dict(n=10, m=10, tau=5, batch=32)
 FULL = dict(n=100, m=20, tau=10, batch=32)
 
 
-def _peak_bytes() -> Optional[int]:
+def _compiled_peak(jitted, *args):
+    """AOT-lower ``jitted`` for ``args`` (arrays or ShapeDtypeStructs);
+    returns ``(compiled, peak)`` where peak = temp + output bytes of the
+    executable's static allocation plan -- the live-memory price of one
+    call, deterministic and backend-independent
+    (``compiled.memory_analysis()``) -- or ``(None, None)`` when the AOT
+    path is unavailable.  THE one definition of peak_bytes: sync rows
+    and the async probe both report it."""
     try:
-        stats = jax.local_devices()[0].memory_stats()
-        if stats and "peak_bytes_in_use" in stats:
-            return int(stats["peak_bytes_in_use"])
-    except Exception:  # noqa: BLE001  (backend without memory stats)
-        pass
-    return None
+        compiled = jitted.lower(*args).compile()
+        ma = compiled.memory_analysis()
+        return compiled, (int(ma.temp_size_in_bytes) +
+                          int(ma.output_size_in_bytes))
+    except Exception:  # noqa: BLE001  (AOT path unavailable)
+        return None, None
+
+
+def _sds(tree, lead=()):
+    """ShapeDtypeStruct pytree (optionally with extra leading dims) --
+    the AOT lowering probe's stand-in arguments."""
+    return tmap(lambda t: jax.ShapeDtypeStruct(tuple(lead) + t.shape,
+                                               t.dtype), tree)
 
 
 class _Prepared:
     """A compiled bench: round_fn plus its rolling state.  The warmup
     round both compiles and (donating engines) consumes the init state,
     so every timed block continues from post-warmup state like a real
-    run."""
+    run.  ``rounds_per_call`` is the number of simulated rounds one
+    ``round_fn`` call advances (1 for the host loop, K for scan blocks);
+    timings are always normalized per ROUND.
 
-    def __init__(self, round_fn, state, cfg):
-        self.round_fn, self.cfg = round_fn, cfg
+    Jitted round_fns are AOT-lowered ONCE: the same ``Compiled`` object
+    supplies ``memory_analysis()`` (peak_bytes) and then serves the
+    warmup + timed calls -- ``lower().compile()`` does not seed the jit
+    dispatch cache on this jax, so calling the wrapped fn afterwards
+    would compile the identical computation a second time (AOT calls are
+    bitwise-equal to the jit path and honor donation; verified on CPU
+    jax 0.4.37)."""
+
+    def __init__(self, round_fn, state, cfg, *, rounds_per_call: int = 1,
+                 peak_bytes: Optional[int] = None):
+        self.cfg = cfg
+        self.rounds_per_call = rounds_per_call
+        if peak_bytes is None and hasattr(round_fn, "lower"):
+            compiled, peak_bytes = _compiled_peak(round_fn, state)
+            if compiled is not None:
+                round_fn = compiled
+        self.round_fn = round_fn
+        self.peak_bytes = peak_bytes
         self.state, _ = round_fn(state)
         jax.block_until_ready(jax.tree.leaves(self.state["x"])[0])
         self.best = float("inf")
-        self.peak_bytes = None
 
     def block(self, rounds: int) -> float:
-        """Run one timed block; returns its per-round seconds (callers
-        pairing two benches take window-local minima from the return
-        value so a ratio never mixes timings from different blocks)."""
+        """Run one timed block of ``rounds`` simulated rounds (callers
+        keep it a multiple of ``rounds_per_call``); returns its per-round
+        seconds (callers pairing two benches take window-local minima
+        from the return value so a ratio never mixes timings from
+        different blocks)."""
+        calls = max(1, rounds // self.rounds_per_call)
         t0 = time.perf_counter()
         s = self.state
-        for _ in range(rounds):
+        for _ in range(calls):
             s, _ = self.round_fn(s)
         jax.block_until_ready(jax.tree.leaves(s["x"])[0])
-        per_round = (time.perf_counter() - t0) / rounds
+        per_round = (time.perf_counter() - t0) / (calls *
+                                                  self.rounds_per_call)
         self.best = min(self.best, per_round)
         self.state = s
         return per_round
@@ -96,20 +150,68 @@ class _Prepared:
 
 
 def _prep_sync(task, x0, scale, strategy, *, donate, twin,
-               placement=None):
+               placement=None, block=None):
     sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
                     tau=scale["tau"], batch_size=scale["batch"], seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
     pl = make_placement(placement) if placement else None
-    rf = make_round_fn(sim, strategy, grad_fn, task["data"], donate=donate,
-                       placement=pl)
+    if block:
+        rf = make_block_fn(sim, strategy, grad_fn, task["data"],
+                           block_size=block, donate=donate, placement=pl)
+    else:
+        rf = make_round_fn(sim, strategy, grad_fn, task["data"],
+                           donate=donate, placement=pl)
     cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
                twin_grads=twin, placement=placement or "vmap", **scale)
+    if block:
+        cfg["block_rounds"] = block
     for k in ("use_pallas", "fuse_grads"):
         if hasattr(strategy, k):
             cfg[k] = getattr(strategy, k)
     return _Prepared(rf, init_sim_state(sim, strategy, x0, placement=pl),
-                     cfg)
+                     cfg, rounds_per_call=block or 1)
+
+
+def _async_peak_bytes(arf, acfg, task, strategy, grad_fn, state
+                      ) -> Optional[int]:
+    """Max temp+output bytes over the async regime's jitted pieces, AOT-
+    lowered at their LARGEST shapes: a full ``m_concurrent`` dispatch
+    (tau-scan cohort training -- the dominant allocation) and a full-
+    buffer weighted aggregation.  The host-side event loop itself
+    allocates nothing device-side beyond these."""
+    f, tau, b = acfg.m_concurrent, acfg.tau, acfg.batch_size
+    x, server, clients = state["x"], state["server"], state["clients"]
+    ctx = jax.eval_shape(strategy.broadcast, x, server)
+    cs = _sds(tmap(lambda t: t[0], clients), (f,)) \
+        if jax.tree.leaves(clients) else {}
+    batches = tmap(lambda t: jax.ShapeDtypeStruct(
+        (f, tau, b) + t.shape[2:], t.dtype), task["data"])
+    parts = getattr(arf, "jitted_parts", {})
+    peaks = []
+    tc = parts.get("train_cohort")
+    if tc is not None:
+        _, p = _compiled_peak(tc, _sds(x, (f,)), _sds(ctx, (f,)), cs,
+                              batches)
+        if p is not None:
+            peaks.append(p)
+        # upload shapes for the aggregation probe come from the abstract
+        # per-client round (no FLOPs run under eval_shape)
+        per_client = make_per_client(strategy, grad_fn)
+        _, upload, _, _ = jax.eval_shape(
+            per_client, _sds(x), _sds(ctx),
+            _sds(tmap(lambda t: t[0], clients))
+            if jax.tree.leaves(clients) else {},
+            tmap(lambda t: jax.ShapeDtypeStruct((tau, b) + t.shape[2:],
+                                                t.dtype), task["data"]))
+        agg = parts.get("agg_weighted" if acfg.alpha else "agg_plain")
+        if agg is not None:
+            w = (jax.ShapeDtypeStruct((acfg.buffer_size,),
+                                      "float32"),) if acfg.alpha else ()
+            _, p = _compiled_peak(agg, _sds(x), _sds(server),
+                                  _sds(upload, (acfg.buffer_size,)), *w)
+            if p is not None:
+                peaks.append(p)
+    return max(peaks) if peaks else None
 
 
 def _prep_async(task, x0, scale, strategy, *, donate, twin):
@@ -125,7 +227,9 @@ def _prep_async(task, x0, scale, strategy, *, donate, twin):
     for k in ("use_pallas", "fuse_grads"):
         if hasattr(strategy, k):
             cfg[k] = getattr(strategy, k)
-    return _Prepared(arf, init_async_state(acfg, strategy, x0), cfg)
+    state = init_async_state(acfg, strategy, x0)
+    peak = _async_peak_bytes(arf, acfg, task, strategy, grad_fn, state)
+    return _Prepared(arf, state, cfg, peak_bytes=peak)
 
 
 def validate_bench(obj) -> None:
@@ -144,8 +248,12 @@ def validate_bench(obj) -> None:
         if not isinstance(us, (int, float)) or us <= 0:
             raise ValueError(f"{name}: us_per_round must be positive")
         pb = entry["peak_bytes"]
-        if pb is not None and (not isinstance(pb, int) or pb < 0):
-            raise ValueError(f"{name}: peak_bytes must be null or int >= 0")
+        # null was accepted while peak came from (CPU-absent) device
+        # stats; compiled.memory_analysis() exists on every backend, so
+        # a missing peak is now a harness bug, not a platform gap
+        if not isinstance(pb, int) or isinstance(pb, bool) or pb <= 0:
+            raise ValueError(f"{name}: peak_bytes must be a positive int "
+                             f"(got {pb!r})")
         if not isinstance(entry["config"], dict):
             raise ValueError(f"{name}: config must be a dict")
 
@@ -170,9 +278,12 @@ def _benches():
         "feddeper_sync_fused": (
             "sync", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True)),
+        # per-leaf interpret launches are ~10x a treemap round on CPU,
+        # but the row still runs the SAME rounds=12 protocol as its
+        # paired fused row -- like-for-like pairs beat a short bench
         "feddeper_sync_pallas_unfused": (
             "sync", FedDeper(use_pallas=True, fuse_grads=False, **DEPER),
-            dict(donate=False, twin=False, slow_pallas=True)),
+            dict(donate=False, twin=False)),
         "feddeper_sync_pallas_fused": (
             "sync", FedDeper(use_pallas=True, fuse_grads=True, **DEPER),
             dict(donate=True, twin=True)),
@@ -182,6 +293,18 @@ def _benches():
         "feddeper_sync_mesh": (
             "sync", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True, placement="mesh")),
+        # scan-compiled blocks (engine.make_block_fn): K rounds per jitted
+        # call, bitwise-equal to the host-loop row they pair against; the
+        # two vmap K's record how live memory scales with block size
+        "feddeper_sync_block4": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, block=4)),
+        "feddeper_sync_block12": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, block=12)),
+        "feddeper_sync_mesh_block4": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, placement="mesh", block=4)),
         "feddeper_async_unfused": (
             "async", FedDeper(fuse_grads=False, **DEPER),
             dict(donate=False, twin=False)),
@@ -203,6 +326,12 @@ _SPEEDUP_PAIRS = {
     # placement ratio: mesh vs the identical vmap round (<= 1.0 expected
     # on a 1-device mesh -- it prices the shard_map lowering)
     "feddeper_sync_mesh": ("feddeper_sync_fused", "speedup_vs_vmap"),
+    # scan ratio: K rounds per jitted call vs one jitted call per round
+    # (the block row is bitwise-equal to its reference, so the ratio is
+    # pure dispatch/sync/donation-handoff amortization)
+    "feddeper_sync_block4": ("feddeper_sync_fused", "speedup_vs_loop"),
+    "feddeper_sync_block12": ("feddeper_sync_fused", "speedup_vs_loop"),
+    "feddeper_sync_mesh_block4": ("feddeper_sync_mesh", "speedup_vs_loop"),
 }
 
 
@@ -221,25 +350,26 @@ def round_engine_rows(quick: bool = True, *,
     for name, (kind, strategy, opts) in _benches().items():
         if include is not None and name not in include:
             continue
-        # the per-leaf interpret path is ~10x a treemap round on CPU:
-        # keep its timed block short so the bench stays runnable
-        n_rounds[name] = rounds if rounds is not None else \
-            (3 if opts.get("slow_pallas") else (12 if quick else 30))
+        base = rounds if rounds is not None else (12 if quick else 30)
+        # a scan-block bench advances `block` rounds per call: round its
+        # timed window to a whole number of calls (at least one)
+        k = opts.get("block", 1)
+        n_rounds[name] = max(k, (base // k) * k)
         if kind == "sync":
             prepared[name] = _prep_sync(task, x0, scale, strategy,
                                         donate=opts["donate"],
                                         twin=opts["twin"],
-                                        placement=opts.get("placement"))
+                                        placement=opts.get("placement"),
+                                        block=opts.get("block"))
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
                                          twin=opts["twin"])
     # fused/unfused pairs run INTERLEAVED rep blocks so machine-speed
     # drift between the two sides cancels out of the tracked ratio;
-    # everything else runs its reps back to back
-    # peak_bytes is read right after a bench's own timed blocks; device
-    # peaks are cumulative (no portable reset), so the value means "peak
-    # observed by the time this bench finished" -- null off-TPU/GPU
+    # everything else runs its reps back to back.  peak_bytes needs no
+    # timing window: it is the compiled executable's static allocation
+    # plan, recorded at prep time
     paired = set()
     pair_ratio: Dict[str, float] = {}
     for name, (ref, _key) in _SPEEDUP_PAIRS.items():
@@ -255,13 +385,10 @@ def round_engine_rows(quick: bool = True, *,
                 best_name = min(best_name,
                                 prepared[name].block(n_rounds[name]))
             pair_ratio[name] = best_ref / best_name
-            prepared[ref].peak_bytes = prepared[name].peak_bytes = \
-                _peak_bytes()
     for name, p in prepared.items():
         if name not in paired:
             for _ in range(reps):
                 p.block(n_rounds[name])
-            p.peak_bytes = _peak_bytes()
 
     results: Dict[str, Dict] = {}
     for name, p in prepared.items():

@@ -12,18 +12,18 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q -m "not slow" "$@"
 
-# Multi-device shard: the mesh-placement equivalence tests.  The 4-device
-# coverage runs in subprocesses that set
+# Multi-device shard: the mesh-placement + block-scan equivalence tests.
+# The 4-device coverage runs in subprocesses that set
 # XLA_FLAGS=--xla_force_host_platform_device_count=4 themselves (the
 # parent process must NOT carry that flag -- tests/conftest.py asserts
 # so).  The unfiltered main run above already executes these files, so
 # the explicit shard only fires when extra args were passed and may have
-# filtered them out.  (Option-only args like -q re-run the two files
+# filtered them out.  (Option-only args like -q re-run the files
 # redundantly -- harmless, and cheaper than parsing pytest's CLI here.)
 if [ "$#" -gt 0 ]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_engine_placement.py \
-        tests/test_sharding_rules.py
+        tests/test_block_scan.py tests/test_sharding_rules.py
 fi
 
 # Quick-mode round-engine bench smoke: run the headline fused-vs-unfused
@@ -47,7 +47,8 @@ try:
         quick=True, rounds=2, reps=1, out_path=scratch or BENCH_PATH,
         include=("feddeper_sync_unfused", "feddeper_sync_fused",
                  "feddeper_sync_pallas_unfused",
-                 "feddeper_sync_pallas_fused", "feddeper_sync_mesh"))
+                 "feddeper_sync_pallas_fused", "feddeper_sync_mesh",
+                 "feddeper_sync_block4", "feddeper_sync_mesh_block4"))
     for r in rows:
         print(r)
     validate_bench(json.loads(BENCH_PATH.read_text()))

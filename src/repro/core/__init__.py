@@ -19,17 +19,21 @@ from repro.core.engine import (  # noqa: F401
     MeshPlacement,
     VmapPlacement,
     make_cohort_round,
+    make_dispatch_cohort,
     make_placement,
+    make_round_body,
 )
 from repro.core.rounds import (  # noqa: F401
     SimConfig,
     broadcast_client_store,
     gather_client_state,
     init_sim_state,
+    make_block_fn,
     make_global_eval,
     make_personal_eval,
     make_round_fn,
     peek_sampled_clients,
+    run_blocks,
     run_rounds,
     scatter_client_rows,
 )

@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.engine import (VmapPlacement, broadcast_client_store,
                                draw_cohort_batches, gather_client_state,
-                               make_per_client, sample_cohort,
+                               make_dispatch_cohort, sample_cohort,
                                scatter_client_rows, scatter_cohort_rows,
                                split_round_rng)
 from repro.core.strategies import Strategy, tmap
@@ -150,12 +150,14 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         if donate else (lambda *a: jax.jit)
     _scatter = scatter_client_rows if donate else \
         jax.jit(scatter_cohort_rows)
-    per_client = make_per_client(strategy, grad_fn)
+    dispatch_cohort = make_dispatch_cohort(strategy, grad_fn, placement)
 
     @_donate(0, 2)
     def train_cohort(xs, ctxs, cs, batches):
-        """tau local steps for a cohort of dispatched clients; every operand
-        carries the cohort axis (each client sees its own pulled model).
+        """tau local steps for a cohort of dispatched clients: the shared
+        ``engine.make_dispatch_cohort`` body (every operand carries the
+        cohort axis -- each client sees its own pulled model), wrapped
+        here only for donation.
 
         ``xs`` (the per-cohort model broadcast) and ``cs`` (the gathered
         client state) are freshly materialized per dispatch and donated:
@@ -169,9 +171,7 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         costs wasted lane compute and complicates the bit-for-bit
         degenerate-case guarantee, so the simulator keeps the honest
         shapes."""
-        return placement.cohort_map(per_client,
-                                    in_axes=(0, 0, 0, 0))(xs, ctxs, cs,
-                                                          batches)
+        return dispatch_cohort(xs, ctxs, cs, batches)
 
     # x and server are donated: the versioned global model updates in
     # place at every aggregation (_aggregate immediately rebinds
@@ -292,4 +292,12 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
             if metrics is not None:
                 return state, metrics
 
+    # the jitted pieces the host-side driver launches, exposed so tooling
+    # (benchmarks/round_engine.py's peak-memory probe) can AOT-lower them
+    # with representative shapes; the driver itself stays host-side
+    async_round.jitted_parts = {
+        "train_cohort": train_cohort,
+        "agg_plain": agg_plain,
+        "agg_weighted": agg_weighted,
+    }
     return async_round

@@ -46,7 +46,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.strategies import Strategy, tmap
@@ -153,6 +153,17 @@ def make_per_client(strategy: Strategy, grad_fn) -> Callable:
     return per_client
 
 
+def make_dispatch_cohort(strategy: Strategy, grad_fn, placement) -> Callable:
+    """The cohort-mapped per-client body the async regime launches per
+    dispatch: EVERY operand carries the cohort axis (each client trains
+    against its own pulled snapshot), so there is no aggregate and no
+    collective -- just ``Placement.cohort_map`` over ``make_per_client``.
+    The sync round body maps the same per-client function with a shared
+    broadcast model instead (``Placement.execute``)."""
+    return placement.cohort_map(make_per_client(strategy, grad_fn),
+                                in_axes=(0, 0, 0, 0))
+
+
 # ---------------------------------------------------------------------------
 # placements
 # ---------------------------------------------------------------------------
@@ -247,20 +258,22 @@ class MeshPlacement:
         return param_specs(store, self.mesh, model=self.roles.model,
                            fsdp=self.roles.fsdp, client=self.client_axis)
 
-    def place_state(self, state: Pytree) -> Pytree:
-        """Lay the state out on the mesh: client/pms stores distributed
+    def state_specs(self, state: Pytree) -> Pytree:
+        """NamedSharding pytree for a full sim state: client/pms stores
         over the client axis (replicated fallback when n_clients does not
-        divide it), everything else replicated."""
-        rep = NamedSharding(self.mesh, P())
-        out = dict(state)
-        for key in state:
-            if key in ("clients", "pms") and jax.tree.leaves(state[key]):
-                out[key] = tmap(jax.device_put, state[key],
-                                self._store_specs(state[key]))
-            else:
-                out[key] = tmap(lambda t: jax.device_put(t, rep),
-                                state[key])
-        return out
+        divide it), everything else replicated.  This is THE carry layout
+        contract: ``place_state`` materializes it, and the scan-block
+        driver relies on the round body re-pinning its outputs to the same
+        specs (``constrain_store``) so the carry never reshards between
+        scanned rounds."""
+        from repro.sharding.rules import sim_state_specs
+        return sim_state_specs(state, self.mesh, client=self.client_axis,
+                               model=self.roles.model, fsdp=self.roles.fsdp)
+
+    def place_state(self, state: Pytree) -> Pytree:
+        """Lay the state out on the mesh per ``state_specs``."""
+        return jax.tree.map(jax.device_put, state,
+                            self.state_specs(state))
 
     def constrain_store(self, store: Pytree) -> Pytree:
         """Pin a scattered store to its rules-derived layout inside jit,
@@ -369,22 +382,19 @@ def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
     return state
 
 
-def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
-                      data: Dict[str, jax.Array], *, placement=None,
-                      donate: bool = True):
-    """The round executor: returns jitted ``round_fn(state) -> (state,
-    metrics)`` running sample -> gather -> local rounds -> scatter ->
-    aggregate with the cohort axis placed per ``placement``.
-
-    ``placement=None`` (or ``VmapPlacement()``) is bit-for-bit the
-    historical single-device ``make_round_fn``.  ``donate=True`` donates
-    the state pytree into the jitted call -- the client/pms stores update
-    in place; the passed-in state must not be reused afterwards."""
+def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
+                    data: Dict[str, jax.Array], placement=None) -> Callable:
+    """The UN-jitted round body ``body(state) -> (state, metrics)``:
+    sample -> gather -> local rounds -> scatter -> aggregate with the
+    cohort axis placed per ``placement``.  Everything -- rng splitting,
+    cohort sampling, batch draws -- is in-graph, so the body composes:
+    ``make_cohort_round`` jits it directly (one call per round) and
+    ``make_block_fn`` scans it (one call per R rounds)."""
     placement = placement or VmapPlacement()
     placement.check(sim)
     n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
 
-    def round_fn(state):
+    def round_body(state):
         rng, k_sel, k_batch = split_round_rng(state["rng"])
         idx = sample_cohort(k_sel, n, m)  # (m,)
 
@@ -398,7 +408,8 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
             grad_fn, sim.p)
 
         # scatter per-client state back (store layout pinned so donation
-        # reuses the distributed buffers under the mesh placement)
+        # reuses the distributed buffers under the mesh placement, and so
+        # a scan carry keeps the layout it entered with)
         clients = placement.constrain_store(
             scatter_cohort_rows(state["clients"], idx, new_cs))
         pms = placement.constrain_store(
@@ -408,6 +419,58 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
             "rng": rng, "round": state["round"] + 1,
         }, metrics
 
+    return round_body
+
+
+def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
+                      data: Dict[str, jax.Array], *, placement=None,
+                      donate: bool = True):
+    """The per-round executor: returns jitted ``round_fn(state) -> (state,
+    metrics)``.
+
+    ``placement=None`` (or ``VmapPlacement()``) is bit-for-bit the
+    historical single-device ``make_round_fn``.  ``donate=True`` donates
+    the state pytree into the jitted call -- the client/pms stores update
+    in place; the passed-in state must not be reused afterwards."""
+    round_body = make_round_body(sim, strategy, grad_fn, data, placement)
     if donate:
-        return jax.jit(round_fn, donate_argnums=(0,))
-    return jax.jit(round_fn)
+        return jax.jit(round_body, donate_argnums=(0,))
+    return jax.jit(round_body)
+
+
+def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
+                  data: Dict[str, jax.Array], *, block_size: int,
+                  placement=None, donate: bool = True):
+    """The multi-round executor: ``block_size`` rounds inside ONE jitted
+    ``lax.scan``.  Returns ``block_fn(state) -> (state, metrics)`` where
+    every metric scalar comes back stacked as a ``(block_size,)`` array
+    (round r of the block at index r), so the host syncs -- and the
+    dispatch/donation handoff happens -- once per block instead of once
+    per round.
+
+    RNG-stream contract: the scanned body is exactly the per-round body,
+    with the state (including ``state['rng']``) as the scan carry, so the
+    block splits the round keys identically to a host loop over
+    ``make_cohort_round`` -- the two trajectories are bitwise-equal on
+    CPU/TPU (tested for block_size in {1, 3, R}).  Under a mesh placement
+    the carry threads the sharded client/pms stores through the scan
+    without resharding (the body re-pins them via ``constrain_store``),
+    keeping exactly one cross-client psum per round -- i.e. one psum in
+    the scanned body, executed ``block_size`` times.
+
+    Tradeoff: compile time grows with nothing (the body compiles once,
+    scan-iterated), but eval/logging granularity becomes the block
+    boundary -- drive it with ``rounds.run_blocks``."""
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    round_body = make_round_body(sim, strategy, grad_fn, data, placement)
+
+    def block_fn(state):
+        def step(carry, _):
+            return round_body(carry)
+
+        return jax.lax.scan(step, state, None, length=block_size)
+
+    if donate:
+        return jax.jit(block_fn, donate_argnums=(0,))
+    return jax.jit(block_fn)

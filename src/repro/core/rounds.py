@@ -29,6 +29,7 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import (  # noqa: F401  (re-exported regime surface)
     MeshPlacement,
@@ -38,8 +39,10 @@ from repro.core.engine import (  # noqa: F401  (re-exported regime surface)
     broadcast_client_store,
     gather_client_state,
     init_cohort_state,
+    make_block_fn,
     make_cohort_round,
     make_placement,
+    make_round_body,
     sample_cohort,
     scatter_client_rows,
     scatter_cohort_rows,
@@ -98,6 +101,52 @@ def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,
         history.append(rec)
         if log is not None:
             log(rec)
+    return state, history
+
+
+def run_blocks(state, make_block, k_rounds: int, block_size: int,
+               eval_fn=None, log=None, on_block=None,
+               first_round: int = 0):
+    """Drive ``k_rounds`` in ceil(k_rounds / block_size) scan-compiled
+    blocks (``engine.make_block_fn``); returns (state, history) with the
+    same per-round metric records as ``run_rounds`` -- the trajectory is
+    bitwise-identical, only the host-sync/eval cadence changes.
+
+    ``make_block(size) -> block_fn`` is called once per DISTINCT block
+    size: the full ``block_size`` (compiled once, reused every block) plus
+    at most one tail block when ``block_size`` does not divide
+    ``k_rounds``.  Eval cadence is the block boundary: ``eval_fn(state)``
+    runs after each block and its scalars land on the block's last round
+    record (so with ``block_size=1`` and ``eval_every=1`` this matches
+    ``run_rounds`` record-for-record).  ``on_block(state, rounds_done)``
+    is the checkpoint hook -- called after each block with the live state.
+    ``log`` receives each per-round record, once per round, after its
+    block completes.  ``first_round`` offsets the record numbering (a
+    resumed run restoring at round s passes ``first_round=s``)."""
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    history = []
+    fns = {}
+    done = 0
+    while done < k_rounds:
+        size = min(block_size, k_rounds - done)
+        if size not in fns:
+            fns[size] = make_block(size)
+        state, stacked = fns[size](state)
+        stacked = {k: np.asarray(v) for k, v in stacked.items()}
+        recs = [{"round": first_round + done + r + 1,
+                 **{k: float(v[r]) for k, v in stacked.items()}}
+                for r in range(size)]
+        done += size
+        if eval_fn is not None:
+            recs[-1].update({k: float(v)
+                             for k, v in eval_fn(state).items()})
+        history.extend(recs)
+        if log is not None:
+            for rec in recs:
+                log(rec)
+        if on_block is not None:
+            on_block(state, done)
     return state, history
 
 

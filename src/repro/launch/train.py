@@ -27,6 +27,16 @@ emulate K devices):
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --placement mesh --clients 8 --sampled 4 --tau 4 \
       --rounds 10 --batch 2 --seq 64
+
+``--block-rounds K`` (engine placements only) runs K rounds per jitted
+``lax.scan`` block instead of one jitted call per round: one host sync
+and one donation handoff per block, per-round metrics returned stacked,
+held-out global eval + checkpoints at block boundaries.  Bitwise the
+same trajectory as the per-round loop:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
+      --block-rounds 4 --batch 2 --seq 64
 """
 from __future__ import annotations
 
@@ -43,8 +53,9 @@ from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
 from repro.configs import get_config, list_configs
 from repro.core import (AsyncSimConfig, STRATEGIES, SimConfig,
                         init_async_state, init_sim_state,
-                        make_async_round_fn, make_placement, make_round_fn,
-                        make_round_step)
+                        make_async_round_fn, make_block_fn,
+                        make_global_eval, make_placement, make_round_fn,
+                        make_round_step, run_blocks)
 from repro.core.federated import make_lm_grad_fn
 from repro.data import lm_client_batch, make_federated_lm
 from repro.models import init_model, transformer
@@ -128,12 +139,36 @@ def run_async(cfg, strategy, args):
     return _drive_rounds(state, round_fn, args, start)
 
 
+def _make_lm_eval(cfg, args):
+    """Global-model eval for the block driver: next-token loss/accuracy
+    on a HELD-OUT federated LM split (same Zipf client skew, disjoint
+    seed), flattened across clients and scanned by ``make_global_eval``."""
+    held = make_federated_lm(
+        vocab=cfg.vocab_size, n_clients=args.clients,
+        per_client=args.per_client, seq_len=args.seq,
+        seed=args.seed + 1)
+    flat = {k: jnp.asarray(v.reshape((-1,) + v.shape[2:]))
+            for k, v in held.items()}
+
+    def apply_loss(p, b):
+        return transformer.loss_fn(cfg, p, b)
+
+    return make_global_eval(apply_loss, flat)
+
+
 def run_engine(cfg, strategy, args):
     """Engine-based synchronous regime (``--placement``): client sampling
     + the placement-pluggable cohort executor (core/engine.py) on the
     federated LM corpus.  ``vmap`` keeps the cohort on one device;
     ``mesh`` distributes cohort + stores over the client axis of a mesh
-    spanning every local device."""
+    spanning every local device.
+
+    ``--block-rounds K`` swaps the host round loop for the scan-compiled
+    block driver (``engine.make_block_fn``): ceil(rounds/K) jitted blocks
+    of K rounds each, ONE host sync + donation handoff per block, with
+    held-out global eval (and checkpoints) at block boundaries.  The
+    trajectory is bitwise the K=1 host loop's -- only the sync/eval
+    cadence changes."""
     _require_token_arch(cfg, args.arch, "--placement")
     placement = make_placement(args.placement)
     m = args.sampled or args.clients
@@ -146,14 +181,47 @@ def run_engine(cfg, strategy, args):
     grad_fn = make_lm_grad_fn(cfg)
     x = init_model(cfg, jax.random.PRNGKey(args.seed))
     state = init_sim_state(sim, strategy, x, placement=placement)
-    round_fn = make_round_fn(sim, strategy, grad_fn, data,
-                             placement=placement)
 
     start = _restore_state(state, args)
     if start:
         state["round"] = jnp.asarray(start, jnp.int32)
         # restored arrays are host-loaded: re-place on the mesh
         state = placement.place_state(state)
+
+    if args.block_rounds:
+        t0 = time.time()
+        eval_fn = _make_lm_eval(cfg, args)
+
+        def log(rec):
+            print(json.dumps({**rec, "placement": placement.name,
+                              "elapsed_s": round(time.time() - t0, 2)}),
+                  flush=True)
+
+        # block boundaries rarely land exactly on a ckpt_every multiple:
+        # save at the FIRST boundary at/after each multiple (the per-round
+        # loop's cadence, quantized up to block granularity)
+        ckpt_mark = [start // args.ckpt_every] if args.ckpt_dir else None
+
+        def on_block(s, done):
+            if not args.ckpt_dir:
+                return
+            mark = (start + done) // args.ckpt_every
+            if mark > ckpt_mark[0]:
+                ckpt_mark[0] = mark
+                save_checkpoint(args.ckpt_dir, start + done, _ckpt_tree(s))
+
+        state, _ = run_blocks(
+            state, lambda size: make_block_fn(
+                sim, strategy, grad_fn, data, block_size=size,
+                placement=placement),
+            args.rounds - start, args.block_rounds, eval_fn=eval_fn,
+            log=log, on_block=on_block, first_round=start)
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.rounds, _ckpt_tree(state))
+        return 0
+
+    round_fn = make_round_fn(sim, strategy, grad_fn, data,
+                             placement=placement)
     return _drive_rounds(state, round_fn, args, start,
                          rec_extra={"placement": placement.name})
 
@@ -189,6 +257,11 @@ def main(argv=None):
                     help="engine placement: clients sampled per round "
                          "(default: all; mesh needs it divisible by the "
                          "client-axis size)")
+    ap.add_argument("--block-rounds", type=int, default=None,
+                    help="engine placement: rounds per scan-compiled "
+                         "block (one jitted lax.scan, one host sync and "
+                         "one donation handoff per block); eval and "
+                         "checkpoints fire at block boundaries")
     ap.add_argument("--concurrent", type=int, default=4,
                     help="async: clients training simultaneously")
     ap.add_argument("--buffer", type=int, default=2,
@@ -212,6 +285,13 @@ def main(argv=None):
         kw.update(rho=args.rho, lam=args.lam)
     strategy = STRATEGIES[args.strategy](**kw)
 
+    if args.block_rounds is not None and args.block_rounds < 1:
+        raise SystemExit("--block-rounds must be >= 1")
+    if args.block_rounds and not args.placement:
+        raise SystemExit("--block-rounds drives the cohort engine: pass "
+                         "--placement {vmap,mesh} (the async regime's "
+                         "sim-time advance is host-side and cannot be "
+                         "scanned)")
     if args.regime == "async":
         if args.placement:
             raise SystemExit("--placement applies to the synchronous "

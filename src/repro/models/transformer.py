@@ -248,7 +248,15 @@ def loss_fn(cfg, params, batch, *, chunkwise=True, use_pallas=False,
     mask = batch.get("loss_mask")
     ce = cross_entropy(logits, labels, mask, logit_cap=cfg.logit_softcap)
     loss = ce
-    metrics = {"ce": ce}
+    # next-token accuracy (softcap is monotone, so argmax ignores it);
+    # lax.stop_gradient-free: argmax carries no gradient anyway
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    if mask is None:
+        acc = hit.mean()
+    else:
+        m32 = mask.astype(jnp.float32)
+        acc = jnp.sum(hit * m32) / jnp.maximum(jnp.sum(m32), 1.0)
+    metrics = {"ce": ce, "acc": acc}
 
     n_moe = (sum(1 for s in cfg.pattern if s.ffn == "moe") * cfg.num_repeats
              + sum(1 for s in cfg.prefix if s.ffn == "moe"))

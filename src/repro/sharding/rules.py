@@ -149,6 +149,32 @@ def param_specs(shapes: Pytree, mesh: Mesh, *, model: str = "model",
     return jax.tree_util.tree_unflatten(treedef, [s for s in out])
 
 
+def sim_state_specs(state: Pytree, mesh: Mesh, *, client: str,
+                    model: str = "model",
+                    fsdp: Optional[str] = None) -> Pytree:
+    """NamedSharding pytree for a whole simulation-state dict (the cohort
+    engine's ``{x, clients, pms, server, rng, round}``): the per-client
+    stores (``clients``/``pms``, leading n_clients dim) follow
+    ``client_store_pspec`` -- client axis on dim 0 when n_clients divides
+    it, replicated fallback otherwise -- and every other entry is
+    replicated.
+
+    One function owns this layout because two consumers must agree on it:
+    ``MeshPlacement.place_state`` materializes it with ``device_put``, and
+    the scan-compiled block driver carries the state through ``lax.scan``
+    expecting the round body to re-pin its outputs to the same specs (so
+    the carry never reshards between scanned rounds)."""
+    rep = NamedSharding(mesh, P())
+    out = {}
+    for key, sub in state.items():
+        if key in ("clients", "pms") and jax.tree.leaves(sub):
+            out[key] = param_specs(sub, mesh, model=model, fsdp=fsdp,
+                                   client=client)
+        else:
+            out[key] = jax.tree.map(lambda t: rep, sub)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # batches
 # ---------------------------------------------------------------------------

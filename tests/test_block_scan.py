@@ -1,0 +1,328 @@
+"""Scan-compiled round blocks (``engine.make_block_fn``): R rounds in
+ONE jitted ``lax.scan`` must reproduce the host loop BITWISE -- the block
+splits the round rng keys identically, so the trajectory is the same
+stream -- with per-round metrics stacked as (R,) arrays, donation once
+per block, eval cadence at block boundaries, and (mesh placement)
+exactly one cross-client psum per scanned round (DESIGN.md §7)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (FedAvg, FedDeper, MeshPlacement, SimConfig,
+                        init_sim_state, make_block_fn, make_round_fn,
+                        run_blocks, run_rounds)
+from repro.data import make_federated_classification
+from repro.launch.mesh import make_client_mesh
+from repro.models import classifier_loss, init_classifier
+
+CFG = MLP_MNIST
+
+
+def apply_loss(p, b):
+    return classifier_loss(CFG, p, b)
+
+
+def grad_fn(p, mb):
+    (l, _), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = make_federated_classification(n_clients=6, per_client=64,
+                                       split="shards", seed=2)
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(11))
+
+
+SIM = SimConfig(n_clients=6, m_sampled=4, tau=3, batch_size=16, seed=5)
+
+COLLECTIVES = {"psum", "psum2", "all_gather", "all_to_all", "ppermute",
+               "pmax", "pmin"}
+
+
+def count_executed_collectives(jaxpr) -> int:
+    """Collectives one EXECUTION of ``jaxpr`` runs: scan bodies count
+    once per trip (length x body count), so a block of R scanned rounds
+    whose body has one psum reports exactly R."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVES:
+            n += 1
+        elif eqn.primitive.name == "scan":
+            n += eqn.params["length"] * \
+                count_executed_collectives(eqn.params["jaxpr"].jaxpr)
+        else:
+            for v in eqn.params.values():
+                if hasattr(v, "eqns"):
+                    n += count_executed_collectives(v)
+                elif hasattr(v, "jaxpr"):
+                    n += count_executed_collectives(v.jaxpr)
+    return n
+
+
+def _loop(strategy, data, x0, placement=None, rounds=6, **kw):
+    state = init_sim_state(SIM, strategy, x0, placement=placement)
+    rf = make_round_fn(SIM, strategy, grad_fn, data, placement=placement)
+    return run_rounds(state, rf, rounds, **kw)
+
+
+def _blocks(strategy, data, x0, block_size, placement=None, rounds=6,
+            **kw):
+    state = init_sim_state(SIM, strategy, x0, placement=placement)
+    return run_blocks(
+        state,
+        lambda size: make_block_fn(SIM, strategy, grad_fn, data,
+                                   block_size=size, placement=placement),
+        rounds, block_size, **kw)
+
+
+def _assert_state_equal(a, b, keys=("x", "clients", "pms"), atol=0.0):
+    for key in keys:
+        for la, lb in zip(jax.tree.leaves(a[key]), jax.tree.leaves(b[key])):
+            if atol == 0.0:
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb), err_msg=key)
+            else:
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=atol, rtol=0, err_msg=key)
+
+
+def _assert_history_equal(hist_a, hist_b):
+    assert len(hist_a) == len(hist_b)
+    for ra, rb in zip(hist_a, hist_b):
+        assert set(ra) == set(rb)
+        for k in ra:
+            np.testing.assert_array_equal(ra[k], rb[k], err_msg=k)
+
+
+# -------------------------------------------------- host-loop equivalence
+
+@pytest.mark.parametrize("strategy", [
+    FedDeper(eta=0.05, rho=0.03, lam=0.5),
+    FedAvg(eta=0.05),
+], ids=["feddeper", "fedavg"])
+def test_block_scan_bitwise_equals_host_loop(strategy, data, x0):
+    """block_size in {1, 3, rounds}: the scanned block replays the host
+    loop's rng splits in-graph, so state AND per-round metrics are
+    bitwise-identical on the vmap placement (XLA:CPU)."""
+    ref, hist = _loop(strategy, data, x0)
+    for block_size in (1, 3, 6):
+        st, hb = _blocks(strategy, data, x0, block_size)
+        _assert_state_equal(ref, st)
+        _assert_history_equal(hist, hb)
+        assert int(st["round"]) == 6
+
+
+def test_block_scan_tail_block(data, x0):
+    """block_size that does not divide k_rounds: run_blocks compiles one
+    tail block (here 6 = 4 + 2) and the trajectory stays bitwise."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    ref, hist = _loop(strategy, data, x0)
+    st, hb = _blocks(strategy, data, x0, 4)
+    _assert_state_equal(ref, st)
+    _assert_history_equal(hist, hb)
+
+
+def test_block_fn_stacks_metrics(data, x0):
+    """One block call returns every metric scalar stacked (R,), round r
+    of the block at index r -- the host syncs once per block."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    _, hist = _loop(strategy, data, x0, rounds=3)
+    bf = make_block_fn(SIM, strategy, grad_fn, data, block_size=3)
+    _, stacked = bf(init_sim_state(SIM, strategy, x0))
+    for k, v in stacked.items():
+        assert v.shape == (3,), (k, v.shape)
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray([h[k] for h in hist], v.dtype),
+            err_msg=k)
+
+
+def test_block_eval_cadence_matches_eval_every(data, x0):
+    """Eval-at-block-boundary == run_rounds eval_every=block_size: same
+    records carry eval keys, with bitwise-equal values."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    from repro.core import make_global_eval
+    test = {"x": jax.random.normal(jax.random.PRNGKey(0), (64, 784)),
+            "y": jax.random.randint(jax.random.PRNGKey(1), (64,), 0, 10)}
+    eval_fn = make_global_eval(apply_loss, test, batch=32)
+    _, hist = _loop(strategy, data, x0, eval_fn=eval_fn, eval_every=3)
+    _, hb = _blocks(strategy, data, x0, 3, eval_fn=eval_fn)
+    _assert_history_equal(hist, hb)
+    assert "test_acc" in hb[2] and "test_acc" in hb[5]
+    assert "test_acc" not in hb[0]
+
+
+def test_block_donation_semantics(data, x0):
+    """donate=True consumes the passed state once per BLOCK (not per
+    round); caller-held params survive (init_sim_state copies);
+    donate=False leaves the input state alive."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    state0 = init_sim_state(SIM, strategy, x0)
+    bf = make_block_fn(SIM, strategy, grad_fn, data, block_size=3)
+    state1, _ = bf(state0)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(x0))
+    with pytest.raises(RuntimeError):
+        np.asarray(jax.tree.leaves(state0["x"])[0])
+
+    state0 = init_sim_state(SIM, strategy, x0)
+    bf_nd = make_block_fn(SIM, strategy, grad_fn, data, block_size=3,
+                          donate=False)
+    state2, _ = bf_nd(state0)
+    np.asarray(jax.tree.leaves(state0["x"])[0])  # still alive
+    _assert_state_equal(state1, state2)
+
+
+def test_block_fn_rejects_bad_block_size(data, x0):
+    strategy = FedAvg(eta=0.05)
+    with pytest.raises(ValueError, match="block_size"):
+        make_block_fn(SIM, strategy, grad_fn, data, block_size=0)
+    with pytest.raises(ValueError, match="block_size"):
+        run_blocks({}, lambda s: None, 4, 0)
+
+
+# ------------------------------------------------------- collective counts
+
+def test_scanned_mesh_block_has_R_psums_for_R_rounds(data, x0):
+    """The block scan keeps exactly ONE cross-client psum per round in
+    the scanned jaxpr: R executed collectives for an R-round block, i.e.
+    one psum in the scan body and none outside it."""
+    pl = MeshPlacement(make_client_mesh())
+    for strategy in (FedDeper(eta=0.05, rho=0.03, lam=0.5),
+                     FedAvg(eta=0.05)):
+        state = init_sim_state(SIM, strategy, x0, placement=pl)
+        for R in (1, 3):
+            bf = make_block_fn(SIM, strategy, grad_fn, data, block_size=R,
+                               placement=pl, donate=False)
+            jaxpr = jax.make_jaxpr(bf)(state)
+            assert count_executed_collectives(jaxpr.jaxpr) == R, \
+                (strategy.name, R)
+
+
+def test_scanned_vmap_block_has_no_collectives(data, x0):
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    state = init_sim_state(SIM, strategy, x0)
+    bf = make_block_fn(SIM, strategy, grad_fn, data, block_size=3,
+                       donate=False)
+    assert count_executed_collectives(jax.make_jaxpr(bf)(state).jaxpr) == 0
+
+
+def test_mesh_block_bitwise_on_1device_mesh(data, x0):
+    """On the container's 1-device mesh the scanned mesh block equals
+    both the mesh host loop and the vmap host loop bitwise."""
+    strategy = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    pl = MeshPlacement(make_client_mesh())
+    ref_v, _ = _loop(strategy, data, x0)
+    ref_m, _ = _loop(strategy, data, x0, placement=pl)
+    st, _ = _blocks(strategy, data, x0, 3, placement=pl)
+    _assert_state_equal(ref_m, st)
+    _assert_state_equal(ref_v, st)
+
+
+# ------------------------------------------------- 4-device CPU emulation
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.paper_models import MLP_MNIST
+    from repro.core import (FedDeper, SimConfig, MeshPlacement,
+                            init_sim_state, make_block_fn, make_round_fn,
+                            run_blocks, run_rounds)
+    from repro.data import make_federated_classification
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import classifier_loss, init_classifier
+
+    assert jax.local_device_count() == 4
+
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(
+            lambda p, b: classifier_loss(MLP_MNIST, p, b),
+            has_aux=True)(p, mb)
+        return l, g
+
+    ds = make_federated_classification(n_clients=8, per_client=64,
+                                       split="shards", seed=2)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    x0 = init_classifier(MLP_MNIST, jax.random.PRNGKey(11))
+    sim = SimConfig(n_clients=8, m_sampled=4, tau=2, batch_size=16,
+                    seed=5)
+    pl = MeshPlacement(make_client_mesh())
+    strat = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    R = 3
+
+    mk = lambda size, **kw: make_block_fn(sim, strat, grad_fn, data,
+                                          block_size=size, placement=pl,
+                                          **kw)
+
+    # scanned mesh block == mesh host loop BITWISE (same placement, same
+    # rng stream), and == vmap host loop at the documented f32 tolerance
+    sm, _ = run_rounds(init_sim_state(sim, strat, x0, placement=pl),
+                       make_round_fn(sim, strat, grad_fn, data,
+                                     placement=pl), R)
+    sb, _ = run_blocks(init_sim_state(sim, strat, x0, placement=pl),
+                       mk, R, R)
+    sv, _ = run_rounds(init_sim_state(sim, strat, x0),
+                       make_round_fn(sim, strat, grad_fn, data), R)
+    for key in ("x", "clients", "pms"):
+        for a, b, c in zip(jax.tree.leaves(sm[key]),
+                           jax.tree.leaves(sb[key]),
+                           jax.tree.leaves(sv[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+            np.testing.assert_allclose(np.asarray(b), np.asarray(c),
+                                       rtol=0, atol=1e-6, err_msg=key)
+
+    # the sharded client/pms stores thread the scan carry WITHOUT
+    # resharding: still P('data', ...) over 4 devices after the block
+    for store in ("clients", "pms"):
+        for leaf in jax.tree.leaves(sb[store]):
+            assert leaf.sharding.spec[0] == "data", (store,
+                                                     leaf.sharding.spec)
+            assert len(leaf.sharding.device_set) == 4
+
+    # exactly R executed cross-client collectives for an R-round block
+    # (one psum in the scanned body, none outside)
+    NAMES = {"psum", "psum2", "all_gather", "all_to_all", "ppermute"}
+    def count(jx):
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name in NAMES:
+                n += 1
+            elif eqn.primitive.name == "scan":
+                n += eqn.params["length"] * count(eqn.params["jaxpr"].jaxpr)
+            else:
+                for v in eqn.params.values():
+                    if hasattr(v, "eqns"):
+                        n += count(v)
+                    elif hasattr(v, "jaxpr"):
+                        n += count(v.jaxpr)
+        return n
+    st = init_sim_state(sim, strat, x0, placement=pl)
+    assert count(jax.make_jaxpr(mk(R, donate=False))(st).jaxpr) == R
+
+    print("BLOCK_SCAN_4DEV_OK")
+""")
+
+
+def test_mesh_block_4device_emulation():
+    """4-way client axis: the scanned block == the mesh host loop
+    bitwise, == the vmap loop at atol=1e-6, stores stay sharded through
+    the scan carry, and the block jaxpr executes exactly R psums."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True,
+                         env=_SUBPROC_ENV, timeout=560)
+    assert "BLOCK_SCAN_4DEV_OK" in out.stdout, (out.stdout[-1000:],
+                                                out.stderr[-3000:])

@@ -211,15 +211,20 @@ def test_round_engine_bench_registered_and_importable():
 
 def test_bench_schema_validator():
     from benchmarks.round_engine import validate_bench
-    good = {"b": {"us_per_round": 12.5, "peak_bytes": None,
+    good = {"b": {"us_per_round": 12.5, "peak_bytes": 1024,
                   "config": {"n": 10}}}
     validate_bench(good)
     for bad in (
         {},
-        {"b": {"us_per_round": 0.0, "peak_bytes": None, "config": {}}},
+        {"b": {"us_per_round": 0.0, "peak_bytes": 1024, "config": {}}},
         {"b": {"us_per_round": 1.0, "config": {}}},
         {"b": {"us_per_round": 1.0, "peak_bytes": -1, "config": {}}},
-        {"b": {"us_per_round": 1.0, "peak_bytes": None, "config": 3}},
+        # null peak was tolerated while it came from (CPU-absent) device
+        # stats; compiled.memory_analysis() is backend-independent, so
+        # null is now a schema error
+        {"b": {"us_per_round": 1.0, "peak_bytes": None, "config": {}}},
+        {"b": {"us_per_round": 1.0, "peak_bytes": True, "config": {}}},
+        {"b": {"us_per_round": 1.0, "peak_bytes": 1024, "config": 3}},
     ):
         with pytest.raises(ValueError):
             validate_bench(bad)
@@ -233,6 +238,15 @@ def test_checked_in_bench_file_is_valid():
     fused = obj["feddeper_sync_pallas_fused"]["us_per_round"]
     unfused = obj["feddeper_sync_pallas_unfused"]["us_per_round"]
     assert unfused / fused >= 1.3, (unfused, fused)
+    # the pallas pair runs the same rounds protocol (like-for-like ratio)
+    assert obj["feddeper_sync_pallas_unfused"]["config"]["rounds"] == \
+        obj["feddeper_sync_pallas_fused"]["config"]["rounds"]
+    # scan-block rows: tracked against the bitwise-identical host loop
+    for row in ("feddeper_sync_block4", "feddeper_sync_block12",
+                "feddeper_sync_mesh_block4"):
+        cfg = obj[row]["config"]
+        assert cfg["block_rounds"] >= 1, row
+        assert cfg["speedup_vs_loop"] > 0, row
 
 
 @pytest.mark.slow
