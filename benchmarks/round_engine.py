@@ -28,16 +28,31 @@ round engine has:
                           (``speedup_vs_loop``); the vmap K in {4, 12}
                           rows also record live-memory scaling with K,
                           and ``mesh_block4`` prices the scan under the
-                          mesh placement.
+                          mesh placement;
+* ``*_identity/q8/topk`` -- the comm layer (repro/comm): identity pins
+                          the compression path's overhead against the
+                          dense fused row (``speedup_vs_dense``); q8 and
+                          topk:0.1 price real compressors and track
+                          ``uplink_bytes_per_round`` -- the bandwidth
+                          axis of the baseline.
 
 Every run rewrites ``BENCH_round_engine.json`` at the repo root so each
-PR leaves a perf trajectory.  Schema (validated by ``validate_bench``):
+PR leaves a perf trajectory.  Schema (validated by ``validate_bench``;
+unknown keys rejected):
 
     { bench_name: { "us_per_round": float,        # best-of-reps mean
                     "peak_bytes":   int,          # temp+output bytes of
                                                   # the compiled round /
                                                   # block executable
+                    "uplink_bytes_per_round": int,  # compression rows
+                                                    # only (required
+                                                    # there): wire bytes
+                                                    # one round uploads
                     "config":       { ... } } }   # exact knobs + speedups
+
+``check_speedups`` is the CI regression gate: a smoke run's
+``speedup_vs_*`` ratios must stay above ``SPEEDUP_TOL`` x the tracked
+baseline's, else the bench lane fails (scripts/ci.sh).
 
 ``peak_bytes`` comes from ``compiled.memory_analysis()`` (XLA's static
 allocation plan: temp buffers + outputs), NOT from runtime device stats
@@ -55,6 +70,7 @@ from typing import Dict, Iterable, List, Optional
 import jax
 
 from benchmarks.common import build_task, csv_row
+from repro.comm import make_compressor, uplink_bytes_per_round
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
                         SimConfig, init_async_state, init_sim_state,
@@ -113,9 +129,11 @@ class _Prepared:
     jax 0.4.37)."""
 
     def __init__(self, round_fn, state, cfg, *, rounds_per_call: int = 1,
-                 peak_bytes: Optional[int] = None):
+                 peak_bytes: Optional[int] = None,
+                 uplink_bytes: Optional[int] = None):
         self.cfg = cfg
         self.rounds_per_call = rounds_per_call
+        self.uplink_bytes = uplink_bytes
         if peak_bytes is None and hasattr(round_fn, "lower"):
             compiled, peak_bytes = _compiled_peak(round_fn, state)
             if compiled is not None:
@@ -150,26 +168,35 @@ class _Prepared:
 
 
 def _prep_sync(task, x0, scale, strategy, *, donate, twin,
-               placement=None, block=None):
+               placement=None, block=None, compress=None):
     sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
                     tau=scale["tau"], batch_size=scale["batch"], seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
     pl = make_placement(placement) if placement else None
+    comp = make_compressor(compress) if compress else None
     if block:
         rf = make_block_fn(sim, strategy, grad_fn, task["data"],
-                           block_size=block, donate=donate, placement=pl)
+                           block_size=block, donate=donate, placement=pl,
+                           compressor=comp)
     else:
         rf = make_round_fn(sim, strategy, grad_fn, task["data"],
-                           donate=donate, placement=pl)
+                           donate=donate, placement=pl, compressor=comp)
     cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
                twin_grads=twin, placement=placement or "vmap", **scale)
     if block:
         cfg["block_rounds"] = block
+    uplink = None
+    if compress:
+        # compression rows track their wire cost next to us_per_round /
+        # peak_bytes (validate_bench requires it on such rows)
+        cfg["compress"] = compress
+        uplink = uplink_bytes_per_round(comp, strategy, x0, scale["m"])
     for k in ("use_pallas", "fuse_grads"):
         if hasattr(strategy, k):
             cfg[k] = getattr(strategy, k)
-    return _Prepared(rf, init_sim_state(sim, strategy, x0, placement=pl),
-                     cfg, rounds_per_call=block or 1)
+    return _Prepared(rf, init_sim_state(sim, strategy, x0, placement=pl,
+                                        compressor=comp),
+                     cfg, rounds_per_call=block or 1, uplink_bytes=uplink)
 
 
 def _async_peak_bytes(arf, acfg, task, strategy, grad_fn, state
@@ -232,8 +259,17 @@ def _prep_async(task, x0, scale, strategy, *, donate, twin):
     return _Prepared(arf, state, cfg, peak_bytes=peak)
 
 
+# every key a bench entry may carry; anything else is a schema error so
+# future bench edits fail loudly in the smoke lane instead of silently
+# shipping unvalidated fields
+_ENTRY_KEYS = {"us_per_round", "peak_bytes", "config",
+               "uplink_bytes_per_round"}
+
+
 def validate_bench(obj) -> None:
-    """Raise ValueError unless ``obj`` matches the BENCH schema."""
+    """Raise ValueError unless ``obj`` matches the BENCH schema.
+    Unknown entry keys are rejected; rows whose config records a
+    ``compress`` spec must also track ``uplink_bytes_per_round``."""
     if not isinstance(obj, dict) or not obj:
         raise ValueError("bench json must be a non-empty dict")
     for name, entry in obj.items():
@@ -244,6 +280,10 @@ def validate_bench(obj) -> None:
         missing = {"us_per_round", "peak_bytes", "config"} - set(entry)
         if missing:
             raise ValueError(f"{name}: missing keys {sorted(missing)}")
+        unknown = set(entry) - _ENTRY_KEYS
+        if unknown:
+            raise ValueError(f"{name}: unknown keys {sorted(unknown)} "
+                             f"(schema allows {sorted(_ENTRY_KEYS)})")
         us = entry["us_per_round"]
         if not isinstance(us, (int, float)) or us <= 0:
             raise ValueError(f"{name}: us_per_round must be positive")
@@ -256,6 +296,47 @@ def validate_bench(obj) -> None:
                              f"(got {pb!r})")
         if not isinstance(entry["config"], dict):
             raise ValueError(f"{name}: config must be a dict")
+        if "compress" in entry["config"]:
+            ub = entry.get("uplink_bytes_per_round")
+            if not isinstance(ub, int) or isinstance(ub, bool) or ub <= 0:
+                raise ValueError(
+                    f"{name}: compression rows must track "
+                    f"uplink_bytes_per_round as a positive int (got "
+                    f"{ub!r})")
+
+
+# regression gate: a smoke ratio may drop to this fraction of its
+# tracked value before CI fails -- generous because the 2-round reps=1
+# smoke is noisy, but tight enough that a lost fusion seam (ratio -> ~1)
+# or a broken block driver (ratio -> <1) trips it
+SPEEDUP_TOL = 0.5
+
+
+def check_speedups(smoke: Dict, tracked: Dict,
+                   tol: float = SPEEDUP_TOL) -> List[str]:
+    """Compare every ``speedup_vs_*`` ratio a smoke run produced against
+    the tracked baseline row of the same name: returns failure messages
+    for each ratio below ``tol * tracked`` (empty = gate passes).  Rows
+    or ratios missing from either side are skipped -- the gate watches
+    regressions of what IS tracked, not coverage."""
+    fails = []
+    for name, entry in smoke.items():
+        ref = tracked.get(name)
+        if not isinstance(ref, dict):
+            continue
+        for key, val in entry.get("config", {}).items():
+            if not key.startswith("speedup_vs_"):
+                continue
+            base = ref.get("config", {}).get(key)
+            if not isinstance(base, (int, float)) or \
+                    not isinstance(val, (int, float)):
+                continue
+            floor = base * tol
+            if val < floor:
+                fails.append(
+                    f"{name}.{key}: smoke {val:.3f} < floor {floor:.3f} "
+                    f"(tracked {base:.3f} x tol {tol})")
+    return fails
 
 
 ETA = dict(eta=0.05)
@@ -305,6 +386,20 @@ def _benches():
         "feddeper_sync_mesh_block4": (
             "sync", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True, placement="mesh", block=4)),
+        # uplink compression (repro.comm): the identity row pins the comm
+        # path's overhead against the plain fused engine; q8/topk price
+        # real compressors and track uplink_bytes_per_round -- the
+        # bandwidth axis next to time (us_per_round) and memory
+        # (peak_bytes)
+        "feddeper_sync_identity": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, compress="identity")),
+        "feddeper_sync_q8": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, compress="q8")),
+        "feddeper_sync_topk": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, compress="topk:0.1")),
         "feddeper_async_unfused": (
             "async", FedDeper(fuse_grads=False, **DEPER),
             dict(donate=False, twin=False)),
@@ -332,6 +427,13 @@ _SPEEDUP_PAIRS = {
     "feddeper_sync_block4": ("feddeper_sync_fused", "speedup_vs_loop"),
     "feddeper_sync_block12": ("feddeper_sync_fused", "speedup_vs_loop"),
     "feddeper_sync_mesh_block4": ("feddeper_sync_mesh", "speedup_vs_loop"),
+    # comm ratios: compute cost of compressing the uplink, against the
+    # dense round it is otherwise identical to (<= 1.0 expected -- the
+    # win is the tracked uplink_bytes_per_round column, not wall time;
+    # on real networks the byte column IS the wall-time column)
+    "feddeper_sync_identity": ("feddeper_sync_fused", "speedup_vs_dense"),
+    "feddeper_sync_q8": ("feddeper_sync_identity", "speedup_vs_dense"),
+    "feddeper_sync_topk": ("feddeper_sync_identity", "speedup_vs_dense"),
 }
 
 
@@ -360,7 +462,8 @@ def round_engine_rows(quick: bool = True, *,
                                         donate=opts["donate"],
                                         twin=opts["twin"],
                                         placement=opts.get("placement"),
-                                        block=opts.get("block"))
+                                        block=opts.get("block"),
+                                        compress=opts.get("compress"))
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
@@ -395,10 +498,15 @@ def round_engine_rows(quick: bool = True, *,
         p.cfg["rounds"] = n_rounds[name]
         results[name] = {"us_per_round": p.us, "peak_bytes": p.peak_bytes,
                          "config": p.cfg}
+        if p.uplink_bytes is not None:
+            results[name]["uplink_bytes_per_round"] = p.uplink_bytes
 
     rows = []
     for name, entry in results.items():
         derived = {"rounds": entry["config"]["rounds"]}
+        if "uplink_bytes_per_round" in entry:
+            derived["uplink_bytes_per_round"] = \
+                entry["uplink_bytes_per_round"]
         pair = _SPEEDUP_PAIRS.get(name)
         if pair and name in pair_ratio:
             speedup = pair_ratio[name]

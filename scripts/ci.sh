@@ -1,44 +1,64 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: install dev deps where possible, then run the fast
-# (non-slow) suite.  Collection errors and test regressions fail fast.
+# Tier-1 CI gate.
+#
+#   scripts/ci.sh [--shard unit|multidev|bench|all] [pytest args...]
+#
+# Shards (each one a lane in .github/workflows/ci.yml):
+#   unit     -- the fast (non-slow) suite;
+#   multidev -- the mesh-placement / block-scan / sharding-rules /
+#               compression equivalence files (their 4-device coverage
+#               runs in subprocesses that set
+#               XLA_FLAGS=--xla_force_host_platform_device_count=4
+#               themselves; the parent must NOT carry that flag --
+#               tests/conftest.py asserts so);
+#   bench    -- quick-mode round-engine smoke: schema validation of the
+#               tracked baseline AND the speedup regression gate
+#               (benchmarks.round_engine.check_speedups);
+#   all      -- everything above (the no-argument default).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+SHARD=all
+if [ "${1:-}" = "--shard" ]; then
+    SHARD="${2:?--shard needs unit|multidev|bench|all}"
+    shift 2
+fi
 
 # Offline containers ship without pip access; the suite degrades
 # gracefully (hypothesis-based modules importorskip themselves).
 python -m pip install -q -r requirements-dev.txt 2>/dev/null \
     || echo "ci.sh: dev deps not installable (offline?); continuing" >&2
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MULTIDEV_FILES=(tests/test_engine_placement.py tests/test_block_scan.py
+                tests/test_sharding_rules.py tests/test_compression.py)
+
+run_unit() {
     python -m pytest -x -q -m "not slow" "$@"
+}
 
-# Multi-device shard: the mesh-placement + block-scan equivalence tests.
-# The 4-device coverage runs in subprocesses that set
-# XLA_FLAGS=--xla_force_host_platform_device_count=4 themselves (the
-# parent process must NOT carry that flag -- tests/conftest.py asserts
-# so).  The unfiltered main run above already executes these files, so
-# the explicit shard only fires when extra args were passed and may have
-# filtered them out.  (Option-only args like -q re-run the files
-# redundantly -- harmless, and cheaper than parsing pytest's CLI here.)
-if [ "$#" -gt 0 ]; then
-    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m pytest -x -q tests/test_engine_placement.py \
-        tests/test_block_scan.py tests/test_sharding_rules.py
-fi
+run_multidev() {
+    python -m pytest -x -q "${MULTIDEV_FILES[@]}"
+}
 
-# Quick-mode round-engine bench smoke: run the headline fused-vs-unfused
-# pairs end to end and fail on schema errors.  BENCH_round_engine.json is
-# regenerated only when missing -- an existing tracked baseline (rounds=12,
-# reps=3) is never clobbered with the smoke's 2-round samples; those go to
-# a scratch file that is schema-validated alongside the checked-in one.
-# A full baseline refresh is `python -m benchmarks.run --only round_engine`.
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'PY'
+run_bench() {
+    # Quick-mode round-engine bench smoke: run the headline pairs end to
+    # end, fail on schema errors AND on tracked-speedup regressions.
+    # BENCH_round_engine.json is regenerated only when missing -- an
+    # existing tracked baseline (rounds=12, reps=3+) is never clobbered
+    # with the smoke's 2-round samples; those go to a scratch file that
+    # is schema-validated and ratio-gated against the checked-in one.
+    # A full baseline refresh is `python -m benchmarks.run --only
+    # round_engine`.
+    python - <<'PY'
 import json
+import sys
 import tempfile
 from pathlib import Path
 
-from benchmarks.round_engine import (BENCH_PATH, round_engine_rows,
-                                     validate_bench)
+from benchmarks.round_engine import (BENCH_PATH, check_speedups,
+                                     round_engine_rows, validate_bench)
 
 scratch = None if not BENCH_PATH.exists() else \
     Path(tempfile.NamedTemporaryFile(suffix=".json", delete=False).name)
@@ -48,14 +68,56 @@ try:
         include=("feddeper_sync_unfused", "feddeper_sync_fused",
                  "feddeper_sync_pallas_unfused",
                  "feddeper_sync_pallas_fused", "feddeper_sync_mesh",
-                 "feddeper_sync_block4", "feddeper_sync_mesh_block4"))
+                 "feddeper_sync_block4", "feddeper_sync_mesh_block4",
+                 "feddeper_sync_identity", "feddeper_sync_q8",
+                 "feddeper_sync_topk"))
     for r in rows:
         print(r)
-    validate_bench(json.loads(BENCH_PATH.read_text()))
+    tracked = json.loads(BENCH_PATH.read_text())
+    validate_bench(tracked)
     if scratch is not None:
-        validate_bench(json.loads(scratch.read_text()))
+        smoke = json.loads(scratch.read_text())
+        validate_bench(smoke)
+        fails = check_speedups(smoke, tracked)
+        if fails:
+            print("ci.sh: bench regression gate FAILED:", file=sys.stderr)
+            for f in fails:
+                print(f"  {f}", file=sys.stderr)
+            sys.exit(1)
+        print("ci.sh: bench regression gate OK "
+              f"({len(smoke)} smoke rows vs tracked baseline)")
 finally:
     if scratch is not None:
         scratch.unlink(missing_ok=True)
 print(f"ci.sh: bench smoke OK ({BENCH_PATH} schema valid)")
 PY
+}
+
+case "$SHARD" in
+unit)     run_unit "$@" ;;
+multidev) run_multidev ;;
+bench)    run_bench ;;
+all)
+    run_unit "$@"
+    # The unfiltered run above already executes the multidev files, so
+    # the explicit shard only fires when a *positional* pytest arg (a
+    # file/dir/node id, or an option value like -k's pattern) may have
+    # filtered them out.  Option-only invocations (-q, -x, ...) used to
+    # re-run the files redundantly; now they don't.
+    has_filter=0
+    for a in "$@"; do
+        case "$a" in
+        -*) ;;
+        *) has_filter=1 ;;
+        esac
+    done
+    if [ "$has_filter" = 1 ]; then
+        run_multidev
+    fi
+    run_bench
+    ;;
+*)
+    echo "ci.sh: unknown shard '$SHARD' (want unit|multidev|bench|all)" >&2
+    exit 2
+    ;;
+esac

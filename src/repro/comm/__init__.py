@@ -1,0 +1,10 @@
+"""Uplink-compression layer: what each client sends across the network."""
+from repro.comm.compressors import (  # noqa: F401
+    Compressor,
+    Identity,
+    Quantize,
+    TopK,
+    make_compressor,
+    payload_bytes,
+    uplink_bytes_per_round,
+)

@@ -38,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (VmapPlacement, broadcast_client_store,
-                               draw_cohort_batches, gather_client_state,
+                               comm_round_keys, draw_cohort_batches,
+                               gather_client_state, init_ef_store,
                                make_dispatch_cohort, sample_cohort,
                                scatter_client_rows, scatter_cohort_rows,
                                split_round_rng)
@@ -62,6 +63,13 @@ class AsyncSimConfig:
     delay_dist: str = "lognormal"  # 'constant' | 'uniform' | 'lognormal'
     delay_sigma: float = 1.0       # lognormal shape (straggler heaviness)
     seed: int = 0
+    # uplink bandwidth in BYTES per simulated-time unit; 0 disables the
+    # bandwidth model (bit-compatible with pre-comm configs).  When set,
+    # every finished client's delivery is pushed back by
+    # payload_bytes / bandwidth -- the straggler sim becomes
+    # bandwidth-aware, and compressing the uplink (repro.comm) directly
+    # shortens the queue
+    bandwidth: float = 0.0
 
     def __post_init__(self):
         if not (1 <= self.m_concurrent <= self.n_clients):
@@ -101,16 +109,19 @@ def staleness_weights(staleness, alpha: float) -> jax.Array:
     return (1.0 + s) ** (-alpha)
 
 
-def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree):
+def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
+                     compressor=None):
     """Async simulation state: the jax parts mirror ``init_sim_state``
     (same PRNG stream, same store layout via the shared helpers);
     scheduling bookkeeping lives host-side.  ``x`` is copied so the
-    donating aggregate never invalidates caller-held params."""
+    donating aggregate never invalidates caller-held params.  A stateful
+    ``compressor`` adds the per-client error-feedback store ``ef``
+    (mirroring ``init_cohort_state``)."""
     x = tmap(jnp.copy, x)
     clients = broadcast_client_store(strategy.client_init(x),
                                      acfg.n_clients)
     pms = broadcast_client_store(x, acfg.n_clients)
-    return {
+    state = {
         "x": x,
         "clients": clients,
         "pms": pms,
@@ -123,11 +134,15 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree):
         "buffer": [],            # delivered uploads awaiting aggregation
         "delays": acfg.client_delays(),
     }
+    ef = init_ef_store(strategy, x, acfg.n_clients, compressor)
+    if jax.tree.leaves(ef):
+        state["ef"] = ef
+    return state
 
 
 def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
                         data: Dict[str, jax.Array], *, donate: bool = True,
-                        placement=None):
+                        placement=None, compressor=None):
     """Returns ``async_round(state) -> (state, metrics)`` advancing the
     event simulation until exactly one buffered aggregation completes --
     the same contract as ``make_round_fn``, so ``run_rounds`` drives it.
@@ -143,21 +158,32 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
     default vmap placement is the historical path.  A mesh placement
     distributes each dispatch over the client axis -- note dispatch sizes
     must then divide the axis, which heterogeneous delays rarely satisfy,
-    so mesh is practical here only for delay=0 full-buffer setups."""
+    so mesh is practical here only for delay=0 full-buffer setups.
+
+    ``compressor`` (repro.comm) compresses each finished client's upload;
+    with ``acfg.bandwidth > 0`` the delivery time additionally pays
+    ``payload_bytes / bandwidth``, so compression directly shortens the
+    simulated straggler queue (the bandwidth-aware regime).  A stateful
+    compressor's residual rows are gathered at dispatch and scattered at
+    delivery, exactly like the client store."""
     n, tau, b = acfg.n_clients, acfg.tau, acfg.batch_size
     placement = placement or VmapPlacement()
+    stateful = compressor is not None and compressor.stateful
     _donate = (lambda *a: functools.partial(jax.jit, donate_argnums=a)) \
         if donate else (lambda *a: jax.jit)
     _scatter = scatter_client_rows if donate else \
         jax.jit(scatter_cohort_rows)
-    dispatch_cohort = make_dispatch_cohort(strategy, grad_fn, placement)
+    dispatch_cohort = make_dispatch_cohort(strategy, grad_fn, placement,
+                                           compressor)
 
     @_donate(0, 2)
-    def train_cohort(xs, ctxs, cs, batches):
+    def train_cohort(*args):
         """tau local steps for a cohort of dispatched clients: the shared
         ``engine.make_dispatch_cohort`` body (every operand carries the
         cohort axis -- each client sees its own pulled model), wrapped
-        here only for donation.
+        here only for donation.  Under a compressor the operands grow
+        (ef rows, comm keys) and the outputs grow (new ef rows) -- see
+        ``engine.make_per_client``.
 
         ``xs`` (the per-cohort model broadcast) and ``cs`` (the gathered
         client state) are freshly materialized per dispatch and donated:
@@ -171,7 +197,21 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         costs wasted lane compute and complicates the bit-for-bit
         degenerate-case guarantee, so the simulator keeps the honest
         shapes."""
-        return dispatch_cohort(xs, ctxs, cs, batches)
+        return dispatch_cohort(*args)
+
+    # the bandwidth model's per-upload wire bytes: static in the config
+    # + upload shapes, resolved lazily at the first dispatch (the upload
+    # template needs the model pytree, which lives in the state)
+    _wire: Dict[str, float] = {}
+
+    def _upload_delay(state) -> float:
+        if acfg.bandwidth <= 0:
+            return 0.0
+        if "per_upload" not in _wire:
+            from repro.comm import payload_bytes
+            _wire["per_upload"] = payload_bytes(
+                compressor, strategy.upload_template(state["x"]))
+        return _wire["per_upload"] / acfg.bandwidth
 
     # x and server are donated: the versioned global model updates in
     # place at every aggregation (_aggregate immediately rebinds
@@ -206,17 +246,27 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         cs = gather_client_state(state["clients"], idx)
         ctx = strategy.broadcast(state["x"], state["server"])
         bcast = lambda t: jnp.broadcast_to(t, (f,) + t.shape)  # noqa: E731
-        new_cs, uploads, pms, metrics = train_cohort(
-            tmap(bcast, state["x"]), tmap(bcast, ctx), cs, batches)
+        if compressor is not None:
+            ef = gather_client_state(state.get("ef", {}), idx)
+            new_cs, uploads, pms, metrics, ef_new = train_cohort(
+                tmap(bcast, state["x"]), tmap(bcast, ctx), cs, batches,
+                ef, comm_round_keys(k_batch, f))
+        else:
+            new_cs, uploads, pms, metrics = train_cohort(
+                tmap(bcast, state["x"]), tmap(bcast, ctx), cs, batches)
+            ef_new = {}
 
+        up_delay = _upload_delay(state)
         idx_np = np.asarray(idx)
         for j, slot in enumerate(free):
             c = int(idx_np[j])
             state["slots"][slot] = {
                 "client": c,
                 "version": state["version"],
-                "finish_t": state["t"] + float(state["delays"][c]),
-                "payload": tmap(lambda t: t[j], (new_cs, uploads, pms)),
+                "finish_t": state["t"] + float(state["delays"][c])
+                + up_delay,
+                "payload": tmap(lambda t: t[j],
+                                (new_cs, uploads, pms, ef_new)),
                 "metrics": {k: v[j] for k, v in metrics.items()},
             }
 
@@ -266,11 +316,13 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
                 s = state["slots"][i]
                 if s is None or s["finish_t"] > state["t"]:
                     continue
-                new_cs, upload, pm = s["payload"]
+                new_cs, upload, pm, ef_row = s["payload"]
                 c = jnp.int32(s["client"])
                 if jax.tree.leaves(state["clients"]):
                     state["clients"] = _scatter(state["clients"], c, new_cs)
                 state["pms"] = _scatter(state["pms"], c, pm)
+                if stateful:
+                    state["ef"] = _scatter(state["ef"], c, ef_row)
                 state["buffer"].append({
                     "upload": upload,
                     "staleness": state["version"] - s["version"],
@@ -284,6 +336,13 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
             _dispatch(state)
 
     def async_round(state):
+        if stateful and "ef" not in state:
+            # same guard as engine.make_round_body: fail with the
+            # contract, not a deep pytree mismatch inside the dispatch
+            raise ValueError(
+                f"compressor {compressor.name!r} carries error-feedback "
+                "residuals: init the state with the same compressor "
+                "(init_async_state(..., compressor=...))")
         state = dict(state, slots=list(state["slots"]),
                      buffer=list(state["buffer"]))
         while True:

@@ -71,6 +71,20 @@ class SimConfig:
         return self.m_sampled / self.n_clients
 
 
+# fold_in salt deriving the comm layer's per-round key from k_batch:
+# a pure function of an existing key, so adding compression perturbs
+# neither the cohort sample nor the batch draws (the identity-compressor
+# bitwise-equivalence pin depends on this)
+_COMM_SALT = 0xC0111
+
+
+def comm_round_keys(k_batch, m: int) -> jax.Array:
+    """Per-cohort-lane rng keys for stochastic compressors, derived from
+    (not consuming) the round's batch key.  One definition: the sync
+    round body and the async dispatcher both use it."""
+    return jax.random.split(jax.random.fold_in(k_batch, _COMM_SALT), m)
+
+
 def split_round_rng(rng) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """THE per-round rng split layout: (next_rng, k_select, k_batch).
 
@@ -141,27 +155,49 @@ def _personal_model(strategy: Strategy, x, cs, upload):
     return tmap(jnp.add, x, upload)
 
 
-def make_per_client(strategy: Strategy, grad_fn) -> Callable:
+def make_per_client(strategy: Strategy, grad_fn,
+                    compressor=None) -> Callable:
     """The per-client round body every placement maps over the cohort
-    axis: tau local steps + the personal-model view of the result."""
+    axis: tau local steps + the personal-model view of the result.
+
+    With a ``compressor`` (``repro.comm``) the body grows two operands --
+    the client's error-feedback residual row and a per-lane rng key --
+    and one output (the new residual): the upload is compressed and
+    DECOMPRESSED here, inside the per-client lane, so the aggregate (and
+    under the mesh placement the round's single psum) always sees a
+    dense cohort stack.  The personal model is taken from the RAW upload
+    first: the client keeps its own uncompressed delta; only the wire
+    copy is lossy."""
     def per_client(x_i, ctx_i, cs_i, batches_i):
         new_cs, upload, metrics = strategy.local_round(
             x_i, ctx_i, cs_i, batches_i, grad_fn)
         pm = _personal_model(strategy, x_i, new_cs, upload)
         return new_cs, upload, pm, metrics
 
-    return per_client
+    if compressor is None:
+        return per_client
+
+    def per_client_comm(x_i, ctx_i, cs_i, batches_i, ef_i, key_i):
+        new_cs, upload, pm, metrics = per_client(x_i, ctx_i, cs_i,
+                                                 batches_i)
+        upload, new_ef, cm = compressor.roundtrip(upload, ef_i, key_i)
+        return new_cs, upload, pm, {**metrics, **cm}, new_ef
+
+    return per_client_comm
 
 
-def make_dispatch_cohort(strategy: Strategy, grad_fn, placement) -> Callable:
+def make_dispatch_cohort(strategy: Strategy, grad_fn, placement,
+                         compressor=None) -> Callable:
     """The cohort-mapped per-client body the async regime launches per
     dispatch: EVERY operand carries the cohort axis (each client trains
     against its own pulled snapshot), so there is no aggregate and no
     collective -- just ``Placement.cohort_map`` over ``make_per_client``.
     The sync round body maps the same per-client function with a shared
     broadcast model instead (``Placement.execute``)."""
-    return placement.cohort_map(make_per_client(strategy, grad_fn),
-                                in_axes=(0, 0, 0, 0))
+    n_args = 6 if compressor is not None else 4
+    return placement.cohort_map(
+        make_per_client(strategy, grad_fn, compressor),
+        in_axes=(0,) * n_args)
 
 
 # ---------------------------------------------------------------------------
@@ -188,14 +224,22 @@ class VmapPlacement:
         return store
 
     def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
-                grad_fn, p: float):
-        per_client = make_per_client(strategy, grad_fn)
-        new_cs, uploads, pms_new, metrics = jax.vmap(
-            per_client, in_axes=(None, None, 0, 0))(x, ctx, cs, batches)
+                grad_fn, p: float, compressor=None, ef=None, keys=None):
+        if compressor is None:
+            per_client = make_per_client(strategy, grad_fn)
+            new_cs, uploads, pms_new, metrics = jax.vmap(
+                per_client, in_axes=(None, None, 0, 0))(x, ctx, cs,
+                                                        batches)
+            ef_new = {}
+        else:
+            per_client = make_per_client(strategy, grad_fn, compressor)
+            new_cs, uploads, pms_new, metrics, ef_new = jax.vmap(
+                per_client, in_axes=(None, None, 0, 0, 0, 0))(
+                x, ctx, cs, batches, ef, keys)
         x2, server2, agg_metrics = strategy.aggregate(x, server, uploads, p)
         metrics = {k: v.mean() for k, v in metrics.items()}
         metrics.update(agg_metrics)
-        return new_cs, pms_new, x2, server2, metrics
+        return new_cs, pms_new, x2, server2, metrics, ef_new
 
 
 def _psum_mean_fn(axis: str, metrics_local: Dict[str, jax.Array],
@@ -313,34 +357,65 @@ class MeshPlacement:
 
         return mapped
 
-    def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
-                grad_fn, p: float):
+    def _aggregate_tail(self, strategy, x, server, uploads, metrics, p):
+        """The shard-local aggregate: cohort-lane metric means + the
+        strategy's aggregate with the delta-mean lowered to the round's
+        ONE cross-client psum (metric scalars ride the same collective)."""
         axis = self.client_axis
-        per_client = make_per_client(strategy, grad_fn)
+        metrics_local = {k: v.mean() for k, v in metrics.items()}
+        box: Dict = {}
+        x2, server2, agg_metrics = strategy.aggregate(
+            x, server, uploads, p,
+            mean_fn=_psum_mean_fn(axis, metrics_local, box))
+        # a strategy that never called mean_fn still needs its metric
+        # scalars reduced (costs a second, scalar-sized collective)
+        metrics_global = box.get("metrics")
+        if metrics_global is None:
+            metrics_global = jax.lax.pmean(metrics_local, axis)
+        metrics_global = dict(metrics_global)
+        metrics_global.update(agg_metrics)
+        return x2, server2, metrics_global
 
-        def body(x, server, ctx, cs, batches):
-            new_cs, uploads, pms_new, metrics = jax.vmap(
-                per_client, in_axes=(None, None, 0, 0))(x, ctx, cs,
-                                                        batches)
-            metrics_local = {k: v.mean() for k, v in metrics.items()}
-            box: Dict = {}
-            x2, server2, agg_metrics = strategy.aggregate(
-                x, server, uploads, p,
-                mean_fn=_psum_mean_fn(axis, metrics_local, box))
-            # a strategy that never called mean_fn still needs its metric
-            # scalars reduced (costs a second, scalar-sized collective)
-            metrics_global = box.get("metrics")
-            if metrics_global is None:
-                metrics_global = jax.lax.pmean(metrics_local, axis)
-            metrics_global = dict(metrics_global)
-            metrics_global.update(agg_metrics)
-            return new_cs, pms_new, x2, server2, metrics_global
+    def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
+                grad_fn, p: float, compressor=None, ef=None, keys=None):
+        c = P(self.client_axis)
+        if compressor is None:
+            per_client = make_per_client(strategy, grad_fn)
 
-        c = P(axis)
+            def body(x, server, ctx, cs, batches):
+                new_cs, uploads, pms_new, metrics = jax.vmap(
+                    per_client, in_axes=(None, None, 0, 0))(x, ctx, cs,
+                                                            batches)
+                x2, server2, metrics_global = self._aggregate_tail(
+                    strategy, x, server, uploads, metrics, p)
+                return new_cs, pms_new, x2, server2, metrics_global
+
+            out = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), P(), P(), c, c),
+                out_specs=(c, c, P(), P(), P()))(x, server, ctx, cs,
+                                                 batches)
+            return out + ({},)
+
+        # compressed round: the per-client lane compresses AND
+        # decompresses its upload (repro.comm contract), so the psum in
+        # the aggregate tail still reduces a dense stack -- compression
+        # adds no collective
+        per_client = make_per_client(strategy, grad_fn, compressor)
+
+        def body_comm(x, server, ctx, cs, batches, ef, keys):
+            new_cs, uploads, pms_new, metrics, ef_new = jax.vmap(
+                per_client, in_axes=(None, None, 0, 0, 0, 0))(
+                x, ctx, cs, batches, ef, keys)
+            x2, server2, metrics_global = self._aggregate_tail(
+                strategy, x, server, uploads, metrics, p)
+            return new_cs, pms_new, x2, server2, metrics_global, ef_new
+
         return shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(), P(), P(), c, c),
-            out_specs=(c, c, P(), P(), P()))(x, server, ctx, cs, batches)
+            body_comm, mesh=self.mesh,
+            in_specs=(P(), P(), P(), c, c, c, c),
+            out_specs=(c, c, P(), P(), P(), c))(x, server, ctx, cs,
+                                                batches, ef, keys)
 
 
 def make_placement(name: str, mesh: Optional[Mesh] = None):
@@ -360,11 +435,27 @@ def make_placement(name: str, mesh: Optional[Mesh] = None):
 # the cohort executor
 # ---------------------------------------------------------------------------
 
+def init_ef_store(strategy: Strategy, x: Pytree, n_clients: int,
+                  compressor) -> Pytree:
+    """The error-feedback residual store a stateful compressor carries:
+    ``n_clients`` f32 zero rows shaped like one client's upload
+    (``strategy.upload_template``).  {} for stateless compressors --
+    the state pytree then has no ``ef`` entry at all, keeping the
+    uncompressed trace byte-identical."""
+    if compressor is None or not compressor.stateful:
+        return {}
+    tmpl = compressor.init_residual(strategy.upload_template(x))
+    return broadcast_client_store(tmpl, n_clients)
+
+
 def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
-                      placement=None) -> Pytree:
+                      placement=None, compressor=None) -> Pytree:
     """Full simulation state pytree.  ``x`` is copied: the state owns
     every buffer it holds, so donating rounds never invalidate caller-held
-    params.  A mesh placement lays the stores out over the client axis."""
+    params.  A mesh placement lays the stores out over the client axis.
+    A stateful ``compressor`` (repro.comm, e.g. top-k with error
+    feedback) adds the ``n_clients x upload`` residual store ``ef``,
+    laid out/donated exactly like the client/pms stores."""
     x = tmap(jnp.copy, x)
     clients = broadcast_client_store(strategy.client_init(x), sim.n_clients)
     # personalized-model store (Fig. 7): last local model per client
@@ -377,24 +468,43 @@ def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
         "rng": jax.random.PRNGKey(sim.seed),
         "round": jnp.zeros((), jnp.int32),
     }
+    ef = init_ef_store(strategy, x, sim.n_clients, compressor)
+    if jax.tree.leaves(ef):
+        state["ef"] = ef
     if placement is not None:
         state = placement.place_state(state)
     return state
 
 
 def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
-                    data: Dict[str, jax.Array], placement=None) -> Callable:
+                    data: Dict[str, jax.Array], placement=None,
+                    compressor=None) -> Callable:
     """The UN-jitted round body ``body(state) -> (state, metrics)``:
     sample -> gather -> local rounds -> scatter -> aggregate with the
     cohort axis placed per ``placement``.  Everything -- rng splitting,
     cohort sampling, batch draws -- is in-graph, so the body composes:
     ``make_cohort_round`` jits it directly (one call per round) and
-    ``make_block_fn`` scans it (one call per R rounds)."""
+    ``make_block_fn`` scans it (one call per R rounds).
+
+    ``compressor`` (repro.comm) compresses each client's upload on the
+    wire: the comm rng key is folded out of (never drawn from) the round
+    key stream, so the sample/batch draws -- and with the identity
+    compressor the whole trajectory -- match the uncompressed body
+    bitwise.  A stateful compressor's residual rows ride the state's
+    ``ef`` store: gathered with the cohort, scattered back, layout-pinned
+    like the client/pms stores (so the scan carry and donation work
+    unchanged)."""
     placement = placement or VmapPlacement()
     placement.check(sim)
     n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
+    stateful = compressor is not None and compressor.stateful
 
     def round_body(state):
+        if stateful and "ef" not in state:
+            raise ValueError(
+                f"compressor {compressor.name!r} carries error-feedback "
+                "residuals: init the state with the same compressor "
+                "(init_cohort_state/init_sim_state(..., compressor=...))")
         rng, k_sel, k_batch = split_round_rng(state["rng"])
         idx = sample_cohort(k_sel, n, m)  # (m,)
 
@@ -403,9 +513,15 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
         batches = draw_cohort_batches(data, k_batch, idx, tau, b)
         ctx = strategy.broadcast(state["x"], state["server"])
 
-        new_cs, pms_new, x, server, metrics = placement.execute(
+        comm_kw = {}
+        if compressor is not None:
+            comm_kw = dict(compressor=compressor,
+                           ef=gather_client_state(state.get("ef", {}),
+                                                  idx),
+                           keys=comm_round_keys(k_batch, m))
+        new_cs, pms_new, x, server, metrics, ef_new = placement.execute(
             strategy, state["x"], state["server"], ctx, cs, batches,
-            grad_fn, sim.p)
+            grad_fn, sim.p, **comm_kw)
 
         # scatter per-client state back (store layout pinned so donation
         # reuses the distributed buffers under the mesh placement, and so
@@ -414,25 +530,31 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
             scatter_cohort_rows(state["clients"], idx, new_cs))
         pms = placement.constrain_store(
             scatter_cohort_rows(state["pms"], idx, pms_new))
-        return {
+        out = {
             "x": x, "clients": clients, "pms": pms, "server": server,
             "rng": rng, "round": state["round"] + 1,
-        }, metrics
+        }
+        if stateful:
+            out["ef"] = placement.constrain_store(
+                scatter_cohort_rows(state["ef"], idx, ef_new))
+        return out, metrics
 
     return round_body
 
 
 def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
                       data: Dict[str, jax.Array], *, placement=None,
-                      donate: bool = True):
+                      donate: bool = True, compressor=None):
     """The per-round executor: returns jitted ``round_fn(state) -> (state,
     metrics)``.
 
     ``placement=None`` (or ``VmapPlacement()``) is bit-for-bit the
     historical single-device ``make_round_fn``.  ``donate=True`` donates
     the state pytree into the jitted call -- the client/pms stores update
-    in place; the passed-in state must not be reused afterwards."""
-    round_body = make_round_body(sim, strategy, grad_fn, data, placement)
+    in place; the passed-in state must not be reused afterwards.
+    ``compressor`` compresses the uplink (see ``make_round_body``)."""
+    round_body = make_round_body(sim, strategy, grad_fn, data, placement,
+                                 compressor)
     if donate:
         return jax.jit(round_body, donate_argnums=(0,))
     return jax.jit(round_body)
@@ -440,7 +562,7 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
 
 def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, block_size: int,
-                  placement=None, donate: bool = True):
+                  placement=None, donate: bool = True, compressor=None):
     """The multi-round executor: ``block_size`` rounds inside ONE jitted
     ``lax.scan``.  Returns ``block_fn(state) -> (state, metrics)`` where
     every metric scalar comes back stacked as a ``(block_size,)`` array
@@ -463,7 +585,8 @@ def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     boundary -- drive it with ``rounds.run_blocks``."""
     if block_size < 1:
         raise ValueError(f"block_size must be >= 1, got {block_size}")
-    round_body = make_round_body(sim, strategy, grad_fn, data, placement)
+    round_body = make_round_body(sim, strategy, grad_fn, data, placement,
+                                 compressor)
 
     def block_fn(state):
         def step(carry, _):

@@ -54,17 +54,18 @@ Pytree = Any
 
 
 def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree,
-                   placement=None):
+                   placement=None, compressor=None):
     """Returns the full simulation state pytree.  ``x`` is copied: the
     state owns every buffer it holds, so donating rounds never invalidate
     caller-held params.  A mesh placement lays the client/pms stores out
-    over the mesh's client axis."""
-    return init_cohort_state(sim, strategy, x, placement)
+    over the mesh's client axis.  A stateful ``compressor`` (repro.comm)
+    adds the per-client error-feedback residual store ``ef``."""
+    return init_cohort_state(sim, strategy, x, placement, compressor)
 
 
 def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, donate: bool = True,
-                  placement=None):
+                  placement=None, compressor=None):
     """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
     {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state).
 
@@ -72,9 +73,12 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     (``donate_argnums``) -- the client/pms stores update in place; the
     passed-in state must not be reused afterwards.  ``donate=False``
     keeps the old copying semantics, bit-for-bit.  ``placement`` picks
-    where the cohort axis runs (engine.py); None = single-device vmap."""
+    where the cohort axis runs (engine.py); None = single-device vmap.
+    ``compressor`` (repro.comm) compresses each client's uplink delta;
+    None is trace-identical to the pre-comm engine."""
     return make_cohort_round(sim, strategy, grad_fn, data,
-                             placement=placement, donate=donate)
+                             placement=placement, donate=donate,
+                             compressor=compressor)
 
 
 def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:

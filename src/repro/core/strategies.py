@@ -154,6 +154,13 @@ class Strategy:
     def broadcast(self, x: Pytree, server_state: Pytree) -> Pytree:
         return None
 
+    def upload_template(self, x: Pytree) -> Pytree:
+        """Shape/dtype template of ONE client's upload -- the uplink
+        payload the comm layer compresses, carries error-feedback
+        residuals for, and prices (``comm.payload_bytes``).  Every
+        baseline ships one params-shaped delta; Scaffold doubles it."""
+        return x
+
     def aggregate(self, x, server_state, uploads, p, weights=None,
                   mean_fn=None):
         """``weights`` (optional, shape (m,)): per-upload aggregation
@@ -235,6 +242,10 @@ class Scaffold(Strategy):
     def broadcast(self, x, server_state):
         return server_state["c"]
 
+    def upload_template(self, x):
+        # {dv, dc}: the paper's 2x uplink overhead, priced as such
+        return {"dv": x, "dc": x}
+
     def local_round(self, x, ctx, cs, batches, grad_fn):
         c, c_i = ctx, cs["c_i"]
 
@@ -303,6 +314,12 @@ class FedDeper(Strategy):
 
     def client_init(self, x):
         return {"v": tmap(jnp.asarray, x)}  # v_0 = x at round 0
+
+    def upload_template(self, x):
+        if self.upload_dtype:
+            dt = jnp.dtype(self.upload_dtype)
+            return tmap(lambda t: jax.ShapeDtypeStruct(t.shape, dt), x)
+        return x
 
     def _grads(self, grad_fn):
         """(y, v, mb) -> (loss_y, gy, loss_v, gv); one joint pass when

@@ -105,6 +105,35 @@ def deper_update(y, v, x, gy, gv, *, eta: float, rho: float,
 
 
 # ---------------------------------------------------------------------------
+# stochastic int8 pack / unpack (comm layer's q8 compressor)
+# ---------------------------------------------------------------------------
+
+def quantize_stochastic(buf, rand):
+    """Stochastically round a TreeFlattener-packed (rows, LANES) f32
+    buffer (pre-scaled into [-127, 127]) to int8: ONE ``pallas_call`` on
+    TPU; elsewhere the identical kernel expression runs as one fused XLA
+    elementwise op (interpret-mode grid emulation copies full buffers per
+    grid step -- same rationale as ``_flat_update``).  Bitwise equal on
+    both paths."""
+    from repro.kernels import quantize as _q
+    if not _interpret():
+        block = pick_block(buf.shape[0], _q.DEFAULT_BLOCK_ROWS)
+        return _q.quantize_stochastic_2d(buf, rand, block_rows=block)
+    return jnp.clip(jnp.floor(buf + rand), -_q.QMAX, _q.QMAX).astype(
+        jnp.int8)
+
+
+def dequantize(q):
+    """int8 packed buffer -> f32 (the caller re-applies per-leaf scales
+    after unflattening)."""
+    from repro.kernels import quantize as _q
+    if not _interpret():
+        block = pick_block(q.shape[0], _q.DEFAULT_BLOCK_ROWS)
+        return _q.dequantize_2d(q, block_rows=block)
+    return q.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

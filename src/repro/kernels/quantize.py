@@ -1,0 +1,77 @@
+"""Stochastic int8 pack / unpack of the TreeFlattener-packed buffer.
+
+The comm layer's q8 compressor normalizes every upload leaf by its own
+scale (per-leaf ``amax / 127``), packs the whole tree into ONE padded
+``(rows, LANES)`` float32 buffer (``kernels.tiling.TreeFlattener``), and
+quantizes it with a single Pallas launch -- the same launch-count
+argument as the fused ``deper_update``: at 8 leaves per MLP a per-leaf
+quantizer would cost 8 launches per upload, and launch overhead, not
+bandwidth, dominates elementwise passes.
+
+Pack (stochastic rounding, unbiased: E[q] = v for v pre-scaled into
+[-127, 127]):
+
+    q = clip(floor(v + u), -127, 127).astype(int8),   u ~ U[0, 1)
+
+The uniform draws arrive as a kernel *operand* (generated with
+``jax.random`` outside) instead of ``pltpu.prng_*`` so the identical
+kernel body runs under ``interpret=True`` off-TPU and stays bitwise
+against the jnp oracle the tests pin.
+
+Unpack is the exact inverse modulo rounding: ``q.astype(f32)`` (the
+caller multiplies the per-leaf scales back after unflattening).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import LANES  # noqa: F401  (re-exported)
+
+DEFAULT_BLOCK_ROWS = 256
+
+QMAX = 127.0  # symmetric int8 range; -128 is never emitted
+
+
+def _kernel_pack(v_ref, r_ref, o_ref):
+    v = v_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.clip(jnp.floor(v + r), -QMAX, QMAX).astype(jnp.int8)
+
+
+def _kernel_unpack(q_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32)
+
+
+def quantize_stochastic_2d(v, rand, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                           interpret: bool = False):
+    """(R, LANES) f32 pre-scaled into [-QMAX, QMAX] + U[0,1) draws of the
+    same shape -> int8 (R, LANES), one launch."""
+    R, L = v.shape
+    assert L == LANES and R % block_rows == 0, (v.shape, block_rows)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel_pack,
+        grid=(R // block_rows,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(v.shape, jnp.int8),
+        interpret=interpret,
+    )(v, rand)
+
+
+def dequantize_2d(q, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False):
+    """int8 (R, LANES) -> f32 (R, LANES), one launch."""
+    R, L = q.shape
+    assert L == LANES and R % block_rows == 0, (q.shape, block_rows)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel_unpack,
+        grid=(R // block_rows,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=interpret,
+    )(q)

@@ -37,6 +37,18 @@ same trajectory as the per-round loop:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
       --block-rounds 4 --batch 2 --seq 64
+
+``--compress {none,identity,q8,fp8,topk:R}`` (engine placements and the
+async regime) compresses each client's uplink delta through the comm
+layer (repro/comm): per-leaf-scale int8/fp8 quantization or top-k
+sparsification with client-side error feedback; records report the
+resulting ``uplink_bytes_per_round``.  With ``--regime async`` and
+``--bandwidth B`` every delivery additionally pays payload_bytes/B of
+simulated time, so compression shortens the straggler queue:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
+      --block-rounds 4 --batch 2 --seq 64 --compress topk:0.25
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ import numpy as np
 
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
+from repro.comm import make_compressor, uplink_bytes_per_round
 from repro.configs import get_config, list_configs
 from repro.core import (AsyncSimConfig, STRATEGIES, SimConfig,
                         init_async_state, init_sim_state,
@@ -74,9 +87,14 @@ def _require_token_arch(cfg, arch: str, flag: str):
 
 def _ckpt_tree(s):
     """The checkpointed slice of a round-regime state: model pytrees +
-    rng.  Regime bookkeeping (round/version counters, async slots/buffer)
-    is restored separately or dropped -- see each caller."""
-    return (s["x"], s["clients"], s["pms"], s["server"], s["rng"])
+    rng, plus the error-feedback residual store when a stateful
+    compressor is in play ({} otherwise) -- dropping ``ef`` on restore
+    would silently discard the EF-SGD mass scheduled for re-send and
+    diverge the resumed trajectory.  Regime bookkeeping (round/version
+    counters, async slots/buffer) is restored separately or dropped --
+    see each caller."""
+    return (s["x"], s["clients"], s["pms"], s["server"], s["rng"],
+            s.get("ef", {}))
 
 
 def _restore_state(state, args) -> int:
@@ -90,7 +108,9 @@ def _restore_state(state, args) -> int:
         return 0
     tree, meta = restore_checkpoint(path, _ckpt_tree(state))
     (state["x"], state["clients"], state["pms"], state["server"],
-     state["rng"]) = tree
+     state["rng"], ef) = tree
+    if jax.tree.leaves(ef):
+        state["ef"] = ef
     print(f"restored round {meta['step']} from {path}")
     return meta["step"]
 
@@ -117,26 +137,32 @@ def run_async(cfg, strategy, args):
     """Buffered-async LM training: heterogeneous client delays, versioned
     global model, staleness-discounted aggregation."""
     _require_token_arch(cfg, args.arch, "--regime async")
+    compressor = make_compressor(args.compress)
     acfg = AsyncSimConfig(
         n_clients=args.clients, m_concurrent=args.concurrent,
         buffer_size=args.buffer, tau=args.tau, batch_size=args.batch,
         alpha=args.alpha, delay=args.delay, delay_dist=args.delay_dist,
-        seed=args.seed)
+        seed=args.seed, bandwidth=args.bandwidth)
     data = {k: jnp.asarray(v) for k, v in make_federated_lm(
         vocab=cfg.vocab_size, n_clients=args.clients,
         per_client=args.per_client, seq_len=args.seq,
         seed=args.seed).items()}
     grad_fn = make_lm_grad_fn(cfg)
     x = init_model(cfg, jax.random.PRNGKey(args.seed))
-    state = init_async_state(acfg, strategy, x)
-    round_fn = make_async_round_fn(acfg, strategy, grad_fn, data)
+    state = init_async_state(acfg, strategy, x, compressor=compressor)
+    round_fn = make_async_round_fn(acfg, strategy, grad_fn, data,
+                                   compressor=compressor)
 
     # checkpoints land at aggregation boundaries; in-flight slots/buffer
     # are dropped, so a restart redispatches (the staleness clock
     # restarts too -- same semantics as clients rejoining)
     start = _restore_state(state, args)
     state["round"] = state["version"] = start
-    return _drive_rounds(state, round_fn, args, start)
+    return _drive_rounds(
+        state, round_fn, args, start,
+        rec_extra={"compress": args.compress,
+                   "uplink_bytes_per_round": uplink_bytes_per_round(
+                       compressor, strategy, x, acfg.buffer_size)})
 
 
 def _make_lm_eval(cfg, args):
@@ -171,6 +197,7 @@ def run_engine(cfg, strategy, args):
     cadence changes."""
     _require_token_arch(cfg, args.arch, "--placement")
     placement = make_placement(args.placement)
+    compressor = make_compressor(args.compress)
     m = args.sampled or args.clients
     sim = SimConfig(n_clients=args.clients, m_sampled=m, tau=args.tau,
                     batch_size=args.batch, seed=args.seed)
@@ -180,7 +207,11 @@ def run_engine(cfg, strategy, args):
         seed=args.seed).items()}
     grad_fn = make_lm_grad_fn(cfg)
     x = init_model(cfg, jax.random.PRNGKey(args.seed))
-    state = init_sim_state(sim, strategy, x, placement=placement)
+    state = init_sim_state(sim, strategy, x, placement=placement,
+                           compressor=compressor)
+    comm_extra = {"compress": args.compress,
+                  "uplink_bytes_per_round": uplink_bytes_per_round(
+                      compressor, strategy, x, m)}
 
     start = _restore_state(state, args)
     if start:
@@ -194,6 +225,7 @@ def run_engine(cfg, strategy, args):
 
         def log(rec):
             print(json.dumps({**rec, "placement": placement.name,
+                              **comm_extra,
                               "elapsed_s": round(time.time() - t0, 2)}),
                   flush=True)
 
@@ -213,7 +245,7 @@ def run_engine(cfg, strategy, args):
         state, _ = run_blocks(
             state, lambda size: make_block_fn(
                 sim, strategy, grad_fn, data, block_size=size,
-                placement=placement),
+                placement=placement, compressor=compressor),
             args.rounds - start, args.block_rounds, eval_fn=eval_fn,
             log=log, on_block=on_block, first_round=start)
         if args.ckpt_dir:
@@ -221,9 +253,10 @@ def run_engine(cfg, strategy, args):
         return 0
 
     round_fn = make_round_fn(sim, strategy, grad_fn, data,
-                             placement=placement)
+                             placement=placement, compressor=compressor)
     return _drive_rounds(state, round_fn, args, start,
-                         rec_extra={"placement": placement.name})
+                         rec_extra={"placement": placement.name,
+                                    **comm_extra})
 
 
 def main(argv=None):
@@ -275,6 +308,16 @@ def main(argv=None):
     ap.add_argument("--per-client", type=int, default=64,
                     help="async/--placement: LM sequences materialized "
                          "per client")
+    # uplink compression (repro.comm); engine placements + async regime
+    ap.add_argument("--compress", default="none",
+                    help="uplink compressor: none | identity | q8 | fp8 "
+                         "| topk:R (keep-ratio R in [0,1], e.g. "
+                         "topk:0.1); 'none' is trace-identical to the "
+                         "pre-comm engine")
+    ap.add_argument("--bandwidth", type=float, default=0.0,
+                    help="async: uplink bytes per simulated-time unit; "
+                         "deliveries pay payload_bytes/bandwidth extra "
+                         "(0 = no bandwidth model)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -292,6 +335,12 @@ def main(argv=None):
                          "--placement {vmap,mesh} (the async regime's "
                          "sim-time advance is host-side and cannot be "
                          "scanned)")
+    if args.compress != "none" and args.regime != "async" \
+            and not args.placement:
+        raise SystemExit("--compress rides the comm-aware paths: pass "
+                         "--placement {vmap,mesh} or --regime async "
+                         "(the legacy fixed-cohort datacenter step has "
+                         "no uplink seam)")
     if args.regime == "async":
         if args.placement:
             raise SystemExit("--placement applies to the synchronous "

@@ -153,10 +153,11 @@ def sim_state_specs(state: Pytree, mesh: Mesh, *, client: str,
                     model: str = "model",
                     fsdp: Optional[str] = None) -> Pytree:
     """NamedSharding pytree for a whole simulation-state dict (the cohort
-    engine's ``{x, clients, pms, server, rng, round}``): the per-client
-    stores (``clients``/``pms``, leading n_clients dim) follow
-    ``client_store_pspec`` -- client axis on dim 0 when n_clients divides
-    it, replicated fallback otherwise -- and every other entry is
+    engine's ``{x, clients, pms, server, rng, round}`` plus, under a
+    stateful uplink compressor, the error-feedback store ``ef``): the
+    per-client stores (``clients``/``pms``/``ef``, leading n_clients dim)
+    follow ``client_store_pspec`` -- client axis on dim 0 when n_clients
+    divides it, replicated fallback otherwise -- and every other entry is
     replicated.
 
     One function owns this layout because two consumers must agree on it:
@@ -167,7 +168,7 @@ def sim_state_specs(state: Pytree, mesh: Mesh, *, client: str,
     rep = NamedSharding(mesh, P())
     out = {}
     for key, sub in state.items():
-        if key in ("clients", "pms") and jax.tree.leaves(sub):
+        if key in ("clients", "pms", "ef") and jax.tree.leaves(sub):
             out[key] = param_specs(sub, mesh, model=model, fsdp=fsdp,
                                    client=client)
         else:

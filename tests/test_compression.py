@@ -1,0 +1,411 @@
+"""Uplink-compression subsystem (repro/comm + engine threading).
+
+Pins the contracts DESIGN.md §8 records: the identity compressor is
+bitwise the uncompressed engine on BOTH placements; quantizers obey
+their per-leaf-scale error bounds (and fp8 can never overflow to
+inf/nan); top-k handles the k=0 / k=all edges exactly; error-feedback
+residual rows live in the state's ``ef`` store -- gathered/scattered
+with the cohort, surviving donating scan blocks with their sharding
+preserved, and keeping the mesh round at exactly ONE cross-client
+collective (decompression happens per-client lane, before the psum);
+and the async regime's bandwidth model charges compressed bytes."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+from repro.comm import (Identity, Quantize, TopK, make_compressor,
+                        payload_bytes, uplink_bytes_per_round)
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (AsyncSimConfig, FedDeper, MeshPlacement, Scaffold,
+                        SimConfig, init_async_state, init_sim_state,
+                        make_async_round_fn, make_block_fn, make_round_fn,
+                        run_rounds)
+from repro.data import make_federated_classification
+from repro.launch.mesh import make_client_mesh
+from repro.models import classifier_loss, init_classifier
+
+CFG = MLP_MNIST
+SIM = SimConfig(n_clients=6, m_sampled=4, tau=2, batch_size=8, seed=5)
+STRAT = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+
+
+def grad_fn(p, mb):
+    (l, _), g = jax.value_and_grad(
+        lambda p, b: classifier_loss(CFG, p, b), has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = make_federated_classification(n_clients=6, per_client=32,
+                                       split="shards", seed=2)
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(11))
+
+
+def _run(data, x0, compressor=None, placement=None, rounds=3):
+    state = init_sim_state(SIM, STRAT, x0, placement=placement,
+                           compressor=compressor)
+    rf = make_round_fn(SIM, STRAT, grad_fn, data, placement=placement,
+                       compressor=compressor)
+    return run_rounds(state, rf, rounds)
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# ------------------------------------------------------ identity pin
+
+def test_identity_bitwise_vmap(data, x0):
+    """The comm path with the identity compressor (extra ef/key plumbing
+    traced then DCE'd) is bitwise the no-compressor engine."""
+    ref, hist_r = _run(data, x0)
+    out, hist_o = _run(data, x0, compressor=Identity())
+    for key in ("x", "clients", "pms"):
+        _assert_trees_equal(ref[key], out[key], key)
+    for hr, ho in zip(hist_r, hist_o):
+        assert hr == ho
+
+
+def test_identity_bitwise_mesh(data, x0):
+    """Same pin under the mesh placement (1-device mesh == vmap bitwise,
+    so identity-on-mesh must equal the uncompressed vmap round too)."""
+    ref, _ = _run(data, x0)
+    pl = MeshPlacement(make_client_mesh())
+    out, _ = _run(data, x0, compressor=Identity(), placement=pl)
+    for key in ("x", "clients", "pms"):
+        _assert_trees_equal(ref[key], out[key], key)
+
+
+# ------------------------------------------------------ quantizers
+
+def _tree(key, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": jax.random.normal(k1, (37, 17)) * scale,
+            "b": jax.random.normal(k2, (11,)) * scale * 100.0,
+            "z": jax.random.normal(k3, (5, 3, 2)) * scale * 1e-3}
+
+
+def test_q8_roundtrip_error_bound():
+    """Stochastic int8 with per-leaf scale: |deq - x| <= scale per
+    element, scale = amax(leaf)/127 -- the floor+uniform draw moves a
+    value by strictly less than one quantization step."""
+    tree = _tree(jax.random.PRNGKey(0))
+    dense, ef, _ = Quantize("int8").roundtrip(tree, {},
+                                              jax.random.PRNGKey(1))
+    assert ef == {}
+    for k in tree:
+        step = float(jnp.max(jnp.abs(tree[k]))) / 127.0
+        err = np.abs(np.asarray(dense[k]) - np.asarray(tree[k]))
+        assert err.max() <= step * (1 + 1e-6), (k, err.max(), step)
+
+
+def test_q8_stochastic_rounding_is_unbiased_ish():
+    """Averaged over many draws the stochastic rounding recovers the
+    input to well under one deterministic-rounding step."""
+    x = {"w": jnp.linspace(-1.0, 1.0, 256).reshape(16, 16)}
+    q = Quantize("int8")
+    acc = np.zeros((16, 16))
+    n = 64
+    for i in range(n):
+        dense, _, _ = q.roundtrip(x, {}, jax.random.PRNGKey(i))
+        acc += np.asarray(dense["w"])
+    step = 1.0 / 127.0
+    assert np.abs(acc / n - np.asarray(x["w"])).max() < 0.25 * step
+
+
+def test_fp8_finite_and_bounded():
+    """The e4m3 scale maps amax onto 448, so no finite input can
+    overflow; error is bounded by the leaf's largest magnitude times the
+    e4m3 relative step (2^-3) plus the scale floor."""
+    tree = _tree(jax.random.PRNGKey(2), scale=1e4)
+    dense, _, _ = Quantize("fp8").roundtrip(tree, {},
+                                            jax.random.PRNGKey(3))
+    for k in tree:
+        d = np.asarray(dense[k])
+        assert np.isfinite(d).all(), k
+        amax = float(jnp.max(jnp.abs(tree[k])))
+        err = np.abs(d - np.asarray(tree[k]))
+        assert err.max() <= amax * (2.0 ** -3), (k, err.max())
+
+
+def test_quantize_kernel_interpret_parity():
+    """The Pallas pack kernel in interpret mode is bitwise the jnp
+    expression the CPU path uses (one grid step and blocked grids)."""
+    from repro.kernels.quantize import LANES, quantize_stochastic_2d
+    key = jax.random.PRNGKey(7)
+    v = jax.random.uniform(key, (4, LANES), minval=-127.0, maxval=127.0)
+    r = jax.random.uniform(jax.random.fold_in(key, 1), (4, LANES))
+    oracle = jnp.clip(jnp.floor(v + r), -127.0, 127.0).astype(jnp.int8)
+    for block in (4, 2, 1):
+        got = quantize_stochastic_2d(v, r, block_rows=block,
+                                     interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+
+
+# ------------------------------------------------------ top-k edges
+
+def test_topk_k0_sends_nothing():
+    """ratio=0 -> k=0: the wire carries zero elements, the whole
+    corrected delta lands in the residual."""
+    tree = _tree(jax.random.PRNGKey(4))
+    ef0 = TopK(0.0).init_residual(tree)
+    dense, ef, _ = TopK(0.0).roundtrip(tree, ef0, jax.random.PRNGKey(0))
+    for k in tree:
+        assert not np.asarray(dense[k]).any(), k
+        np.testing.assert_allclose(np.asarray(ef[k]),
+                                   np.asarray(tree[k]), rtol=0, atol=0)
+    assert TopK(0.0).payload_bytes(tree) == 0
+
+
+def test_topk_kall_exact_passthrough():
+    """ratio=1 -> k=all: exact pass-through of upload + residual, new
+    residual identically zero (every leaf keeps all its elements)."""
+    tree = _tree(jax.random.PRNGKey(5))
+    carried = jax.tree.map(lambda t: 0.25 * jnp.ones_like(t), tree)
+    dense, ef, _ = TopK(1.0).roundtrip(tree, carried,
+                                       jax.random.PRNGKey(0))
+    for k in tree:
+        np.testing.assert_array_equal(
+            np.asarray(dense[k]), np.asarray(tree[k] + carried[k]), k)
+        assert not np.asarray(ef[k]).any(), k
+
+
+def test_topk_keeps_largest():
+    tree = {"w": jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0])}
+    dense, ef, _ = TopK(1 / 3).roundtrip(tree, TopK(1 / 3).init_residual(
+        tree), jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(dense["w"]),
+                               [0.0, -5.0, 0.0, 3.0, 0.0, 0.0])
+    np.testing.assert_allclose(np.asarray(ef["w"]),
+                               [0.1, 0.0, 0.2, 0.0, -0.05, 0.0],
+                               rtol=0, atol=1e-7)
+
+
+# ------------------------------------------------------ engine threading
+
+def test_ef_store_updates_only_sampled_rows(data, x0):
+    """The residual store has n_clients rows; one round touches exactly
+    the sampled cohort's rows (the others stay zero)."""
+    from repro.core import peek_sampled_clients
+    comp = TopK(0.1)
+    state = init_sim_state(SIM, STRAT, x0, compressor=comp)
+    idx = np.asarray(peek_sampled_clients(state, SIM))
+    rf = make_round_fn(SIM, STRAT, grad_fn, data, compressor=comp)
+    state, _ = rf(state)
+    touched = np.zeros(SIM.n_clients, bool)
+    touched[idx] = True
+    # residual mass per client over the WHOLE tree: a tiny leaf can have
+    # round(0.1 * size) == size kept (zero residual for that leaf), but
+    # a sampled client always drops SOME mass at ratio 0.1
+    row_mass = np.zeros(SIM.n_clients)
+    for leaf in jax.tree.leaves(state["ef"]):
+        leaf = np.asarray(leaf)
+        row_mass += np.abs(leaf.reshape(SIM.n_clients, -1)).sum(1)
+    assert (row_mass[touched] > 0).all()
+    assert (row_mass[~touched] == 0).all()
+
+
+def test_stateful_compressor_requires_matching_init(data, x0):
+    state = init_sim_state(SIM, STRAT, x0)  # no ef store
+    rf = make_round_fn(SIM, STRAT, grad_fn, data, compressor=TopK(0.1))
+    with pytest.raises(ValueError, match="error-feedback"):
+        rf(state)
+
+
+def test_block_scan_bitwise_with_ef(data, x0):
+    """topk + error feedback through the donating scan block: the block
+    trajectory (state AND the ef store) is bitwise the host loop's --
+    the residual rows thread the carry like the client/pms stores."""
+    comp = TopK(0.25)
+    loop, _ = _run(data, x0, compressor=comp, rounds=4)
+    state = init_sim_state(SIM, STRAT, x0, compressor=comp)
+    bf = make_block_fn(SIM, STRAT, grad_fn, data, block_size=2,
+                       compressor=comp)
+    for _ in range(2):
+        state, _ = bf(state)
+    for key in ("x", "clients", "pms", "ef"):
+        _assert_trees_equal(loop[key], state[key], key)
+
+
+def test_mesh_block_donating_keeps_ef_sharding(data, x0):
+    """Donating mesh scan block: the ef store comes back laid out over
+    the client axis (rules.sim_state_specs covers 'ef'), still alive."""
+    comp = TopK(0.25)
+    pl = MeshPlacement(make_client_mesh())
+    state = init_sim_state(SIM, STRAT, x0, placement=pl, compressor=comp)
+    bf = make_block_fn(SIM, STRAT, grad_fn, data, block_size=2,
+                       placement=pl, compressor=comp)
+    state, metrics = bf(state)
+    assert np.isfinite(np.asarray(metrics["local_loss"])).all()
+    # a size-1 axis may canonicalize to replicated; the strict 4-way
+    # P('data', ...) layout assertion lives in the subprocess test below
+    for leaf in jax.tree.leaves(state["ef"]):
+        spec = leaf.sharding.spec
+        assert len(spec) == 0 or spec[0] in (None, "data"), spec
+    assert any(np.asarray(l).any() for l in jax.tree.leaves(state["ef"]))
+
+
+def test_mesh_compressed_round_has_one_collective(data, x0):
+    """Compression must not add collectives: each lane decompresses its
+    own upload BEFORE the aggregate's psum (FedDeper and Scaffold's
+    two-stream upload alike)."""
+    from test_engine_placement import count_collectives
+    pl = MeshPlacement(make_client_mesh())
+    for strat in (STRAT, Scaffold(eta=0.05)):
+        comp = TopK(0.1)
+        rf = make_round_fn(SIM, strat, grad_fn, data, placement=pl,
+                           donate=False, compressor=comp)
+        state = init_sim_state(SIM, strat, x0, placement=pl,
+                               compressor=comp)
+        assert count_collectives(jax.make_jaxpr(rf)(state).jaxpr) == 1, \
+            strat.name
+
+
+# ------------------------------------------------------ async bandwidth
+
+def test_async_stateful_compressor_requires_matching_init(data, x0):
+    """Same contract as the sync guard: an async state initialized
+    without the stateful compressor fails with the explicit message,
+    not a pytree mismatch inside the jitted dispatch."""
+    acfg = AsyncSimConfig(n_clients=6, m_concurrent=4, buffer_size=2,
+                          tau=2, batch_size=8, seed=0)
+    state = init_async_state(acfg, STRAT, x0)  # no ef store
+    arf = make_async_round_fn(acfg, STRAT, grad_fn, data,
+                              compressor=TopK(0.1))
+    with pytest.raises(ValueError, match="error-feedback"):
+        arf(state)
+
+
+def test_async_bandwidth_charges_compressed_bytes(data, x0):
+    """With a bandwidth model, upload time scales with wire bytes: the
+    topk run's simulated clock beats the dense run's; residual rows are
+    scattered at delivery."""
+    times = {}
+    for name, comp in (("dense", None), ("topk", TopK(0.1))):
+        acfg = AsyncSimConfig(n_clients=6, m_concurrent=4, buffer_size=2,
+                              tau=2, batch_size=8, alpha=0.5, delay=2.0,
+                              seed=0, bandwidth=50_000.0)
+        state = init_async_state(acfg, STRAT, x0, compressor=comp)
+        arf = make_async_round_fn(acfg, STRAT, grad_fn, data,
+                                  compressor=comp)
+        for _ in range(3):
+            state, m = arf(state)
+        times[name] = m["sim_time"]
+        if comp is not None:
+            assert any(np.asarray(l).any()
+                       for l in jax.tree.leaves(state["ef"]))
+    assert times["topk"] < times["dense"]
+
+
+# ------------------------------------------------------ bytes accounting
+
+def test_payload_bytes_ratios(x0):
+    dense = uplink_bytes_per_round(None, STRAT, x0, SIM.m_sampled)
+    q8 = uplink_bytes_per_round(Quantize("int8"), STRAT, x0,
+                                SIM.m_sampled)
+    fp8 = uplink_bytes_per_round(Quantize("fp8"), STRAT, x0,
+                                 SIM.m_sampled)
+    topk = uplink_bytes_per_round(TopK(0.1), STRAT, x0, SIM.m_sampled)
+    assert dense >= 4 * 0.99 * q8 and q8 == fp8
+    assert dense >= 4 * topk  # 10% kept at 8B/elem vs 4B dense = 5x
+    # scaffold ships {dv, dc}: exactly twice the baseline wire bytes
+    assert payload_bytes(None, Scaffold().upload_template(x0)) == \
+        2 * payload_bytes(None, FedDeper().upload_template(x0))
+
+
+def test_make_compressor_specs():
+    assert make_compressor("none") is None
+    assert make_compressor(None) is None
+    assert isinstance(make_compressor("identity"), Identity)
+    assert make_compressor("q8").mode == "int8"
+    assert make_compressor("fp8").mode == "fp8"
+    assert make_compressor("topk:0.25").ratio == 0.25
+    with pytest.raises(ValueError):
+        make_compressor("gzip")
+    with pytest.raises(ValueError):
+        make_compressor("topk:1.5")
+
+
+# ------------------------------------------------- 4-device CPU emulation
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.comm import TopK
+    from repro.configs.paper_models import MLP_MNIST
+    from repro.core import (FedDeper, SimConfig, MeshPlacement,
+                            init_sim_state, make_block_fn, make_round_fn,
+                            run_rounds)
+    from repro.data import make_federated_classification
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import classifier_loss, init_classifier
+
+    assert jax.local_device_count() == 4
+
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(
+            lambda p, b: classifier_loss(MLP_MNIST, p, b),
+            has_aux=True)(p, mb)
+        return l, g
+
+    ds = make_federated_classification(n_clients=8, per_client=32,
+                                       split="shards", seed=2)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    x0 = init_classifier(MLP_MNIST, jax.random.PRNGKey(11))
+    sim = SimConfig(n_clients=8, m_sampled=4, tau=2, batch_size=8,
+                    seed=5)
+    pl = MeshPlacement(make_client_mesh())
+    comp = TopK(0.25)
+
+    # the donating scan block vs the host loop, both compressed: same
+    # trajectory INCLUDING the distributed ef store, which must come
+    # back sharded over the 4-way client axis after every block
+    sl = init_sim_state(sim, FedDeper(eta=0.05, rho=0.03, lam=0.5), x0,
+                        placement=pl, compressor=comp)
+    rf = make_round_fn(sim, FedDeper(eta=0.05, rho=0.03, lam=0.5),
+                       grad_fn, data, placement=pl, compressor=comp)
+    sl, _ = run_rounds(sl, rf, 4)
+
+    sb = init_sim_state(sim, FedDeper(eta=0.05, rho=0.03, lam=0.5), x0,
+                        placement=pl, compressor=comp)
+    bf = make_block_fn(sim, FedDeper(eta=0.05, rho=0.03, lam=0.5),
+                       grad_fn, data, block_size=2, placement=pl,
+                       compressor=comp)
+    for _ in range(2):
+        sb, metrics = bf(sb)
+        for leaf in jax.tree.leaves(sb["ef"]):
+            assert leaf.sharding.spec[0] == "data", leaf.sharding.spec
+            assert len(leaf.sharding.device_set) == 4
+    for key in ("x", "clients", "pms", "ef"):
+        for a, b in zip(jax.tree.leaves(sl[key]),
+                        jax.tree.leaves(sb[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+    assert any(np.asarray(l).any() for l in jax.tree.leaves(sb["ef"]))
+    print("COMPRESSION_4DEV_OK")
+""")
+
+
+def test_compression_4device_emulation():
+    """4-way client axis: error-feedback rows sharded over the axis,
+    surviving donating scan blocks bitwise-equal to the host loop."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True,
+                         env=_SUBPROC_ENV, timeout=560)
+    assert "COMPRESSION_4DEV_OK" in out.stdout, (out.stdout[-1000:],
+                                                 out.stderr[-3000:])

@@ -230,6 +230,41 @@ def test_bench_schema_validator():
             validate_bench(bad)
 
 
+def test_bench_schema_strict_keys_and_comm_rows():
+    """Unknown entry keys are schema errors (future bench edits fail
+    loudly in the smoke lane), and rows carrying a ``compress`` config
+    must track ``uplink_bytes_per_round``."""
+    from benchmarks.round_engine import validate_bench
+    base = {"us_per_round": 1.0, "peak_bytes": 1024, "config": {}}
+    with pytest.raises(ValueError, match="unknown keys"):
+        validate_bench({"b": {**base, "stray_field": 1}})
+    with pytest.raises(ValueError, match="uplink_bytes_per_round"):
+        validate_bench({"b": {**base, "config": {"compress": "q8"}}})
+    with pytest.raises(ValueError, match="uplink_bytes_per_round"):
+        validate_bench({"b": {**base, "config": {"compress": "q8"},
+                              "uplink_bytes_per_round": None}})
+    validate_bench({"b": {**base, "config": {"compress": "q8"},
+                          "uplink_bytes_per_round": 4096}})
+
+
+def test_bench_speedup_regression_gate():
+    """check_speedups: fails only when a smoke ratio drops below tol x
+    the tracked ratio; missing rows/ratios are skipped."""
+    from benchmarks.round_engine import check_speedups
+    row = lambda **cfg: {"us_per_round": 1.0, "peak_bytes": 1,  # noqa: E731
+                         "config": cfg}
+    tracked = {"a": row(speedup_vs_loop=2.0), "b": row(speedup_vs_vmap=1.0)}
+    assert check_speedups({"a": row(speedup_vs_loop=1.9)}, tracked) == []
+    assert check_speedups({"a": row(speedup_vs_loop=1.01)}, tracked,
+                          tol=0.5) == []
+    fails = check_speedups({"a": row(speedup_vs_loop=0.9)}, tracked,
+                           tol=0.5)
+    assert len(fails) == 1 and "speedup_vs_loop" in fails[0]
+    # untracked smoke rows and non-ratio config keys are ignored
+    assert check_speedups({"c": row(speedup_vs_loop=0.1),
+                           "b": row(n=10)}, tracked) == []
+
+
 def test_checked_in_bench_file_is_valid():
     from benchmarks.round_engine import BENCH_PATH, validate_bench
     obj = json.loads(BENCH_PATH.read_text())
@@ -247,6 +282,12 @@ def test_checked_in_bench_file_is_valid():
         cfg = obj[row]["config"]
         assert cfg["block_rounds"] >= 1, row
         assert cfg["speedup_vs_loop"] > 0, row
+    # comm rows: identity tracks the dense wire cost; the real
+    # compressors ship >=4x fewer bytes per round (q8 is 3.9996x --
+    # 1 byte/elem + one f32 scale per leaf -- topk:0.1 is 5x)
+    dense_b = obj["feddeper_sync_identity"]["uplink_bytes_per_round"]
+    for row in ("feddeper_sync_q8", "feddeper_sync_topk"):
+        assert dense_b >= 3.99 * obj[row]["uplink_bytes_per_round"], row
 
 
 @pytest.mark.slow
