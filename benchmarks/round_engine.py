@@ -19,7 +19,10 @@ round engine has:
                           shard_map, delta-mean as one psum), interleaved
                           against the identical vmap row so the tracked
                           ``speedup_vs_vmap`` ratio prices the shard_map
-                          lowering (1-device mesh on this container);
+                          lowering (1-device mesh on this container); the
+                          ``async_mesh`` row does the same for the async
+                          regime (padded dispatch cohorts + the
+                          staleness-weighted mean lowered to one psum);
 * ``*_block{K}``       -- the scan-compiled block driver
                           (``engine.make_block_fn``): K rounds per jitted
                           ``lax.scan`` call, one host sync + donation
@@ -241,20 +244,23 @@ def _async_peak_bytes(arf, acfg, task, strategy, grad_fn, state
     return max(peaks) if peaks else None
 
 
-def _prep_async(task, x0, scale, strategy, *, donate, twin):
+def _prep_async(task, x0, scale, strategy, *, donate, twin,
+                placement=None):
     acfg = AsyncSimConfig(n_clients=scale["n"], m_concurrent=scale["m"],
                           buffer_size=scale["m"], tau=scale["tau"],
                           batch_size=scale["batch"], alpha=0.5, delay=10.0,
                           delay_dist="lognormal", seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
+    pl = make_placement(placement) if placement else None
     arf = make_async_round_fn(acfg, strategy, grad_fn, task["data"],
-                              donate=donate)
+                              donate=donate, placement=pl)
     cfg = dict(regime="async", model=MLP_MNIST.name, donate=donate,
-               twin_grads=twin, alpha=acfg.alpha, delay=acfg.delay, **scale)
+               twin_grads=twin, alpha=acfg.alpha, delay=acfg.delay,
+               placement=placement or "vmap", **scale)
     for k in ("use_pallas", "fuse_grads"):
         if hasattr(strategy, k):
             cfg[k] = getattr(strategy, k)
-    state = init_async_state(acfg, strategy, x0)
+    state = init_async_state(acfg, strategy, x0, placement=pl)
     peak = _async_peak_bytes(arf, acfg, task, strategy, grad_fn, state)
     return _Prepared(arf, state, cfg, peak_bytes=peak)
 
@@ -406,6 +412,14 @@ def _benches():
         "feddeper_async_fused": (
             "async", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True)),
+        # the async regime under the MESH placement: padded dispatch
+        # cohorts on the client axis, staleness-weighted aggregation
+        # lowered to one psum (aggregate_buffer); interleaved against the
+        # identical vmap async row so the ratio prices the shard_map +
+        # weighted-psum lowering (1-device mesh on this container)
+        "feddeper_async_mesh": (
+            "async", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, placement="mesh")),
     }
 
 
@@ -418,6 +432,10 @@ _SPEEDUP_PAIRS = {
                                    "speedup_vs_unfused"),
     "feddeper_async_fused": ("feddeper_async_unfused",
                              "speedup_vs_unfused"),
+    # async placement ratio: mesh async vs the identical vmap async row
+    # (<= 1.0 expected on a 1-device mesh; prices the padded cohort_map
+    # + weighted-psum aggregation lowering)
+    "feddeper_async_mesh": ("feddeper_async_fused", "speedup_vs_vmap"),
     # placement ratio: mesh vs the identical vmap round (<= 1.0 expected
     # on a 1-device mesh -- it prices the shard_map lowering)
     "feddeper_sync_mesh": ("feddeper_sync_fused", "speedup_vs_vmap"),
@@ -467,7 +485,8 @@ def round_engine_rows(quick: bool = True, *,
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
-                                         twin=opts["twin"])
+                                         twin=opts["twin"],
+                                         placement=opts.get("placement"))
     # fused/unfused pairs run INTERLEAVED rep blocks so machine-speed
     # drift between the two sides cancels out of the tracked ratio;
     # everything else runs its reps back to back.  peak_bytes needs no

@@ -22,6 +22,7 @@ from repro.core.engine import (  # noqa: F401
     make_dispatch_cohort,
     make_placement,
     make_round_body,
+    pad_cohort,
 )
 from repro.core.rounds import (  # noqa: F401
     SimConfig,

@@ -40,9 +40,9 @@ import numpy as np
 from repro.core.engine import (VmapPlacement, broadcast_client_store,
                                comm_round_keys, draw_cohort_batches,
                                gather_client_state, init_ef_store,
-                               make_dispatch_cohort, sample_cohort,
-                               scatter_client_rows, scatter_cohort_rows,
-                               split_round_rng)
+                               make_dispatch_cohort, pad_cohort,
+                               sample_cohort, scatter_client_rows,
+                               scatter_cohort_rows, split_round_rng)
 from repro.core.strategies import Strategy, tmap
 
 Pytree = Any
@@ -110,13 +110,16 @@ def staleness_weights(staleness, alpha: float) -> jax.Array:
 
 
 def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
-                     compressor=None):
+                     compressor=None, placement=None):
     """Async simulation state: the jax parts mirror ``init_sim_state``
     (same PRNG stream, same store layout via the shared helpers);
     scheduling bookkeeping lives host-side.  ``x`` is copied so the
     donating aggregate never invalidates caller-held params.  A stateful
     ``compressor`` adds the per-client error-feedback store ``ef``
-    (mirroring ``init_cohort_state``)."""
+    (mirroring ``init_cohort_state``).  A mesh ``placement`` lays the
+    jax-side stores out per ``MeshPlacement.state_specs`` (client/pms/ef
+    over the client axis, model replicated) -- the host-side scheduling
+    keys (slots/buffer/delays/counters) stay host-side."""
     x = tmap(jnp.copy, x)
     clients = broadcast_client_store(strategy.client_init(x),
                                      acfg.n_clients)
@@ -137,6 +140,11 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
     ef = init_ef_store(strategy, x, acfg.n_clients, compressor)
     if jax.tree.leaves(ef):
         state["ef"] = ef
+    if placement is not None:
+        placed = {k: state[k] for k in ("x", "clients", "pms", "server")}
+        if "ef" in state:
+            placed["ef"] = state["ef"]
+        state.update(placement.place_state(placed))
     return state
 
 
@@ -156,9 +164,13 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
 
     ``placement`` (engine.py) maps each dispatch cohort's tau-scans; the
     default vmap placement is the historical path.  A mesh placement
-    distributes each dispatch over the client axis -- note dispatch sizes
-    must then divide the axis, which heterogeneous delays rarely satisfy,
-    so mesh is practical here only for delay=0 full-buffer setups.
+    distributes each dispatch over the client axis -- cohort and buffer
+    sizes that do not divide the axis are padded with masked lanes
+    (edge-replicated for dispatch, zero-valued zero-WEIGHT for the
+    aggregation buffer; ``engine.pad_cohort``) -- and routes every
+    aggregation through ``MeshPlacement.aggregate_buffer``, so the
+    staleness-weighted mean lowers to ONE cross-client psum instead of
+    the host-side ``agg_weighted`` jit.
 
     ``compressor`` (repro.comm) compresses each finished client's upload;
     with ``acfg.bandwidth > 0`` the delivery time additionally pays
@@ -168,6 +180,7 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
     delivery, exactly like the client store."""
     n, tau, b = acfg.n_clients, acfg.tau, acfg.batch_size
     placement = placement or VmapPlacement()
+    mesh_placed = placement.name == "mesh"
     stateful = compressor is not None and compressor.stateful
     _donate = (lambda *a: functools.partial(jax.jit, donate_argnums=a)) \
         if donate else (lambda *a: jax.jit)
@@ -195,8 +208,11 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         the delay pattern produces).  Padding every dispatch to
         m_concurrent with masked lanes would cap this at one compile but
         costs wasted lane compute and complicates the bit-for-bit
-        degenerate-case guarantee, so the simulator keeps the honest
-        shapes."""
+        degenerate-case guarantee, so the vmap simulator keeps the
+        honest shapes.  (The mesh placement DOES pad -- to the next
+        multiple of the client axis, inside ``cohort_map`` -- because
+        there non-dividing shapes cannot run at all; that caps its
+        retraces at one per padded size.)"""
         return dispatch_cohort(*args)
 
     # the bandwidth model's per-upload wire bytes: static in the config
@@ -224,6 +240,25 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
     @_donate(0, 1)
     def agg_weighted(x, server, uploads, w):
         return strategy.aggregate(x, server, uploads, acfg.p, weights=w)
+
+    # mesh twins of the two aggregates: the same strategy.aggregate, but
+    # lowered through the placement so the (weighted) mean is the round's
+    # single cross-client psum.  p is derived from the PADDED buffer
+    # length (static per trace): padding lanes carry zero weight, so
+    # Scaffold's weight-normalized participation stays sum(w)/n whatever
+    # the padding -- and on the unweighted path no padding ever happens
+    # (it is only taken when pad == 0, see _aggregate).
+    @_donate(0, 1)
+    def agg_mesh_plain(x, server, uploads):
+        m = jax.tree.leaves(uploads)[0].shape[0]
+        return placement.aggregate_buffer(strategy, x, server, uploads,
+                                          m / n)
+
+    @_donate(0, 1)
+    def agg_mesh_weighted(x, server, uploads, w):
+        m = jax.tree.leaves(uploads)[0].shape[0]
+        return placement.aggregate_buffer(strategy, x, server, uploads,
+                                          m / n, weights=w)
 
     def _dispatch(state):
         """Fill free slots: sample idle clients, draw their batches, run
@@ -276,7 +311,25 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         uploads = tmap(lambda *ts: jnp.stack(ts),
                        *[item["upload"] for item in buf])
         stal = np.array([item["staleness"] for item in buf], np.float32)
-        if acfg.alpha == 0.0:
+        if mesh_placed:
+            uploads, m_real = pad_cohort(uploads, placement.axis_size,
+                                         mode="zero")
+            pad = jax.tree.leaves(uploads)[0].shape[0] - m_real
+            uploads = placement.place_uploads(uploads)
+            if acfg.alpha == 0.0 and pad == 0:
+                # uniform weights, no masking needed: the unweighted
+                # psum-mean path (mean-of-local-means pmean), which on a
+                # 1-device mesh is bit-identical to the vmap agg_plain
+                # (the sync degenerate pin, extended to the mesh)
+                x, server, agg_m = agg_mesh_plain(state["x"],
+                                                  state["server"], uploads)
+            else:
+                w = staleness_weights(stal, acfg.alpha)
+                if pad:
+                    w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+                x, server, agg_m = agg_mesh_weighted(
+                    state["x"], state["server"], uploads, w)
+        elif acfg.alpha == 0.0:
             # uniform weights: take the legacy path, bit-identical to sync
             x, server, agg_m = agg_plain(state["x"], state["server"],
                                          uploads)
@@ -356,7 +409,7 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
     # with representative shapes; the driver itself stays host-side
     async_round.jitted_parts = {
         "train_cohort": train_cohort,
-        "agg_plain": agg_plain,
-        "agg_weighted": agg_weighted,
+        "agg_plain": agg_mesh_plain if mesh_placed else agg_plain,
+        "agg_weighted": agg_mesh_weighted if mesh_placed else agg_weighted,
     }
     return async_round

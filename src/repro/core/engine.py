@@ -27,7 +27,9 @@ regimes execute the identical per-client body.
 Constraints of the mesh placement (checked at construction):
 
   * ``m_sampled`` must divide evenly over the client axis (each shard
-    trains ``m / axis_size`` cohort lanes);
+    trains ``m / axis_size`` cohort lanes); the async regime's
+    variable-size dispatch cohorts instead PAD to the next multiple with
+    masked lanes (``cohort_map``/``pad_cohort``), sliced away on exit;
   * the client *store* axis (``n_clients``) falls back to replicated when
     it does not divide the client axis (``sharding/rules.py`` semantics)
     -- the round still runs, only the store layout degrades.
@@ -243,20 +245,77 @@ class VmapPlacement:
 
 
 def _psum_mean_fn(axis: str, metrics_local: Dict[str, jax.Array],
-                  box: Dict) -> Callable:
+                  box: Dict, axis_size: int) -> Callable:
     """The mean ``strategy.aggregate`` lowers to psum under shard_map:
     mean over the local cohort lanes, then ONE ``pmean`` across the client
     axis.  The per-round metric scalars are bundled into the same psum so
     the whole round has exactly one cross-client collective; the reduced
     metrics come back through ``box`` (the aggregate's signature has no
-    metrics channel)."""
-    def mean_fn(tree: Pytree) -> Pytree:
-        local = tmap(lambda t: t.mean(0), tree)
-        reduced, box["metrics"] = jax.lax.pmean((local, metrics_local),
-                                                axis)
+    metrics channel).
+
+    ``weights`` (optional kwarg, the FULL cohort weight vector --
+    replicated, NOT sharded, across the client axis) lowers the
+    staleness-weighted mean into the same single collective.  Because
+    every shard holds the whole vector, the global weight sum, the
+    zero-weight-sum guard, and the normalization are shard-local
+    arithmetic (identical ops to ``strategies.tree_weighted_mean``, so
+    a 1-device mesh reproduces it bitwise); each shard then slices its
+    own lanes' normalized weights by ``axis_index``, contributes a
+    weighted partial sum, and ONE psum of (partials, metrics) finishes
+    the mean -- the weighted upload-sum and the (pre-normalized) weight
+    sum ride the same collective the uniform path already uses.
+    ``axis_size`` is passed statically: ``lax.axis_size`` spells as a
+    second psum on jax 0.4.x (compat.py), which would break the
+    one-collective contract."""
+    def mean_fn(tree: Pytree, weights=None) -> Pytree:
+        if weights is None:
+            local = tmap(lambda t: t.mean(0), tree)
+            reduced, box["metrics"] = jax.lax.pmean((local, metrics_local),
+                                                    axis)
+            return reduced
+        w = jnp.asarray(weights, jnp.float32)
+        s = w.sum()
+        safe = jnp.where(s > 0, s, 1.0)
+        wn = jnp.where(s > 0, w / safe, 1.0 / w.shape[0])
+        m_local = w.shape[0] // axis_size
+        start = jax.lax.axis_index(axis) * m_local
+        wn_i = jax.lax.dynamic_slice(wn, (start,), (m_local,))
+        part = tmap(lambda t: jnp.tensordot(wn_i, t.astype(jnp.float32),
+                                            axes=(0, 0)), tree)
+        reduced, msum = jax.lax.psum((part, metrics_local), axis)
+        box["metrics"] = {k: v / axis_size for k, v in msum.items()}
         return reduced
 
     return mean_fn
+
+
+def pad_cohort(tree: Pytree, k: int, mode: str = "edge"
+               ) -> Tuple[Pytree, int]:
+    """Pad every leaf's leading cohort axis up to the next multiple of
+    ``k`` (the client-axis size).  Returns ``(padded, n_real)``.
+
+    ``mode='edge'`` repeats the last real lane -- dispatch padding, where
+    the masked lanes must run real finite math through the tau-scan (their
+    outputs are sliced away, and there is no collective on the dispatch
+    path for garbage to leak through).  ``mode='zero'`` appends zero
+    lanes -- aggregation padding, where the lanes carry zero WEIGHT and
+    zero-valued uploads keep the masked products finite (0 * 0)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree, 0
+    f = leaves[0].shape[0]
+    pad = (-f) % k
+    if pad == 0:
+        return tree, f
+
+    def one(t):
+        if mode == "edge":
+            fill = jnp.broadcast_to(t[-1:], (pad,) + t.shape[1:])
+        else:
+            fill = jnp.zeros((pad,) + t.shape[1:], t.dtype)
+        return jnp.concatenate([t, fill.astype(t.dtype)], axis=0)
+
+    return tmap(one, tree), f
 
 
 @dataclass(frozen=True)
@@ -331,29 +390,42 @@ class MeshPlacement:
     def cohort_map(self, fn, in_axes) -> Callable:
         """Map ``fn`` over a cohort axis distributed over the client axis
         (no collective: the async dispatch path).  ``in_axes`` follows
-        vmap conventions restricted to 0 | None."""
+        vmap conventions restricted to 0 | None.
+
+        Cohort sizes that do not divide the client axis are PADDED up to
+        the next multiple with masked lanes (the last real lane repeated
+        -- ``pad_cohort(mode='edge')``) and every output's leading axis
+        is sliced back to the real size, so the padding is invisible to
+        callers.  This is what lets the async regime's variable-size
+        refill dispatches run on a mesh (they rarely divide the axis
+        under heterogeneous delays); as a side effect it also caps
+        retracing at one compile per padded size (multiples of the axis)
+        instead of one per distinct cohort size."""
         axis = self.client_axis
         k = self.axis_size
         specs = tuple(P(axis) if a == 0 else P() for a in in_axes)
 
         def mapped(*args):
+            f = None
             for a, arg in zip(in_axes, args):
                 leaves = jax.tree.leaves(arg)
-                if a == 0 and leaves and leaves[0].shape[0] % k:
-                    # fail fast with the placement's own message instead
-                    # of a deep shard_map dimension error (async dispatch
-                    # cohorts vary in size; see make_async_round_fn)
-                    raise ValueError(
-                        f"mesh placement: cohort size "
-                        f"{leaves[0].shape[0]} must divide evenly over "
-                        f"the client axis {axis!r} (size {k})")
+                if a == 0 and leaves:
+                    f = leaves[0].shape[0]
+                    break
+            pad = 0 if f is None else (-f) % k
+            if pad:
+                args = tuple(pad_cohort(arg, k)[0] if a == 0 else arg
+                             for a, arg in zip(in_axes, args))
 
             def body(*shard_args):
                 local_axes = tuple(0 if a == 0 else None for a in in_axes)
                 return jax.vmap(fn, in_axes=local_axes)(*shard_args)
 
-            return shard_map(body, mesh=self.mesh, in_specs=specs,
-                             out_specs=P(axis))(*args)
+            out = shard_map(body, mesh=self.mesh, in_specs=specs,
+                            out_specs=P(axis))(*args)
+            if pad:
+                out = tmap(lambda t: t[:f], out)
+            return out
 
         return mapped
 
@@ -366,7 +438,8 @@ class MeshPlacement:
         box: Dict = {}
         x2, server2, agg_metrics = strategy.aggregate(
             x, server, uploads, p,
-            mean_fn=_psum_mean_fn(axis, metrics_local, box))
+            mean_fn=_psum_mean_fn(axis, metrics_local, box,
+                                  self.axis_size))
         # a strategy that never called mean_fn still needs its metric
         # scalars reduced (costs a second, scalar-sized collective)
         metrics_global = box.get("metrics")
@@ -375,6 +448,52 @@ class MeshPlacement:
         metrics_global = dict(metrics_global)
         metrics_global.update(agg_metrics)
         return x2, server2, metrics_global
+
+    def place_uploads(self, uploads: Pytree) -> Pytree:
+        """Lay a stacked upload buffer out over the client axis
+        (``sharding/rules.upload_stack_specs``) before handing it to
+        ``aggregate_buffer``: the host-side ``jnp.stack`` otherwise
+        commits every lane to one device and the shard_map entry pays a
+        scatter it could have amortized into the transfer."""
+        from repro.sharding.rules import upload_stack_specs
+        return jax.tree.map(jax.device_put, uploads, upload_stack_specs(
+            uploads, self.mesh, client=self.client_axis,
+            model=self.roles.model, fsdp=self.roles.fsdp))
+
+    def aggregate_buffer(self, strategy: Strategy, x, server, uploads,
+                         p: float, weights=None):
+        """One buffered aggregation lowered to a single cross-client
+        psum: the async regime's (staleness-weighted) aggregate on the
+        mesh.  ``uploads`` is an (m, ...) stack with m a multiple of the
+        client axis -- callers pad short buffers with zero-valued,
+        zero-WEIGHT lanes (``pad_cohort(mode='zero')``) and pass ``p``
+        consistent with the padded m (the zero weights make the padding
+        massless; see ``Scaffold.aggregate``).  ``weights`` is the FULL
+        (m,) weight vector, deliberately replicated (in_spec ``P()``) so
+        every shard normalizes and zero-sum-guards it locally without a
+        second collective (``_psum_mean_fn``).  Returns
+        ``(x, server, agg_metrics)``."""
+        axis = self.client_axis
+        c = P(axis)
+        box: Dict = {}
+        mean_fn = _psum_mean_fn(axis, {}, box, self.axis_size)
+
+        if weights is None:
+            def body(x, server, uploads):
+                return strategy.aggregate(x, server, uploads, p,
+                                          mean_fn=mean_fn)
+
+            return shard_map(body, mesh=self.mesh, in_specs=(P(), P(), c),
+                             out_specs=(P(), P(), P()))(x, server, uploads)
+
+        def body_w(x, server, uploads, w):
+            return strategy.aggregate(x, server, uploads, p, weights=w,
+                                      mean_fn=mean_fn)
+
+        return shard_map(body_w, mesh=self.mesh,
+                         in_specs=(P(), P(), c, P()),
+                         out_specs=(P(), P(), P()))(x, server, uploads,
+                                                    weights)
 
     def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
                 grad_fn, p: float, compressor=None, ef=None, keys=None):

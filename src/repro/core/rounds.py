@@ -160,9 +160,15 @@ def make_global_eval(apply_loss_fn, test_data, batch: int = 512):
 
     The split is reshaped to (n_batches, batch, ...) once and scanned, so
     compile time is independent of ``n_total // batch`` (the old Python-
-    unrolled loop re-traced the loss once per batch).  Same batches as
-    before: trailing remainder dropped, whole split in one batch when
-    n_total < batch."""
+    unrolled loop re-traced the loss once per batch).  Every held-out
+    sample is scored: the trailing ``n_total % batch`` rows -- which the
+    old reshape silently DROPPED -- run through one extra fixed-shape
+    call on the exact tail, and the two are combined by sample-count
+    weighting, so the result is the mean over the full split.  (The loss
+    fn only returns per-batch means, so a padded-and-masked tail batch
+    cannot be reweighted exactly from outside -- the separate tail call
+    is the masking, with the count weighting as the mask.)  Splits that
+    divide evenly keep the historical batch-mean-of-means bitwise."""
     n_total = jax.tree.leaves(test_data)[0].shape[0]
     if n_total == 0:
         raise ValueError("make_global_eval: empty eval split (the old "
@@ -170,8 +176,10 @@ def make_global_eval(apply_loss_fn, test_data, batch: int = 512):
                          "call time)")
     b = min(batch, n_total)
     n_batches = max(1, n_total // b)
+    rem = n_total - n_batches * b
     stacked = tmap(lambda t: t[:n_batches * b]
                    .reshape((n_batches, b) + t.shape[1:]), test_data)
+    tail = tmap(lambda t: t[n_batches * b:], test_data) if rem else None
 
     @jax.jit
     def eval_x(x):
@@ -180,7 +188,12 @@ def make_global_eval(apply_loss_fn, test_data, batch: int = 512):
             return _, (loss, m["acc"])
 
         _, (losses, accs) = jax.lax.scan(body, None, stacked)
-        return losses.mean(), accs.mean()
+        if not rem:
+            return losses.mean(), accs.mean()
+        tail_loss, tail_m = apply_loss_fn(x, tail)
+        loss = (losses.sum() * b + tail_loss * rem) / n_total
+        acc = (accs.sum() * b + tail_m["acc"] * rem) / n_total
+        return loss, acc
 
     def eval_fn(state):
         loss, acc = eval_x(state["x"])

@@ -27,11 +27,15 @@ Protocol (all pytrees are params-shaped unless noted):
                       tree mean over the cohort axis wholesale -- the
                       mesh placement passes the mean that lowers to the
                       round's single cross-client ``psum`` under
-                      shard_map.  Contract: an aggregate calls ``mean_fn``
-                      EXACTLY ONCE on one tree containing every upload
-                      leaf (Scaffold means its whole {dv, dc} dict in one
-                      call), so one round = one collective.  Overrides
-                      must accept both kwargs.
+                      shard_map.  The two compose: when both are given,
+                      ``mean_fn(tree, weights=w)`` must lower the
+                      weighted mean into that same collective
+                      (``engine._psum_mean_fn`` does).  Contract: an
+                      aggregate calls ``mean_fn`` EXACTLY ONCE on one
+                      tree containing every upload leaf (Scaffold means
+                      its whole {dv, dc} dict in one call), so one round
+                      = one collective.  Overrides must accept both
+                      kwargs.
 
 ``grad_fn(params, minibatch) -> (loss, grads)``.
 """
@@ -82,15 +86,16 @@ def resolve_mean(mean_fn, weights):
     """The cohort mean an ``aggregate`` reduces its uploads with: the
     caller-supplied ``mean_fn`` when given (the mesh placement's
     psum-lowering mean), else the plain / staleness-weighted tree mean.
-    The two knobs are mutually exclusive -- the mesh placement's mean is
-    uniform, so silently dropping ``weights`` would turn a staleness-
-    discounted aggregation into a uniform one."""
+    The two knobs COMPOSE: a ``mean_fn`` must accept an optional
+    ``weights`` kwarg and lower the weighted mean into its own collective
+    (``engine._psum_mean_fn`` rides the weighted partial sums on the
+    round's single psum), so staleness-discounted aggregation stays a
+    one-collective round on the mesh.  ``mean_fn`` without ``weights``
+    is called with no kwarg at all -- the uniform mesh path stays
+    bit-for-bit what it was."""
     if mean_fn is not None:
         if weights is not None:
-            raise ValueError(
-                "aggregate: mean_fn and weights are mutually exclusive "
-                "(the placement-supplied mean is uniform; weighted "
-                "mesh aggregation is not implemented)")
+            return lambda tree: mean_fn(tree, weights=weights)
         return mean_fn
     if weights is None:
         return tree_mean0
@@ -276,8 +281,27 @@ class Scaffold(Strategy):
         d = resolve_mean(mean_fn, weights)(uploads)
         dv, dc = d["dv"], d["dc"]
         x = _axpy(self.server_lr, dv, x)
-        # c += (m/n) mean(dc); doubles the uplink (the paper's 2x overhead)
-        c = _axpy(p, dc, server_state["c"])
+        # c += p_eff * mean(dc); doubles the uplink (the paper's 2x
+        # overhead).  Uniform participation: p_eff = p = m/n, today's
+        # path bit-for-bit.  Weighted (staleness-discounted) mean: the
+        # weighted mean(dc) is sum_i w_i dc_i / sum_i w_i, so scaling by
+        # the raw p would credit the server c with full m/n mass even
+        # when every upload was discounted (or masked to zero -- the
+        # mesh path's zero-weight padding lanes).  The weight-normalized
+        # participation p_eff = p * sum(w)/m makes the c-update
+        # sum_i w_i dc_i / n: each upload contributes exactly its
+        # discounted share, padding lanes contribute nothing.  The
+        # all-zero-weight guard mirrors tree_weighted_mean's: fall back
+        # to the uniform p rather than zeroing the update the uniform
+        # mean just computed.
+        if weights is None:
+            p_eff = p
+        else:
+            w = jnp.asarray(weights, jnp.float32)
+            m = w.shape[0]
+            s = w.sum()
+            p_eff = p * jnp.where(s > 0, s, float(m)) / m
+        c = _axpy(p_eff, dc, server_state["c"])
         return x, {"c": c}, {}
 
 

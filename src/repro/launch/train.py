@@ -9,7 +9,12 @@ aggregation); on TPU hardware it runs unmodified with the production mesh.
 
 ``--regime async`` swaps the synchronous round loop for the buffered
 asynchronous regime (core/async_rounds.py): clients draw heterogeneous
-delays, the server aggregates staleness-discounted buffers:
+delays, the server aggregates staleness-discounted buffers.  Adding
+``--placement mesh`` distributes the dispatch cohorts over the client
+axis (non-dividing sizes are padded with masked lanes) and lowers each
+staleness-weighted aggregate to the round's single cross-client psum;
+resumed runs (``--ckpt-dir``) restore the simulated clock and model
+version from the checkpoint metadata, so sim_time never jumps backward:
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --regime async --clients 8 --concurrent 4 --buffer 2 \
@@ -97,29 +102,38 @@ def _ckpt_tree(s):
             s.get("ef", {}))
 
 
-def _restore_state(state, args) -> int:
+def _restore_state(state, args):
     """Load the latest checkpoint (if any) into ``state`` in place;
-    returns the round to resume from.  Counter keys are the caller's job:
-    the shared tree carries only what ``_ckpt_tree`` names."""
+    returns ``(resume_round, meta)``.  Counter keys are the caller's job:
+    the shared tree carries only what ``_ckpt_tree`` names, and any
+    regime-specific counters (the async clock/version) travel in the
+    checkpoint's metadata dict."""
     if not args.ckpt_dir:
-        return 0
+        return 0, {}
     path = latest_checkpoint(args.ckpt_dir)
     if not path:
-        return 0
+        return 0, {}
     tree, meta = restore_checkpoint(path, _ckpt_tree(state))
     (state["x"], state["clients"], state["pms"], state["server"],
      state["rng"], ef) = tree
     if jax.tree.leaves(ef):
         state["ef"] = ef
     print(f"restored round {meta['step']} from {path}")
-    return meta["step"]
+    return meta["step"], meta
 
 
-def _drive_rounds(state, round_fn, args, start: int, rec_extra=None):
+def _drive_rounds(state, round_fn, args, start: int, rec_extra=None,
+                  meta_fn=None):
     """The shared round loop: JSON line per round, periodic + final
     checkpoints.  One copy so every regime inherits identical restore/
-    save/print semantics."""
+    save/print semantics.  ``meta_fn(state) -> dict`` supplies extra
+    checkpoint metadata (the async regime's simulated clock/version)."""
     t0 = time.time()
+
+    def _save(step):
+        save_checkpoint(args.ckpt_dir, step, _ckpt_tree(state),
+                        metadata=meta_fn(state) if meta_fn else None)
+
     for k in range(start, args.rounds):
         state, metrics = round_fn(state)
         rec = {"round": k + 1, **(rec_extra or {}),
@@ -127,9 +141,9 @@ def _drive_rounds(state, round_fn, args, start: int, rec_extra=None):
                "elapsed_s": round(time.time() - t0, 2)}
         print(json.dumps(rec), flush=True)
         if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, k + 1, _ckpt_tree(state))
+            _save(k + 1)
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.rounds, _ckpt_tree(state))
+        _save(args.rounds)
     return 0
 
 
@@ -138,31 +152,41 @@ def run_async(cfg, strategy, args):
     global model, staleness-discounted aggregation."""
     _require_token_arch(cfg, args.arch, "--regime async")
     compressor = make_compressor(args.compress)
+    placement = make_placement(args.placement) if args.placement else None
     acfg = AsyncSimConfig(
         n_clients=args.clients, m_concurrent=args.concurrent,
         buffer_size=args.buffer, tau=args.tau, batch_size=args.batch,
         alpha=args.alpha, delay=args.delay, delay_dist=args.delay_dist,
-        seed=args.seed, bandwidth=args.bandwidth)
+        delay_sigma=args.delay_sigma, seed=args.seed,
+        bandwidth=args.bandwidth)
     data = {k: jnp.asarray(v) for k, v in make_federated_lm(
         vocab=cfg.vocab_size, n_clients=args.clients,
         per_client=args.per_client, seq_len=args.seq,
         seed=args.seed).items()}
     grad_fn = make_lm_grad_fn(cfg)
     x = init_model(cfg, jax.random.PRNGKey(args.seed))
-    state = init_async_state(acfg, strategy, x, compressor=compressor)
+    state = init_async_state(acfg, strategy, x, compressor=compressor,
+                             placement=placement)
     round_fn = make_async_round_fn(acfg, strategy, grad_fn, data,
-                                   compressor=compressor)
+                                   compressor=compressor,
+                                   placement=placement)
 
     # checkpoints land at aggregation boundaries; in-flight slots/buffer
-    # are dropped, so a restart redispatches (the staleness clock
-    # restarts too -- same semantics as clients rejoining)
-    start = _restore_state(state, args)
-    state["round"] = state["version"] = start
+    # are dropped, so a restart redispatches -- but the simulated clock
+    # and model version persist in the checkpoint metadata: sim_time and
+    # the staleness reference never jump backward across restarts
+    start, meta = _restore_state(state, args)
+    state["round"] = start
+    state["version"] = int(meta.get("version", start))
+    state["t"] = float(meta.get("t", 0.0))
     return _drive_rounds(
         state, round_fn, args, start,
         rec_extra={"compress": args.compress,
+                   "placement": args.placement or "vmap",
                    "uplink_bytes_per_round": uplink_bytes_per_round(
-                       compressor, strategy, x, acfg.buffer_size)})
+                       compressor, strategy, x, acfg.buffer_size)},
+        meta_fn=lambda s: {"t": float(s["t"]),
+                           "version": int(s["version"])})
 
 
 def _make_lm_eval(cfg, args):
@@ -213,7 +237,7 @@ def run_engine(cfg, strategy, args):
                   "uplink_bytes_per_round": uplink_bytes_per_round(
                       compressor, strategy, x, m)}
 
-    start = _restore_state(state, args)
+    start, _ = _restore_state(state, args)
     if start:
         state["round"] = jnp.asarray(start, jnp.int32)
         # restored arrays are host-loaded: re-place on the mesh
@@ -283,9 +307,14 @@ def main(argv=None):
     # cohort-engine placement (core/engine.py); None = legacy fixed-cohort
     # datacenter step
     ap.add_argument("--placement", default=None, choices=("vmap", "mesh"),
-                    help="sync regime through the cohort engine: 'vmap' "
+                    help="cohort placement (core/engine.py): 'vmap' "
                          "single-device, 'mesh' cohort + stores over the "
-                         "client axis of all local devices")
+                         "client axis of all local devices.  Sync regime: "
+                         "routes through the cohort engine instead of the "
+                         "legacy fixed-cohort step.  --regime async: "
+                         "'mesh' pads dispatch cohorts onto the client "
+                         "axis and lowers the staleness-weighted "
+                         "aggregate to one psum")
     ap.add_argument("--sampled", type=int, default=None,
                     help="engine placement: clients sampled per round "
                          "(default: all; mesh needs it divisible by the "
@@ -305,6 +334,10 @@ def main(argv=None):
                     help="async: mean client delay (0 = no stragglers)")
     ap.add_argument("--delay-dist", default="lognormal",
                     choices=("constant", "uniform", "lognormal"))
+    ap.add_argument("--delay-sigma", type=float, default=1.0,
+                    help="async: lognormal delay shape (straggler "
+                         "heaviness); only used with "
+                         "--delay-dist lognormal")
     ap.add_argument("--per-client", type=int, default=64,
                     help="async/--placement: LM sequences materialized "
                          "per client")
@@ -341,11 +374,12 @@ def main(argv=None):
                          "--placement {vmap,mesh} or --regime async "
                          "(the legacy fixed-cohort datacenter step has "
                          "no uplink seam)")
+    if args.bandwidth and args.regime != "async":
+        raise SystemExit("--bandwidth prices the simulated async uplink "
+                         "queue: pass --regime async (the synchronous "
+                         "regimes have no simulated clock; previously "
+                         "the flag was silently ignored)")
     if args.regime == "async":
-        if args.placement:
-            raise SystemExit("--placement applies to the synchronous "
-                             "regime (async dispatch cohorts vary in "
-                             "size; see core/async_rounds.py)")
         return run_async(cfg, strategy, args)
     if args.placement:
         return run_engine(cfg, strategy, args)

@@ -149,6 +149,20 @@ def param_specs(shapes: Pytree, mesh: Mesh, *, model: str = "model",
     return jax.tree_util.tree_unflatten(treedef, [s for s in out])
 
 
+def upload_stack_specs(uploads: Pytree, mesh: Mesh, *, client: str,
+                       model: str = "model",
+                       fsdp: Optional[str] = None) -> Pytree:
+    """NamedSharding pytree for a stacked upload buffer (leading m dim):
+    the async-on-mesh aggregation operand layout.  The buffer axis takes
+    the client axis when m divides it -- on the mesh async path callers
+    pad the buffer to a multiple of the axis (``engine.pad_cohort``), so
+    it always does there -- with the same replicated fallback and
+    trailing-dim rules as the client/pms stores (``client_store_pspec``):
+    one rule set, three consumers."""
+    return param_specs(uploads, mesh, model=model, fsdp=fsdp,
+                       client=client)
+
+
 def sim_state_specs(state: Pytree, mesh: Mesh, *, client: str,
                     model: str = "model",
                     fsdp: Optional[str] = None) -> Pytree:

@@ -1,0 +1,332 @@
+"""Async-on-mesh aggregation: staleness discounts composed with the mesh
+psum.  The staleness-weighted buffered aggregate must lower to exactly ONE
+cross-client collective (``engine._psum_mean_fn``'s weighted path), match
+the host-side ``tree_weighted_mean`` reference (bitwise on a 1-device
+mesh, documented f32 tolerance on 4 devices), keep the zero-weight-sum
+guard, and pad non-dividing buffers/dispatches with massless lanes
+(DESIGN.md §9)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (AsyncSimConfig, FedAvg, FedDeper, MeshPlacement,
+                        Scaffold, init_async_state, make_async_round_fn,
+                        pad_cohort, run_rounds)
+from repro.data import make_federated_classification
+from repro.launch.mesh import make_client_mesh
+from repro.models import classifier_loss, init_classifier
+
+CFG = MLP_MNIST
+
+
+def apply_loss(p, b):
+    return classifier_loss(CFG, p, b)
+
+
+def grad_fn(p, mb):
+    (l, _), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(7))
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = make_federated_classification(n_clients=8, per_client=64,
+                                       split="shards", seed=1)
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+def _rand_uploads(strategy, x, m, seed):
+    """An (m, ...) upload stack shaped like ``strategy.upload_template``
+    (Scaffold's doubles to {dv, dc})."""
+    tmpl = strategy.upload_template(x)
+    leaves, treedef = jax.tree.flatten(tmpl)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(treedef, [
+        jax.random.normal(k, (m,) + tuple(l.shape)).astype(l.dtype)
+        for k, l in zip(keys, leaves)])
+
+
+COLLECTIVES = {"psum", "psum2", "all_gather", "all_to_all", "ppermute",
+               "pmax", "pmin"}
+
+
+def count_collectives(jaxpr) -> int:
+    """Recursively count collective primitives in a (closed) jaxpr
+    (same recursion as test_engine_placement: shard_map params hold raw
+    ``Jaxpr`` objects, hence the ``eqns`` check first)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVES:
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "eqns"):
+                n += count_collectives(v)
+            elif hasattr(v, "jaxpr"):
+                n += count_collectives(v.jaxpr)
+    return n
+
+
+STRATS = [FedDeper(eta=0.05, rho=0.03, lam=0.5), FedAvg(eta=0.05),
+          Scaffold(eta=0.05)]
+W8 = jnp.asarray([1.0, 0.25, 0.5, 1.0, 0.125, 0.7, 0.3, 1.0])
+
+
+@pytest.mark.parametrize("strategy", STRATS,
+                         ids=[s.name for s in STRATS])
+def test_weighted_aggregate_buffer_bitwise_on_1device_mesh(strategy, x0):
+    """On a 1-device mesh the psum-lowered weighted mean runs the exact
+    ops of ``tree_weighted_mean`` (full-vector normalization, full-width
+    slice, tensordot, size-1 psum), so the mesh aggregate is the host
+    aggregate bitwise -- including Scaffold's weight-normalized c-update."""
+    pl = MeshPlacement(make_client_mesh())
+    ups = _rand_uploads(strategy, x0, 8, seed=3)
+    xh, sh, _ = strategy.aggregate(x0, strategy.server_init(x0), ups,
+                                   8 / 16, weights=W8)
+    xm, sm, _ = pl.aggregate_buffer(strategy, x0, strategy.server_init(x0),
+                                    pl.place_uploads(ups), 8 / 16,
+                                    weights=W8)
+    for a, b in zip(jax.tree.leaves((xh, sh)), jax.tree.leaves((xm, sm))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=strategy.name)
+
+
+@pytest.mark.parametrize("strategy", [STRATS[0], STRATS[2]],
+                         ids=["feddeper", "scaffold"])
+def test_zero_weight_sum_guard_on_mesh(strategy, x0):
+    """All-zero weights (every upload fully discounted) fall back to the
+    uniform mean on the mesh exactly like ``tree_weighted_mean``'s guard
+    -- no division by zero, and bitwise the same fallback as the host."""
+    pl = MeshPlacement(make_client_mesh())
+    ups = _rand_uploads(strategy, x0, 8, seed=4)
+    w0 = jnp.zeros(8)
+    xh, sh, _ = strategy.aggregate(x0, strategy.server_init(x0), ups,
+                                   8 / 16, weights=w0)
+    xm, sm, _ = pl.aggregate_buffer(strategy, x0, strategy.server_init(x0),
+                                    pl.place_uploads(ups), 8 / 16,
+                                    weights=w0)
+    for a, b in zip(jax.tree.leaves((xh, sh)), jax.tree.leaves((xm, sm))):
+        assert np.all(np.isfinite(np.asarray(b)))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=strategy.name)
+    # ... and the fallback really is the uniform mean (not zero)
+    xu, _, _ = strategy.aggregate(x0, strategy.server_init(x0), ups, 8 / 16)
+    for a, b in zip(jax.tree.leaves(xu), jax.tree.leaves(xm)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", [STRATS[0], STRATS[2]],
+                         ids=["feddeper", "scaffold"])
+def test_weighted_aggregate_has_exactly_one_collective(strategy, x0):
+    """The weighted upload-sum and the weight normalization ride the SAME
+    psum the uniform path uses: one collective per aggregation, for the
+    single-upload strategies AND Scaffold's {dv, dc} double payload."""
+    pl = MeshPlacement(make_client_mesh())
+    ups = _rand_uploads(strategy, x0, 8, seed=5)
+    jx = jax.make_jaxpr(
+        lambda x, s, u, w: pl.aggregate_buffer(strategy, x, s, u, 0.5,
+                                               weights=w))(
+        x0, strategy.server_init(x0), ups, W8)
+    assert count_collectives(jx.jaxpr) == 1
+
+
+def test_pad_cohort_modes():
+    tree = {"a": jnp.arange(12.0).reshape(6, 2), "b": jnp.arange(6.0)}
+    padded, n_real = pad_cohort(tree, 4, mode="edge")
+    assert n_real == 6
+    assert padded["a"].shape == (8, 2) and padded["b"].shape == (8,)
+    np.testing.assert_array_equal(np.asarray(padded["a"][6:]),
+                                  np.broadcast_to(np.asarray(tree["a"][-1]),
+                                                  (2, 2)))
+    zeroed, _ = pad_cohort(tree, 4, mode="zero")
+    np.testing.assert_array_equal(np.asarray(zeroed["b"][6:]), np.zeros(2))
+    np.testing.assert_array_equal(np.asarray(zeroed["a"][:6]),
+                                  np.asarray(tree["a"]))
+    same, n = pad_cohort(tree, 3, mode="edge")  # 6 % 3 == 0: identity
+    assert n == 6 and same["a"] is tree["a"]
+    empty, n = pad_cohort({}, 4)
+    assert n == 0 and empty == {}
+
+
+def test_async_mesh_weighted_straggler_matches_vmap_1device(data, x0):
+    """Full async regime with real staleness discounts (alpha>0, lognormal
+    stragglers) on a 1-device mesh: host scheduling is shared and the
+    dispatch shard_map wraps the same vmap body, so the mesh trajectory
+    tracks the vmap trajectory at f32 tolerance.  (Not bitwise: XLA's jit
+    of the HOST ``agg_weighted`` reassociates the odd-m tensordot away
+    from its own eager math by ~1e-9 per round -- the mesh aggregate
+    reproduces the eager ``tree_weighted_mean`` exactly, which is the
+    bitwise pin the aggregate-level tests above hold.)"""
+    acfg = AsyncSimConfig(n_clients=8, m_concurrent=4, buffer_size=3,
+                          tau=2, batch_size=8, alpha=0.5, delay=4.0,
+                          delay_dist="lognormal", seed=5)
+    strat = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    pl = MeshPlacement(make_client_mesh())
+    sv, hv = run_rounds(init_async_state(acfg, strat, x0),
+                        make_async_round_fn(acfg, strat, grad_fn, data), 4)
+    sm, hm = run_rounds(
+        init_async_state(acfg, strat, x0, placement=pl),
+        make_async_round_fn(acfg, strat, grad_fn, data, placement=pl), 4)
+    for key in ("x", "clients", "pms"):
+        for a, b in zip(jax.tree.leaves(sv[key]),
+                        jax.tree.leaves(sm[key])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=1e-6, err_msg=key)
+    for rv, rm in zip(hv, hm):
+        assert set(rv) == set(rm)
+        assert rv["version"] == rm["version"]
+        assert rv["sim_time"] == rm["sim_time"]
+        for k in rv:
+            np.testing.assert_allclose(rv[k], rm[k], rtol=1e-5, atol=1e-5,
+                                       err_msg=k)
+
+
+# ------------------------------------------------- 4-device CPU emulation
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.paper_models import MLP_MNIST
+    from repro.core import (AsyncSimConfig, FedAvg, FedDeper, Scaffold,
+                            MeshPlacement, init_async_state,
+                            make_async_round_fn, pad_cohort, run_rounds)
+    from repro.data import make_federated_classification
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import classifier_loss, init_classifier
+
+    assert jax.local_device_count() == 4
+    pl = MeshPlacement(make_client_mesh())
+    assert pl.axis_size == 4
+    x0 = init_classifier(MLP_MNIST, jax.random.PRNGKey(7))
+
+    def rand_uploads(strategy, m, seed):
+        tmpl = strategy.upload_template(x0)
+        leaves, treedef = jax.tree.flatten(tmpl)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        return jax.tree.unflatten(treedef, [
+            jax.random.normal(k, (m,) + tuple(l.shape)).astype(l.dtype)
+            for k, l in zip(keys, leaves)])
+
+    # 1) cohort_map pads non-dividing cohorts (6 lanes on a 4-way axis)
+    #    with masked edge lanes and slices them back: identity to callers
+    a6 = jnp.arange(18.0).reshape(6, 3)
+    out = pl.cohort_map(lambda a: a * 2.0, in_axes=(0,))(a6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a6) * 2.0)
+
+    # 2) weighted aggregate_buffer == host aggregate (f32 psum tolerance)
+    w8 = jnp.asarray([1.0, 0.25, 0.5, 1.0, 0.125, 0.7, 0.3, 1.0])
+    for strat in (FedDeper(eta=0.05, rho=0.03, lam=0.5), FedAvg(eta=0.05),
+                  Scaffold(eta=0.05)):
+        ups = rand_uploads(strat, 8, seed=3)
+        xh, sh, _ = strat.aggregate(x0, strat.server_init(x0), ups,
+                                    8 / 16, weights=w8)
+        xm, sm, _ = pl.aggregate_buffer(strat, x0, strat.server_init(x0),
+                                        pl.place_uploads(ups), 8 / 16,
+                                        weights=w8)
+        for a, b in zip(jax.tree.leaves((xh, sh)),
+                        jax.tree.leaves((xm, sm))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=1e-6,
+                                       err_msg=strat.name)
+
+    # 2b) massless padding: 6 real uploads zero-padded to 8 with zero
+    #     weights == the unpadded host aggregate (Scaffold's weight-
+    #     normalized p_eff makes the c-update padding-invariant: the host
+    #     gets p = 6/n, the mesh p = 8/n, both resolve to sum(w)/n)
+    w6 = jnp.asarray([1.0, 0.5, 0.25, 0.8, 0.4, 1.0])
+    for strat in (FedAvg(eta=0.05), Scaffold(eta=0.05)):
+        ups6 = rand_uploads(strat, 6, seed=4)
+        xh, sh, _ = strat.aggregate(x0, strat.server_init(x0), ups6,
+                                    6 / 16, weights=w6)
+        ups8, m_real = pad_cohort(ups6, 4, mode="zero")
+        assert m_real == 6 and jax.tree.leaves(ups8)[0].shape[0] == 8
+        w = jnp.concatenate([w6, jnp.zeros(2)])
+        xm, sm, _ = pl.aggregate_buffer(strat, x0, strat.server_init(x0),
+                                        pl.place_uploads(ups8), 8 / 16,
+                                        weights=w)
+        for a, b in zip(jax.tree.leaves((xh, sh)),
+                        jax.tree.leaves((xm, sm))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=1e-6,
+                                       err_msg="padded/" + strat.name)
+
+    # 3) exactly ONE cross-client collective per weighted aggregation
+    names = {"psum", "psum2", "all_gather", "all_to_all", "ppermute",
+             "pmax", "pmin"}
+    def count(jx):
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name in names:
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "eqns"):
+                    n += count(v)
+                elif hasattr(v, "jaxpr"):
+                    n += count(v.jaxpr)
+        return n
+    for strat in (FedDeper(eta=0.05, rho=0.03, lam=0.5),
+                  Scaffold(eta=0.05)):
+        ups = rand_uploads(strat, 8, seed=5)
+        jx = jax.make_jaxpr(
+            lambda x, s, u, w: pl.aggregate_buffer(strat, x, s, u, 0.5,
+                                                   weights=w))(
+            x0, strat.server_init(x0), ups, w8)
+        assert count(jx.jaxpr) == 1, (strat.name, count(jx.jaxpr))
+
+    # 4) end-to-end: heavy-tailed stragglers, alpha=0.5, buffer_size=3
+    #    (never divides the 4-way axis -> every aggregation pads) -- the
+    #    mesh trajectory matches the vmap trajectory at f32 tolerance
+    ds = make_federated_classification(n_clients=8, per_client=64,
+                                       split="shards", seed=1)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(
+            lambda p, b: classifier_loss(MLP_MNIST, p, b),
+            has_aux=True)(p, mb)
+        return l, g
+    acfg = AsyncSimConfig(n_clients=8, m_concurrent=4, buffer_size=3,
+                          tau=2, batch_size=8, alpha=0.5, delay=4.0,
+                          delay_dist="lognormal", seed=5)
+    strat = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    sv, hv = run_rounds(init_async_state(acfg, strat, x0),
+                        make_async_round_fn(acfg, strat, grad_fn, data), 4)
+    sm, hm = run_rounds(
+        init_async_state(acfg, strat, x0, placement=pl),
+        make_async_round_fn(acfg, strat, grad_fn, data, placement=pl), 4)
+    for key in ("x", "clients", "pms"):
+        for a, b in zip(jax.tree.leaves(sv[key]),
+                        jax.tree.leaves(sm[key])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=1e-6, err_msg=key)
+    for rv, rm in zip(hv, hm):
+        assert rv["version"] == rm["version"]
+        assert rv["sim_time"] == rm["sim_time"]
+        np.testing.assert_allclose(rv["staleness_mean"],
+                                   rm["staleness_mean"], rtol=0, atol=0)
+
+    print("ASYNC_MESH_4DEV_OK")
+""")
+
+
+def test_async_mesh_4device_emulation():
+    """4-way client axis: cohort_map padding identity, weighted aggregate
+    vs host reference (plain and zero-padded), one collective per
+    weighted aggregation, and the straggler async regime mesh-vs-vmap."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True,
+                         env=_SUBPROC_ENV, timeout=560)
+    assert "ASYNC_MESH_4DEV_OK" in out.stdout, (out.stdout[-1000:],
+                                                out.stderr[-3000:])

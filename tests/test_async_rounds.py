@@ -65,6 +65,40 @@ def test_degenerate_async_equals_sync_bitwise(strategy, data, x0):
                                           err_msg=f"{strategy.name}:{key}")
 
 
+@pytest.mark.parametrize("strategy", [
+    FedAvg(eta=0.05),
+    FedDeper(eta=0.05, rho=0.03, lam=0.5),
+], ids=["fedavg", "feddeper"])
+def test_degenerate_async_mesh_equals_vmap_async_bitwise(strategy, data,
+                                                         x0):
+    """The same degenerate config (buffer_size = m, delay = 0, alpha = 0)
+    routed through the mesh placement on a 1-device mesh: the async
+    aggregate takes ``MeshPlacement.aggregate_buffer``'s unweighted pmean
+    path (never padded here), which is bit-identical to the vmap
+    ``agg_plain`` -- the sync degenerate pin extended to async-on-mesh."""
+    from repro.core import MeshPlacement
+    from repro.launch.mesh import make_client_mesh
+
+    acfg = AsyncSimConfig(n_clients=8, m_concurrent=4, buffer_size=4,
+                          tau=3, batch_size=16, alpha=0.0, delay=0.0,
+                          seed=3)
+    s_vmap = init_async_state(acfg, strategy, x0)
+    arf = make_async_round_fn(acfg, strategy, grad_fn, data)
+    pl = MeshPlacement(make_client_mesh())
+    s_mesh = init_async_state(acfg, strategy, x0, placement=pl)
+    arf_m = make_async_round_fn(acfg, strategy, grad_fn, data,
+                                placement=pl)
+    for _ in range(3):
+        s_vmap, _ = arf(s_vmap)
+        s_mesh, _ = arf_m(s_mesh)
+    for key in ("x", "clients", "pms"):
+        for a, b in zip(jax.tree.leaves(s_vmap[key]),
+                        jax.tree.leaves(s_mesh[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{strategy.name}:{key}")
+    assert s_mesh["version"] == s_vmap["version"] == 3
+
+
 def test_staleness_weights_formula():
     w = np.asarray(staleness_weights([0, 1, 3], alpha=1.0))
     np.testing.assert_allclose(w, [1.0, 0.5, 0.25])

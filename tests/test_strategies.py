@@ -114,6 +114,63 @@ def test_scaffold_control_variates_update(data):
     assert c_norm > 0  # server control variate moved
 
 
+def test_scaffold_weighted_aggregate_participation(data):
+    """Weighted (staleness-discounted) Scaffold aggregation: the c-update
+    scales by the weight-normalized participation p_eff = p * sum(w)/m,
+    so the server control variate gains sum_i w_i dc_i / n -- each upload
+    contributes exactly its discounted share (padding lanes with w=0
+    contribute nothing).  weights=None stays the uniform path bit-for-bit,
+    and all-zero weights fall back to the uniform p."""
+    strat = Scaffold(eta=0.05)
+    x = {"w": jnp.linspace(-1.0, 1.0, 6).reshape(2, 3)}
+    m, n = 4, 8
+    rng = np.random.default_rng(7)
+    uploads = {
+        "dv": {"w": jnp.asarray(rng.normal(0, 0.1, (m, 2, 3)), jnp.float32)},
+        "dc": {"w": jnp.asarray(rng.normal(0, 0.1, (m, 2, 3)), jnp.float32)},
+    }
+    p = m / n
+    w = jnp.asarray([1.0, 0.5, 0.25, 0.0])
+
+    # weights=None: c == p * mean(dc), bitwise (the historical path)
+    _, s_plain, _ = strat.aggregate(x, strat.server_init(x), uploads, p)
+    want = p * np.asarray(uploads["dc"]["w"]).mean(0)
+    np.testing.assert_allclose(np.asarray(s_plain["c"]["w"]), want,
+                               rtol=1e-6, atol=1e-7)
+
+    # weighted: c == sum_i w_i dc_i / n, x == x + weighted_mean(dv)
+    x_w, s_w, _ = strat.aggregate(x, strat.server_init(x), uploads, p,
+                                  weights=w)
+    wn = np.asarray(w)
+    want_c = (np.asarray(uploads["dc"]["w"]) * wn[:, None, None]).sum(0) / n
+    np.testing.assert_allclose(np.asarray(s_w["c"]["w"]), want_c,
+                               rtol=1e-5, atol=1e-7)
+    from repro.core import tree_weighted_mean
+    want_x = np.asarray(x["w"]) + np.asarray(
+        tree_weighted_mean(uploads["dv"], w)["w"])
+    np.testing.assert_allclose(np.asarray(x_w["w"]), want_x,
+                               rtol=1e-6, atol=1e-7)
+
+    # a zero-weight lane is massless: dropping it changes nothing (the
+    # async mesh path's padding invariance, at matching p_eff)
+    ups3 = jax.tree.map(lambda t: t[:3], uploads)
+    x3, s3, _ = strat.aggregate(x, strat.server_init(x), ups3, 3 / n,
+                                weights=w[:3])
+    np.testing.assert_allclose(np.asarray(s3["c"]["w"]),
+                               np.asarray(s_w["c"]["w"]),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(x3["w"]), np.asarray(x_w["w"]),
+                               rtol=1e-6, atol=1e-7)
+
+    # all-zero weights: uniform-mean fallback AND uniform-p fallback
+    x0_, s0_, _ = strat.aggregate(x, strat.server_init(x), uploads, p,
+                                  weights=jnp.zeros(m))
+    np.testing.assert_allclose(np.asarray(s0_["c"]["w"]),
+                               np.asarray(s_plain["c"]["w"]),
+                               rtol=1e-6, atol=1e-7)
+    assert np.isfinite(np.asarray(x0_["w"])).all()
+
+
 def test_mixing_rate_bounds(data):
     """lambda=1: v reinitialized from y each round (no history kept)."""
     s_half, _ = run(FedDeper(eta=0.05, rho=0.03, lam=0.5), data, rounds=2)

@@ -148,3 +148,45 @@ def test_train_cli_async_entrypoint():
     assert lines[-1]["version"] == 3
     assert np.isfinite(lines[-1]["local_loss"])
     assert lines[-1]["sim_time"] > 0
+
+
+def test_train_cli_async_resume_restores_clock(tmp_path):
+    """A resumed async run must continue the simulated clock and version
+    instead of resetting them to zero (the checkpoint meta carries t and
+    version; restore used to drop both)."""
+    ckpt = str(tmp_path / "ck")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "llama3.2-3b", "--reduced", "--regime", "async", "--clients",
+            "4", "--concurrent", "2", "--buffer", "2", "--delay", "3",
+            "--tau", "2", "--batch", "2", "--seq", "32", "--per-client",
+            "8", "--ckpt-dir", ckpt, "--ckpt-every", "2"]
+    first = subprocess.run(args + ["--rounds", "2"], capture_output=True,
+                           text=True, env=_SUBPROC_ENV, cwd=".",
+                           timeout=560)
+    assert first.returncode == 0, first.stderr[-2000:]
+    l1 = [json.loads(l) for l in first.stdout.strip().splitlines()]
+    resumed = subprocess.run(args + ["--rounds", "4"], capture_output=True,
+                             text=True, env=_SUBPROC_ENV, cwd=".",
+                             timeout=560)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    assert "restored round 2" in resumed.stdout
+    l2 = [json.loads(l) for l in resumed.stdout.strip().splitlines()
+          if l.startswith("{")]
+    assert [r["round"] for r in l2] == [3, 4]
+    assert l2[0]["version"] == l1[-1]["version"] + 1
+    assert l2[0]["sim_time"] >= l1[-1]["sim_time"]
+
+
+def test_train_cli_rejects_bandwidth_outside_async():
+    """--bandwidth prices the simulated async uplink queue; in the
+    synchronous regimes it would silently do nothing, so the CLI fails
+    fast."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "llama3.2-3b", "--reduced", "--placement", "vmap", "--clients",
+         "2", "--tau", "2", "--rounds", "1", "--batch", "2", "--seq",
+         "32", "--bandwidth", "1e6"],
+        capture_output=True, text=True, env=_SUBPROC_ENV,
+        cwd=".", timeout=560)
+    assert out.returncode != 0
+    assert "--regime async" in (out.stderr + out.stdout)
