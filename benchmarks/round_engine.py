@@ -71,14 +71,16 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional
 
 import jax
+import numpy as np
 
 from benchmarks.common import build_task, csv_row
 from repro.comm import make_compressor, uplink_bytes_per_round
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
                         SimConfig, init_async_state, init_sim_state,
-                        make_async_round_fn, make_block_fn, make_placement,
-                        make_round_fn, twin_grad_fn)
+                        make_async_round_fn, make_block_fn, make_global_eval,
+                        make_placement, make_round_fn, twin_grad_fn)
+from repro.faults import make_faults
 from repro.core.engine import make_per_client
 from repro.core.strategies import tmap
 from repro.models import init_classifier
@@ -143,9 +145,29 @@ class _Prepared:
                 round_fn = compiled
         self.round_fn = round_fn
         self.peak_bytes = peak_bytes
-        self.state, _ = round_fn(state)
+        # fault benches report screened lanes per round: the metric
+        # arrays are APPENDED while timing (device handles only -- no
+        # host sync inside the window) and reduced at report time
+        self._screened: list = []
+        self.state, mets = round_fn(state)
+        self._note(mets)
         jax.block_until_ready(jax.tree.leaves(self.state["x"])[0])
         self.best = float("inf")
+
+    def _note(self, mets):
+        if isinstance(mets, dict) and "screened" in mets:
+            self._screened.append(mets["screened"])
+
+    @property
+    def screened_per_round(self) -> Optional[float]:
+        """Mean screened-lane count over every round this bench ran
+        (warmup + timed), or None when the round_fn tracks no screening
+        (no faults in play)."""
+        if not self._screened:
+            return None
+        vals = [np.asarray(a) for a in self._screened]
+        return float(sum(v.sum() for v in vals) /
+                     sum(v.size for v in vals))
 
     def block(self, rounds: int) -> float:
         """Run one timed block of ``rounds`` simulated rounds (callers
@@ -157,7 +179,8 @@ class _Prepared:
         t0 = time.perf_counter()
         s = self.state
         for _ in range(calls):
-            s, _ = self.round_fn(s)
+            s, mets = self.round_fn(s)
+            self._note(mets)
         jax.block_until_ready(jax.tree.leaves(s["x"])[0])
         per_round = (time.perf_counter() - t0) / (calls *
                                                   self.rounds_per_call)
@@ -171,23 +194,29 @@ class _Prepared:
 
 
 def _prep_sync(task, x0, scale, strategy, *, donate, twin,
-               placement=None, block=None, compress=None):
+               placement=None, block=None, compress=None, faults=None):
     sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
                     tau=scale["tau"], batch_size=scale["batch"], seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
     pl = make_placement(placement) if placement else None
     comp = make_compressor(compress) if compress else None
+    fl = make_faults(faults) if faults else None
     if block:
         rf = make_block_fn(sim, strategy, grad_fn, task["data"],
                            block_size=block, donate=donate, placement=pl,
-                           compressor=comp)
+                           compressor=comp, faults=fl)
     else:
         rf = make_round_fn(sim, strategy, grad_fn, task["data"],
-                           donate=donate, placement=pl, compressor=comp)
+                           donate=donate, placement=pl, compressor=comp,
+                           faults=fl)
     cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
                twin_grads=twin, placement=placement or "vmap", **scale)
     if block:
         cfg["block_rounds"] = block
+    if faults:
+        # fault rows additionally track screened_per_round at the entry
+        # level (validate_bench requires it when config carries "faults")
+        cfg["faults"] = faults
     uplink = None
     if compress:
         # compression rows track their wire cost next to us_per_round /
@@ -269,13 +298,16 @@ def _prep_async(task, x0, scale, strategy, *, donate, twin,
 # future bench edits fail loudly in the smoke lane instead of silently
 # shipping unvalidated fields
 _ENTRY_KEYS = {"us_per_round", "peak_bytes", "config",
-               "uplink_bytes_per_round"}
+               "uplink_bytes_per_round", "screened_per_round"}
 
 
 def validate_bench(obj) -> None:
     """Raise ValueError unless ``obj`` matches the BENCH schema.
     Unknown entry keys are rejected; rows whose config records a
-    ``compress`` spec must also track ``uplink_bytes_per_round``."""
+    ``compress`` spec must also track ``uplink_bytes_per_round``, and
+    rows whose config records a ``faults`` spec must track
+    ``screened_per_round`` (forbidden elsewhere -- a screened count on a
+    fault-free row means the harness mixed up its round_fns)."""
     if not isinstance(obj, dict) or not obj:
         raise ValueError("bench json must be a non-empty dict")
     for name, entry in obj.items():
@@ -309,6 +341,17 @@ def validate_bench(obj) -> None:
                     f"{name}: compression rows must track "
                     f"uplink_bytes_per_round as a positive int (got "
                     f"{ub!r})")
+        if "faults" in entry["config"]:
+            sp = entry.get("screened_per_round")
+            if not isinstance(sp, (int, float)) or isinstance(sp, bool) \
+                    or sp < 0:
+                raise ValueError(
+                    f"{name}: fault rows must track screened_per_round "
+                    f"as a non-negative number (got {sp!r})")
+        elif "screened_per_round" in entry:
+            raise ValueError(
+                f"{name}: screened_per_round on a row whose config has "
+                "no 'faults' spec")
 
 
 # regression gate: a smoke ratio may drop to this fraction of its
@@ -406,6 +449,15 @@ def _benches():
         "feddeper_sync_topk": (
             "sync", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True, compress="topk:0.1")),
+        # fault injection + screening (repro.faults): the paper's
+        # unreliable-device setting at drop=0.2/corrupt=0.05 -- the row
+        # tracks screened_per_round and post-bench eval accuracy next to
+        # its clean reference, and the ratio prices the screening math
+        # riding the round's single psum
+        "feddeper_sync_faults": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True,
+                 faults="drop:0.2,corrupt:0.05")),
         "feddeper_async_unfused": (
             "async", FedDeper(fuse_grads=False, **DEPER),
             dict(donate=False, twin=False)),
@@ -452,6 +504,10 @@ _SPEEDUP_PAIRS = {
     "feddeper_sync_identity": ("feddeper_sync_fused", "speedup_vs_dense"),
     "feddeper_sync_q8": ("feddeper_sync_identity", "speedup_vs_dense"),
     "feddeper_sync_topk": ("feddeper_sync_identity", "speedup_vs_dense"),
+    # fault ratio: screening + fault draws vs the clean fused round
+    # (<= 1.0 expected -- screening's weighted mean rides the same psum,
+    # so the gap is the fault-draw/clip math, not an extra collective)
+    "feddeper_sync_faults": ("feddeper_sync_fused", "speedup_vs_clean"),
 }
 
 
@@ -481,7 +537,8 @@ def round_engine_rows(quick: bool = True, *,
                                         twin=opts["twin"],
                                         placement=opts.get("placement"),
                                         block=opts.get("block"),
-                                        compress=opts.get("compress"))
+                                        compress=opts.get("compress"),
+                                        faults=opts.get("faults"))
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
@@ -512,6 +569,22 @@ def round_engine_rows(quick: bool = True, *,
             for _ in range(reps):
                 p.block(n_rounds[name])
 
+    # fault rows additionally record post-bench eval accuracy next to the
+    # clean reference's (the acceptance axis: screening keeps training
+    # convergent, not just finite) -- evaluated AFTER all timed windows so
+    # the eval never perturbs a timing
+    fault_rows = [n for n in prepared if "faults" in prepared[n].cfg]
+    if fault_rows:
+        test_eval = make_global_eval(task["apply_loss"], task["test"])
+        for name in fault_rows:
+            p = prepared[name]
+            p.cfg["eval_acc"] = round(
+                float(test_eval(p.state)["test_acc"]), 4)
+            ref = _SPEEDUP_PAIRS.get(name, (None,))[0]
+            if ref in prepared:
+                p.cfg["eval_acc_clean"] = round(
+                    float(test_eval(prepared[ref].state)["test_acc"]), 4)
+
     results: Dict[str, Dict] = {}
     for name, p in prepared.items():
         p.cfg["rounds"] = n_rounds[name]
@@ -519,6 +592,9 @@ def round_engine_rows(quick: bool = True, *,
                          "config": p.cfg}
         if p.uplink_bytes is not None:
             results[name]["uplink_bytes_per_round"] = p.uplink_bytes
+        if "faults" in p.cfg:
+            results[name]["screened_per_round"] = \
+                round(p.screened_per_round or 0.0, 4)
 
     rows = []
     for name, entry in results.items():
@@ -526,6 +602,8 @@ def round_engine_rows(quick: bool = True, *,
         if "uplink_bytes_per_round" in entry:
             derived["uplink_bytes_per_round"] = \
                 entry["uplink_bytes_per_round"]
+        if "screened_per_round" in entry:
+            derived["screened_per_round"] = entry["screened_per_round"]
         pair = _SPEEDUP_PAIRS.get(name)
         if pair and name in pair_ratio:
             speedup = pair_ratio[name]

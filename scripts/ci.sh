@@ -33,7 +33,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MULTIDEV_FILES=(tests/test_engine_placement.py tests/test_block_scan.py
                 tests/test_sharding_rules.py tests/test_compression.py
-                tests/test_async_mesh.py)
+                tests/test_async_mesh.py tests/test_faults.py)
 
 run_unit() {
     python -m pytest -x -q -m "not slow" "$@"
@@ -71,8 +71,9 @@ try:
                  "feddeper_sync_pallas_fused", "feddeper_sync_mesh",
                  "feddeper_sync_block4", "feddeper_sync_mesh_block4",
                  "feddeper_sync_identity", "feddeper_sync_q8",
-                 "feddeper_sync_topk", "feddeper_async_fused",
-                 "feddeper_async_unfused", "feddeper_async_mesh"))
+                 "feddeper_sync_topk", "feddeper_sync_faults",
+                 "feddeper_async_fused", "feddeper_async_unfused",
+                 "feddeper_async_mesh"))
     for r in rows:
         print(r)
     tracked = json.loads(BENCH_PATH.read_text())

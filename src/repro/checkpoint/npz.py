@@ -32,13 +32,33 @@ def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
 
 def save_checkpoint(directory: str, step: int, tree: Pytree,
                     metadata: Optional[dict] = None) -> str:
+    """Atomic write: the full archive lands in ``<path>.tmp.npz``, is
+    fsync'd, and only then renamed over the final name (``os.replace``
+    is atomic on POSIX) -- a kill at ANY point leaves either the
+    complete previous checkpoint or the complete new one, never a
+    loadable-but-truncated file; ``latest_checkpoint`` never matches the
+    tmp name."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     tmp = path + ".tmp.npz"  # .npz suffix stops np.savez appending another
     flat = _flatten(tree)
     meta = json.dumps({"step": step, **(metadata or {})})
-    np.savez(tmp, __meta__=np.frombuffer(meta.encode(), np.uint8), **flat)
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(meta.encode(), np.uint8),
+                     **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        # a failed/killed write must not leave a stale tmp that a later
+        # save could trip over
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+        raise
     return path
 
 

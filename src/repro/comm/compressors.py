@@ -23,12 +23,18 @@ Contract (all inside jit/vmap/shard_map, so everything is traced math):
                          the scan-block carry.
   init_residual(tmpl) -- one client's residual (f32 zeros, upload-shaped);
                          {} for stateless compressors.
-  roundtrip(upload, ef, key)
+  roundtrip(upload, ef, key, corrupt=None)
                       -- (dense_upload, new_ef, metrics): the decompressed
                          upload the server reconstructs, the residual the
                          client keeps, and optional metric scalars.  The
                          error-feedback form is the classical EF-SGD one:
                          send C(upload + ef), keep (upload + ef) - C(...).
+                         ``corrupt`` (repro.faults wire-corruption hook,
+                         a single-buffer fn) damages the WIRE
+                         representation -- the compressed codes -- after
+                         the residual is computed: EF reflects what the
+                         client actually sent; bit-flips are transport
+                         damage the server sees.
   payload_bytes(tmpl) -- wire bytes of ONE client's compressed upload
                          (static, from shapes): the bandwidth model for
                          the async regime's upload delay and the bench's
@@ -92,8 +98,11 @@ class Compressor:
     def init_residual(self, template: Pytree) -> Pytree:
         return {}
 
-    def roundtrip(self, upload: Pytree, ef: Pytree, key
+    def roundtrip(self, upload: Pytree, ef: Pytree, key, corrupt=None
                   ) -> Tuple[Pytree, Pytree, Dict]:
+        if corrupt is not None:
+            # dense wire: the payload itself is the wire buffer, per leaf
+            upload = tmap(corrupt, upload)
         return upload, ef, {}
 
     def payload_bytes(self, template: Pytree) -> int:
@@ -144,7 +153,7 @@ class Quantize(Compressor):
         return tmap(lambda t: jnp.maximum(jnp.max(jnp.abs(t)),
                                           1e-30) / self.qmax, tree_f32)
 
-    def roundtrip(self, upload, ef, key):
+    def roundtrip(self, upload, ef, key, corrupt=None):
         up = _to_f32(upload)
         scales = self._scales(up)
         normed = tmap(jnp.divide, up, scales)
@@ -158,9 +167,18 @@ class Quantize(Compressor):
         buf = fl.flatten(normed)
         if self.mode == "int8":
             rand = jax.random.uniform(key, buf.shape, _F32)
-            deq_buf = dequantize(quantize_stochastic(buf, rand))
+            q = quantize_stochastic(buf, rand)
+            if corrupt is not None:
+                # bit-flips hit the int8 WIRE codes: bounded damage
+                # (|value| <= scale * 127), the realistic transport model
+                q = corrupt(q)
+            deq_buf = dequantize(q)
         else:
             deq_buf = buf.astype(jnp.float8_e4m3fn).astype(_F32)
+            if corrupt is not None:
+                # fp8 wire: flip on the decoded f32 buffer (bitcast of
+                # float8 is version-fragile on jax 0.4.x)
+                deq_buf = corrupt(deq_buf)
         dense = tmap(jnp.multiply, fl.unflatten(deq_buf), scales)
         return _like(dense, upload), ef, {}
 
@@ -224,10 +242,14 @@ class TopK(Compressor):
         return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(
             leaf.shape)
 
-    def roundtrip(self, upload, ef, key):
+    def roundtrip(self, upload, ef, key, corrupt=None):
         corrected = tmap(jnp.add, _to_f32(upload), ef)
         dense = tmap(self._sparsify_leaf, corrected)
         new_ef = tmap(jnp.subtract, corrected, dense)
+        if corrupt is not None:
+            # transport damage AFTER the residual: EF keeps reflecting
+            # what the client sent, not what the wire mangled
+            dense = tmap(corrupt, dense)
         res = sum(jnp.sum(jnp.square(l))
                   for l in jax.tree.leaves(new_ef))
         return (_like(dense, upload), new_ef,

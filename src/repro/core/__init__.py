@@ -3,11 +3,13 @@ from repro.core.strategies import (  # noqa: F401
     FedAvg,
     FedDeper,
     FedProx,
+    LocalWeights,
     Scaffold,
     STRATEGIES,
     Strategy,
     tree_weighted_mean,
     twin_grad_fn,
+    weight_mass,
 )
 from repro.core.async_rounds import (  # noqa: F401
     AsyncSimConfig,
@@ -25,6 +27,7 @@ from repro.core.engine import (  # noqa: F401
     pad_cohort,
 )
 from repro.core.rounds import (  # noqa: F401
+    RollbackGuard,
     SimConfig,
     broadcast_client_store,
     gather_client_state,
@@ -33,10 +36,12 @@ from repro.core.rounds import (  # noqa: F401
     make_global_eval,
     make_personal_eval,
     make_round_fn,
+    peek_round_faults,
     peek_sampled_clients,
     run_blocks,
     run_rounds,
     scatter_client_rows,
+    state_is_finite,
 )
 from repro.core.federated import (  # noqa: F401
     make_decode_step,

@@ -150,7 +150,7 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
 
 def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
                         data: Dict[str, jax.Array], *, donate: bool = True,
-                        placement=None, compressor=None):
+                        placement=None, compressor=None, faults=None):
     """Returns ``async_round(state) -> (state, metrics)`` advancing the
     event simulation until exactly one buffered aggregation completes --
     the same contract as ``make_round_fn``, so ``run_rounds`` drives it.
@@ -177,7 +177,31 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
     ``payload_bytes / bandwidth``, so compression directly shortens the
     simulated straggler queue (the bandwidth-aware regime).  A stateful
     compressor's residual rows are gathered at dispatch and scattered at
-    delivery, exactly like the client store."""
+    delivery, exactly like the client store.
+
+    ``faults`` (repro.faults.FaultConfig): the async regime supports the
+    DEADLINE fault class only -- a dispatch whose simulated completion
+    (client delay + upload delay) exceeds ``faults.deadline`` never
+    delivers: its slot frees at the deadline, its payload is discarded
+    (the sync drop semantics: client/pms/ef rows keep their pre-dispatch
+    values), and the aggregation's ``dropped`` metric counts it.  The
+    drop/corrupt/clip classes are sync-regime screening; requesting them
+    here fails fast rather than silently ignoring them."""
+    if faults is not None:
+        if faults.active:
+            raise ValueError(
+                "async regime: only deadline faults are supported "
+                f"(got {faults.spec!r}); drop/corrupt/clip screening is "
+                "the synchronous engine's (make_round_fn(faults=...))")
+        deadline = faults.deadline if faults.deadline > 0 else None
+    else:
+        deadline = None
+    if deadline is not None:
+        d0 = acfg.client_delays()
+        if (d0 > deadline).all():
+            raise ValueError(
+                f"deadline {deadline:g} is below every client delay "
+                f"(min {d0.min():g}): no upload can ever deliver")
     n, tau, b = acfg.n_clients, acfg.tau, acfg.batch_size
     placement = placement or VmapPlacement()
     mesh_placed = placement.name == "mesh"
@@ -295,13 +319,18 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         idx_np = np.asarray(idx)
         for j, slot in enumerate(free):
             c = int(idx_np[j])
+            wall = float(state["delays"][c]) + up_delay
+            timed_out = deadline is not None and wall > deadline
             state["slots"][slot] = {
                 "client": c,
                 "version": state["version"],
-                "finish_t": state["t"] + float(state["delays"][c])
-                + up_delay,
-                "payload": tmap(lambda t: t[j],
-                                (new_cs, uploads, pms, ef_new)),
+                # a straggler past the deadline frees its slot AT the
+                # deadline (the server stops waiting); its payload is
+                # dead on arrival and never materialized host-side
+                "finish_t": state["t"] + (deadline if timed_out else wall),
+                "timed_out": timed_out,
+                "payload": None if timed_out else tmap(
+                    lambda t: t[j], (new_cs, uploads, pms, ef_new)),
                 "metrics": {k: v[j] for k, v in metrics.items()},
             }
 
@@ -352,6 +381,9 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
             "sim_time": float(state["t"]),
             "version": float(state["version"]),
         })
+        if deadline is not None:
+            metrics["dropped"] = float(state.get("timeouts_pending", 0))
+            state["timeouts_pending"] = 0
         return metrics
 
     def _deliver_until_aggregate(state):
@@ -369,6 +401,20 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
                 s = state["slots"][i]
                 if s is None or s["finish_t"] > state["t"]:
                     continue
+                if s.get("timed_out"):
+                    # deadline straggler: the slot frees, nothing lands
+                    state["slots"][i] = None
+                    state["timeouts_pending"] = \
+                        state.get("timeouts_pending", 0) + 1
+                    streak = state.get("timeout_streak", 0) + 1
+                    state["timeout_streak"] = streak
+                    if streak > 10 * n:
+                        raise RuntimeError(
+                            f"async deadline faults: {streak} consecutive "
+                            "timeouts with no delivery -- deadline "
+                            f"{deadline:g} starves the buffer")
+                    continue
+                state["timeout_streak"] = 0
                 new_cs, upload, pm, ef_row = s["payload"]
                 c = jnp.int32(s["client"])
                 if jax.tree.leaves(state["clients"]):

@@ -51,7 +51,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.strategies import Strategy, tmap
+from repro.core.strategies import LocalWeights, Strategy, tmap
+from repro.faults.inject import (corrupt_payload, fault_draws,
+                                 fault_round_keys, screen_upload,
+                                 wire_corruptor)
 
 Pytree = Any
 
@@ -157,8 +160,8 @@ def _personal_model(strategy: Strategy, x, cs, upload):
     return tmap(jnp.add, x, upload)
 
 
-def make_per_client(strategy: Strategy, grad_fn,
-                    compressor=None) -> Callable:
+def make_per_client(strategy: Strategy, grad_fn, compressor=None,
+                    faults=None) -> Callable:
     """The per-client round body every placement maps over the cohort
     axis: tau local steps + the personal-model view of the result.
 
@@ -169,14 +172,26 @@ def make_per_client(strategy: Strategy, grad_fn,
     under the mesh placement the round's single psum) always sees a
     dense cohort stack.  The personal model is taken from the RAW upload
     first: the client keeps its own uncompressed delta; only the wire
-    copy is lossy."""
+    copy is lossy.
+
+    With ``faults`` (an ACTIVE ``repro.faults.FaultConfig``) the body
+    grows two more trailing operands -- the client's pre-round pms row
+    and a per-lane fault key -- and one more trailing output: the lane's
+    screening weight in [0, 1].  Fault order models the physical path:
+    train -> take the personal model from the RAW (pre-wire) upload ->
+    compress -> corrupt (bit-flips hit the compressed wire codes via
+    ``Compressor.roundtrip(corrupt=...)``; Byzantine/non-finite modes hit
+    the decoded payload) -> server-side screening zeroes the weight AND
+    the values of dropped/non-finite lanes.  A dropped client never ran:
+    its cs/pms/ef rows revert to the pre-round values, so the scatter
+    writes back exactly what was there."""
     def per_client(x_i, ctx_i, cs_i, batches_i):
         new_cs, upload, metrics = strategy.local_round(
             x_i, ctx_i, cs_i, batches_i, grad_fn)
         pm = _personal_model(strategy, x_i, new_cs, upload)
         return new_cs, upload, pm, metrics
 
-    if compressor is None:
+    if compressor is None and faults is None:
         return per_client
 
     def per_client_comm(x_i, ctx_i, cs_i, batches_i, ef_i, key_i):
@@ -185,7 +200,37 @@ def make_per_client(strategy: Strategy, grad_fn,
         upload, new_ef, cm = compressor.roundtrip(upload, ef_i, key_i)
         return new_cs, upload, pm, {**metrics, **cm}, new_ef
 
-    return per_client_comm
+    if faults is None:
+        return per_client_comm
+
+    def per_client_faulty(x_i, ctx_i, cs_i, batches_i, *rest):
+        if compressor is not None:
+            ef_i, key_i, pm_old_i, fkey_i = rest
+        else:
+            pm_old_i, fkey_i = rest
+        new_cs, upload, pm, metrics = per_client(x_i, ctx_i, cs_i,
+                                                 batches_i)
+        dropped, corrupted, k_pay = fault_draws(faults, fkey_i)
+        ef_new = None
+        if compressor is not None:
+            upload, ef_new, cm = compressor.roundtrip(
+                upload, ef_i, key_i,
+                corrupt=wire_corruptor(faults, corrupted, k_pay))
+            metrics = {**metrics, **cm}
+        if compressor is None or faults.corrupt_mode != "bitflip":
+            upload = corrupt_payload(faults, upload, corrupted, k_pay)
+        upload, w_i, fm = screen_upload(faults, upload, dropped)
+        revert = lambda old, new: tmap(
+            lambda o, n: jnp.where(dropped, o, n), old, new)
+        new_cs = revert(cs_i, new_cs)
+        pm = revert(pm_old_i, pm)
+        metrics = {**metrics, **fm}
+        if compressor is not None:
+            return (new_cs, upload, pm, metrics,
+                    revert(ef_i, ef_new), w_i)
+        return new_cs, upload, pm, metrics, w_i
+
+    return per_client_faulty
 
 
 def make_dispatch_cohort(strategy: Strategy, grad_fn, placement,
@@ -226,19 +271,31 @@ class VmapPlacement:
         return store
 
     def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
-                grad_fn, p: float, compressor=None, ef=None, keys=None):
-        if compressor is None:
-            per_client = make_per_client(strategy, grad_fn)
-            new_cs, uploads, pms_new, metrics = jax.vmap(
-                per_client, in_axes=(None, None, 0, 0))(x, ctx, cs,
-                                                        batches)
-            ef_new = {}
+                grad_fn, p: float, compressor=None, ef=None, keys=None,
+                faults=None, pms=None, fkeys=None):
+        per_client = make_per_client(strategy, grad_fn, compressor,
+                                     faults)
+        args, axes = [x, ctx, cs, batches], [None, None, 0, 0]
+        if compressor is not None:
+            args += [ef, keys]
+            axes += [0, 0]
+        if faults is not None:
+            args += [pms, fkeys]
+            axes += [0, 0]
+        out = jax.vmap(per_client, in_axes=tuple(axes))(*args)
+        w = None
+        if faults is not None:
+            w, out = out[-1], out[:-1]
+        if compressor is not None:
+            new_cs, uploads, pms_new, metrics, ef_new = out
         else:
-            per_client = make_per_client(strategy, grad_fn, compressor)
-            new_cs, uploads, pms_new, metrics, ef_new = jax.vmap(
-                per_client, in_axes=(None, None, 0, 0, 0, 0))(
-                x, ctx, cs, batches, ef, keys)
-        x2, server2, agg_metrics = strategy.aggregate(x, server, uploads, p)
+            (new_cs, uploads, pms_new, metrics), ef_new = out, {}
+        if faults is None:
+            x2, server2, agg_metrics = strategy.aggregate(x, server,
+                                                          uploads, p)
+        else:
+            x2, server2, agg_metrics = strategy.aggregate(
+                x, server, uploads, p, weights=w)
         metrics = {k: v.mean() for k, v in metrics.items()}
         metrics.update(agg_metrics)
         return new_cs, pms_new, x2, server2, metrics, ef_new
@@ -266,12 +323,34 @@ def _psum_mean_fn(axis: str, metrics_local: Dict[str, jax.Array],
     sum ride the same collective the uniform path already uses.
     ``axis_size`` is passed statically: ``lax.axis_size`` spells as a
     second psum on jax 0.4.x (compat.py), which would break the
-    one-collective contract."""
+    one-collective contract.
+
+    A ``strategies.LocalWeights`` (the faults layer's SHARD-LOCAL
+    screening weights -- each shard only knows its own lanes' weights)
+    takes a third branch: weighted partial sum over the local lanes,
+    then ONE psum of (partials, local weight sum, metrics) -- the global
+    weight sum rides the same collective -- and a shard-local divide.
+    The divide-after-psum associates differently from the vmap path's
+    normalize-then-dot (atol 1e-6, DESIGN.md §10); all-zero surviving
+    mass degrades to a zero delta, which equals the uniform mean of the
+    screened (zero-valued) lanes.  The psum-ed weight sum is recorded on
+    the LocalWeights for Scaffold's p_eff -- still one collective."""
     def mean_fn(tree: Pytree, weights=None) -> Pytree:
         if weights is None:
             local = tmap(lambda t: t.mean(0), tree)
             reduced, box["metrics"] = jax.lax.pmean((local, metrics_local),
                                                     axis)
+            return reduced
+        if isinstance(weights, LocalWeights):
+            w_local = weights.w
+            part = tmap(lambda t: jnp.tensordot(
+                w_local, t.astype(jnp.float32), axes=(0, 0)), tree)
+            reduced, wsum, msum = jax.lax.psum(
+                (part, w_local.sum(), metrics_local), axis)
+            weights.set_global_sum(wsum)
+            safe = jnp.where(wsum > 0, wsum, 1.0)
+            reduced = tmap(lambda t: t / safe, reduced)
+            box["metrics"] = {k: v / axis_size for k, v in msum.items()}
             return reduced
         w = jnp.asarray(weights, jnp.float32)
         s = w.sum()
@@ -429,15 +508,19 @@ class MeshPlacement:
 
         return mapped
 
-    def _aggregate_tail(self, strategy, x, server, uploads, metrics, p):
+    def _aggregate_tail(self, strategy, x, server, uploads, metrics, p,
+                        weights=None):
         """The shard-local aggregate: cohort-lane metric means + the
         strategy's aggregate with the delta-mean lowered to the round's
-        ONE cross-client psum (metric scalars ride the same collective)."""
+        ONE cross-client psum (metric scalars ride the same collective).
+        ``weights`` (a ``LocalWeights``, the faults layer's shard-local
+        screening weights) lowers screened aggregation into that same
+        psum."""
         axis = self.client_axis
         metrics_local = {k: v.mean() for k, v in metrics.items()}
         box: Dict = {}
         x2, server2, agg_metrics = strategy.aggregate(
-            x, server, uploads, p,
+            x, server, uploads, p, weights=weights,
             mean_fn=_psum_mean_fn(axis, metrics_local, box,
                                   self.axis_size))
         # a strategy that never called mean_fn still needs its metric
@@ -496,45 +579,52 @@ class MeshPlacement:
                                                     weights)
 
     def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
-                grad_fn, p: float, compressor=None, ef=None, keys=None):
-        c = P(self.client_axis)
-        if compressor is None:
-            per_client = make_per_client(strategy, grad_fn)
-
-            def body(x, server, ctx, cs, batches):
-                new_cs, uploads, pms_new, metrics = jax.vmap(
-                    per_client, in_axes=(None, None, 0, 0))(x, ctx, cs,
-                                                            batches)
-                x2, server2, metrics_global = self._aggregate_tail(
-                    strategy, x, server, uploads, metrics, p)
-                return new_cs, pms_new, x2, server2, metrics_global
-
-            out = shard_map(
-                body, mesh=self.mesh,
-                in_specs=(P(), P(), P(), c, c),
-                out_specs=(c, c, P(), P(), P()))(x, server, ctx, cs,
-                                                 batches)
-            return out + ({},)
-
+                grad_fn, p: float, compressor=None, ef=None, keys=None,
+                faults=None, pms=None, fkeys=None):
         # compressed round: the per-client lane compresses AND
         # decompresses its upload (repro.comm contract), so the psum in
         # the aggregate tail still reduces a dense stack -- compression
-        # adds no collective
-        per_client = make_per_client(strategy, grad_fn, compressor)
+        # adds no collective.  Faulty round: screening happens per-lane
+        # too (shard-local weights, zeroed bad values), and the weight
+        # vector lowers into the SAME psum via LocalWeights -- faults
+        # add no collective either.
+        c = P(self.client_axis)
+        per_client = make_per_client(strategy, grad_fn, compressor,
+                                     faults)
+        lane_args = [cs, batches]
+        if compressor is not None:
+            lane_args += [ef, keys]
+        if faults is not None:
+            lane_args += [pms, fkeys]
+        n_lane = len(lane_args)
+        m_global = jax.tree.leaves(batches)[0].shape[0]
 
-        def body_comm(x, server, ctx, cs, batches, ef, keys):
-            new_cs, uploads, pms_new, metrics, ef_new = jax.vmap(
-                per_client, in_axes=(None, None, 0, 0, 0, 0))(
-                x, ctx, cs, batches, ef, keys)
+        def body(x, server, ctx, *lanes):
+            out = jax.vmap(per_client,
+                           in_axes=(None, None) + (0,) * n_lane)(
+                x, ctx, *lanes)
+            w = None
+            if faults is not None:
+                w, out = LocalWeights(out[-1], m_global), out[:-1]
+            if compressor is not None:
+                new_cs, uploads, pms_new, metrics, ef_new = out
+            else:
+                new_cs, uploads, pms_new, metrics = out
             x2, server2, metrics_global = self._aggregate_tail(
-                strategy, x, server, uploads, metrics, p)
-            return new_cs, pms_new, x2, server2, metrics_global, ef_new
+                strategy, x, server, uploads, metrics, p, weights=w)
+            if compressor is not None:
+                return new_cs, pms_new, x2, server2, metrics_global, ef_new
+            return new_cs, pms_new, x2, server2, metrics_global
 
-        return shard_map(
-            body_comm, mesh=self.mesh,
-            in_specs=(P(), P(), P(), c, c, c, c),
-            out_specs=(c, c, P(), P(), P(), c))(x, server, ctx, cs,
-                                                batches, ef, keys)
+        in_specs = (P(), P(), P()) + (c,) * n_lane
+        out_specs = (c, c, P(), P(), P())
+        if compressor is not None:
+            out_specs = out_specs + (c,)
+        out = shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                        out_specs=out_specs)(x, server, ctx, *lane_args)
+        if compressor is None:
+            out = out + ({},)
+        return out
 
 
 def make_placement(name: str, mesh: Optional[Mesh] = None):
@@ -597,7 +687,7 @@ def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
 
 def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
                     data: Dict[str, jax.Array], placement=None,
-                    compressor=None) -> Callable:
+                    compressor=None, faults=None) -> Callable:
     """The UN-jitted round body ``body(state) -> (state, metrics)``:
     sample -> gather -> local rounds -> scatter -> aggregate with the
     cohort axis placed per ``placement``.  Everything -- rng splitting,
@@ -612,9 +702,20 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
     bitwise.  A stateful compressor's residual rows ride the state's
     ``ef`` store: gathered with the cohort, scattered back, layout-pinned
     like the client/pms stores (so the scan carry and donation work
-    unchanged)."""
+    unchanged).
+
+    ``faults`` (repro.faults.FaultConfig) injects per-lane dropouts and
+    corrupted uploads and screens them server-side; the per-lane fault
+    key derives from k_batch through a second fold_in salt, so the fault
+    schedule is deterministic per (seed, round) and independent of every
+    other stream.  An INACTIVE config (fault_rate=0, clip off) is
+    normalized to None here: the fault-free program is traced, so
+    fault_rate=0 stays bitwise-equal to today's trace on both
+    placements."""
     placement = placement or VmapPlacement()
     placement.check(sim)
+    if faults is not None and not faults.active:
+        faults = None
     n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
     stateful = compressor is not None and compressor.stateful
 
@@ -638,9 +739,18 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
                            ef=gather_client_state(state.get("ef", {}),
                                                   idx),
                            keys=comm_round_keys(k_batch, m))
+        if faults is not None:
+            comm_kw.update(faults=faults,
+                           pms=gather_client_state(state["pms"], idx),
+                           fkeys=fault_round_keys(k_batch, m))
         new_cs, pms_new, x, server, metrics, ef_new = placement.execute(
             strategy, state["x"], state["server"], ctx, cs, batches,
             grad_fn, sim.p, **comm_kw)
+        if faults is not None:
+            # per-lane fractions -> whole-cohort counts for the train log
+            metrics = dict(metrics)
+            for k in ("screened", "dropped"):
+                metrics[k] = metrics[k] * m
 
         # scatter per-client state back (store layout pinned so donation
         # reuses the distributed buffers under the mesh placement, and so
@@ -663,7 +773,7 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
 
 def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
                       data: Dict[str, jax.Array], *, placement=None,
-                      donate: bool = True, compressor=None):
+                      donate: bool = True, compressor=None, faults=None):
     """The per-round executor: returns jitted ``round_fn(state) -> (state,
     metrics)``.
 
@@ -671,9 +781,10 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
     historical single-device ``make_round_fn``.  ``donate=True`` donates
     the state pytree into the jitted call -- the client/pms stores update
     in place; the passed-in state must not be reused afterwards.
-    ``compressor`` compresses the uplink (see ``make_round_body``)."""
+    ``compressor`` compresses the uplink; ``faults`` injects + screens
+    client faults (see ``make_round_body``)."""
     round_body = make_round_body(sim, strategy, grad_fn, data, placement,
-                                 compressor)
+                                 compressor, faults)
     if donate:
         return jax.jit(round_body, donate_argnums=(0,))
     return jax.jit(round_body)
@@ -681,7 +792,8 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
 
 def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, block_size: int,
-                  placement=None, donate: bool = True, compressor=None):
+                  placement=None, donate: bool = True, compressor=None,
+                  faults=None):
     """The multi-round executor: ``block_size`` rounds inside ONE jitted
     ``lax.scan``.  Returns ``block_fn(state) -> (state, metrics)`` where
     every metric scalar comes back stacked as a ``(block_size,)`` array
@@ -705,7 +817,7 @@ def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     if block_size < 1:
         raise ValueError(f"block_size must be >= 1, got {block_size}")
     round_body = make_round_body(sim, strategy, grad_fn, data, placement,
-                                 compressor)
+                                 compressor, faults)
 
     def block_fn(state):
         def step(carry, _):

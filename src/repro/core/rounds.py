@@ -65,7 +65,7 @@ def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree,
 
 def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, donate: bool = True,
-                  placement=None, compressor=None):
+                  placement=None, compressor=None, faults=None):
     """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
     {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state).
 
@@ -75,10 +75,12 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     keeps the old copying semantics, bit-for-bit.  ``placement`` picks
     where the cohort axis runs (engine.py); None = single-device vmap.
     ``compressor`` (repro.comm) compresses each client's uplink delta;
-    None is trace-identical to the pre-comm engine."""
+    None is trace-identical to the pre-comm engine.  ``faults``
+    (repro.faults) injects + screens client faults; None (or an inactive
+    config) is trace-identical to the pre-fault engine."""
     return make_cohort_round(sim, strategy, grad_fn, data,
                              placement=placement, donate=donate,
-                             compressor=compressor)
+                             compressor=compressor, faults=faults)
 
 
 def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:
@@ -89,6 +91,98 @@ def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:
     handing the state to a donating round_fn."""
     _, k_sel, _ = split_round_rng(state["rng"])
     return sample_cohort(k_sel, sim.n_clients, sim.m_sampled)
+
+
+def peek_round_faults(state, sim: SimConfig, faults):
+    """The (dropped, corrupted) lane masks the NEXT faulty round will
+    draw, without advancing the state: replays ``split_round_rng`` ->
+    ``fault_round_keys`` -> per-lane ``fault_draws`` -- the same three
+    functions the executor traces, so the peeked schedule matches the
+    executed one bitwise on every placement and block size.  Call BEFORE
+    a donating round_fn."""
+    from repro.faults.inject import fault_draws, fault_round_keys
+    _, _, k_batch = split_round_rng(state["rng"])
+    fkeys = fault_round_keys(k_batch, sim.m_sampled)
+    dropped, corrupted, _ = jax.vmap(
+        lambda k: fault_draws(faults, k))(fkeys)
+    return dropped, corrupted
+
+
+def state_is_finite(state) -> bool:
+    """True iff every global-model and server-state leaf is finite -- the
+    block-boundary divergence check.  Client/pms stores are deliberately
+    excluded: one client's bad row cannot poison the next round's
+    aggregate (screening zeroes it on upload), but a non-finite x or
+    server c corrupts every subsequent round."""
+    for key in ("x", "server"):
+        for leaf in jax.tree.leaves(state.get(key, {})):
+            if not bool(np.all(np.isfinite(np.asarray(leaf)))):
+                return False
+    return True
+
+
+# fold_in salt for the rollback reseed: a retried block must draw a
+# DIFFERENT cohort/batch schedule (retrying the exact same rng would
+# deterministically re-diverge), and deriving the new key from the old
+# one keeps the retry itself reproducible.
+_RETRY_SALT = 0x5EED
+
+
+class RollbackGuard:
+    """Crash-safe recovery driver: snapshot-on-good, rollback-on-diverge.
+
+    Holds a HOST-side copy of the last known-good state (explicit
+    ``np.array(copy=True)``: donated rounds invalidate device buffers,
+    and ``np.asarray`` on CPU jax arrays may alias them).  After each
+    block, ``after(state)`` checks ``state_is_finite``:
+
+      * finite -> re-snapshot, reset the retry counter, return
+        ``(state, True)``;
+      * non-finite -> restore the snapshot, fold a retry salt into its
+        rng (the retried block draws a fresh cohort/batch/fault
+        schedule), bump the retry counter, return ``(restored, False)``.
+        More than ``max_retries`` CONSECUTIVE failed retries raises
+        RuntimeError -- a run that diverges without faults should die
+        loudly, not loop.
+
+    ``place_state`` (a mesh placement's, optional) re-pins the restored
+    snapshot to its sharded layout.  ``rollbacks`` counts total
+    rollbacks for the train log."""
+
+    def __init__(self, state, max_retries: int = 3, place_state=None):
+        self.max_retries = int(max_retries)
+        self.place_state = place_state
+        self.retries = 0
+        self.rollbacks = 0
+        self._snapshot(state)
+
+    def _snapshot(self, state) -> None:
+        self._good = tmap(lambda t: np.array(t, copy=True), state)
+
+    def _restore(self):
+        state = tmap(jnp.asarray, self._good)
+        state["rng"] = jax.random.fold_in(
+            state["rng"].astype(jnp.uint32),
+            _RETRY_SALT + self.retries)
+        if self.place_state is not None:
+            state = self.place_state(state)
+        return state
+
+    def after(self, state):
+        """``(state, ok)``: the state to continue from, and whether the
+        block's result was accepted (False = rolled back)."""
+        if state_is_finite(state):
+            self.retries = 0
+            self._snapshot(state)
+            return state, True
+        self.rollbacks += 1
+        self.retries += 1
+        if self.retries > self.max_retries:
+            raise RuntimeError(
+                f"RollbackGuard: global model still non-finite after "
+                f"{self.max_retries} rollback retries -- divergence is "
+                "not transient; check eta/faults config")
+        return self._restore(), False
 
 
 def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,
@@ -110,7 +204,7 @@ def run_rounds(state, round_fn, k_rounds: int, eval_fn=None,
 
 def run_blocks(state, make_block, k_rounds: int, block_size: int,
                eval_fn=None, log=None, on_block=None,
-               first_round: int = 0):
+               first_round: int = 0, guard=None):
     """Drive ``k_rounds`` in ceil(k_rounds / block_size) scan-compiled
     blocks (``engine.make_block_fn``); returns (state, history) with the
     same per-round metric records as ``run_rounds`` -- the trajectory is
@@ -126,7 +220,14 @@ def run_blocks(state, make_block, k_rounds: int, block_size: int,
     is the checkpoint hook -- called after each block with the live state.
     ``log`` receives each per-round record, once per round, after its
     block completes.  ``first_round`` offsets the record numbering (a
-    resumed run restoring at round s passes ``first_round=s``)."""
+    resumed run restoring at round s passes ``first_round=s``).
+
+    ``guard`` (a ``RollbackGuard``) makes the drive crash-safe: after
+    each block the global model is checked for divergence; a non-finite
+    block is DISCARDED -- the guard hands back the last good state with
+    a reseeded rng, a rollback record goes to ``log``, and the same
+    rounds re-run (``done`` does not advance), bounded by the guard's
+    retry counter."""
     if block_size < 1:
         raise ValueError(f"block_size must be >= 1, got {block_size}")
     history = []
@@ -137,6 +238,14 @@ def run_blocks(state, make_block, k_rounds: int, block_size: int,
         if size not in fns:
             fns[size] = make_block(size)
         state, stacked = fns[size](state)
+        if guard is not None:
+            state, ok = guard.after(state)
+            if not ok:
+                if log is not None:
+                    log({"round": first_round + done + size,
+                         "rollback": 1.0,
+                         "rollbacks": float(guard.rollbacks)})
+                continue
         stacked = {k: np.asarray(v) for k, v in stacked.items()}
         recs = [{"round": first_round + done + r + 1,
                  **{k: float(v[r]) for k, v in stacked.items()}}

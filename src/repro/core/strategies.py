@@ -82,6 +82,48 @@ def tree_weighted_mean(tree: Pytree, w: jax.Array) -> Pytree:
                                         axes=(0, 0)), tree)
 
 
+class LocalWeights:
+    """A SHARD-LOCAL weight vector for the mesh placement's screened
+    aggregation: ``w`` holds only this shard's cohort lanes (length
+    m / axis_size under shard_map), ``m`` is the GLOBAL cohort size.
+
+    The replicated-weights path (``weights`` as a plain (m,) array, the
+    async staleness discounts) normalizes shard-locally because every
+    shard holds the full vector.  Screening weights are born per-lane
+    INSIDE the shard (``faults.screen_upload``), so no shard knows the
+    global weight sum up front -- ``engine._psum_mean_fn`` bundles the
+    local sum into the round's single psum and records the global sum
+    here (``set_global_sum``) for Scaffold's weight-normalized
+    participation.  Deliberately NOT a pytree node: it rides kwargs, not
+    operands."""
+
+    __slots__ = ("w", "m", "_sum")
+
+    def __init__(self, w: jax.Array, m: int):
+        self.w = jnp.asarray(w, jnp.float32)
+        self.m = int(m)
+        self._sum = None
+
+    def set_global_sum(self, s: jax.Array) -> None:
+        self._sum = s
+
+    def global_sum(self) -> jax.Array:
+        if self._sum is not None:
+            return self._sum
+        return self.w.sum()  # 1-shard case: local IS global
+
+
+def weight_mass(weights) -> Tuple[jax.Array, int]:
+    """``(sum of weights, cohort size m)`` for either weights flavor --
+    the two numbers Scaffold's p_eff participation scaling needs.  Plain
+    (m,) arrays (replicated staleness discounts) sum shard-locally;
+    ``LocalWeights`` answers with the psum-reduced global sum."""
+    if isinstance(weights, LocalWeights):
+        return weights.global_sum(), weights.m
+    w = jnp.asarray(weights, jnp.float32)
+    return w.sum(), w.shape[0]
+
+
 def resolve_mean(mean_fn, weights):
     """The cohort mean an ``aggregate`` reduces its uploads with: the
     caller-supplied ``mean_fn`` when given (the mesh placement's
@@ -92,13 +134,21 @@ def resolve_mean(mean_fn, weights):
     round's single psum), so staleness-discounted aggregation stays a
     one-collective round on the mesh.  ``mean_fn`` without ``weights``
     is called with no kwarg at all -- the uniform mesh path stays
-    bit-for-bit what it was."""
+    bit-for-bit what it was.
+
+    ``weights`` may also be a ``LocalWeights`` (the mesh placement's
+    shard-local screening weights): with a ``mean_fn`` it is passed
+    through whole (``_psum_mean_fn`` owns the partial-sum + psum
+    lowering); without one (the vmap placement never builds it, but unit
+    tests may) the raw vector feeds the plain weighted mean."""
     if mean_fn is not None:
         if weights is not None:
             return lambda tree: mean_fn(tree, weights=weights)
         return mean_fn
     if weights is None:
         return tree_mean0
+    if isinstance(weights, LocalWeights):
+        return lambda tree: tree_weighted_mean(tree, weights.w)
     return lambda tree: tree_weighted_mean(tree, weights)
 
 
@@ -293,13 +343,15 @@ class Scaffold(Strategy):
         # discounted share, padding lanes contribute nothing.  The
         # all-zero-weight guard mirrors tree_weighted_mean's: fall back
         # to the uniform p rather than zeroing the update the uniform
-        # mean just computed.
+        # mean just computed.  Screened lanes (faults layer) arrive as a
+        # LocalWeights whose global sum the mean_fn above just psum-ed:
+        # p_eff then scales by the SURVIVING mass, so a screened-out
+        # upload credits the server c with nothing -- same formula, one
+        # weight_mass accessor for both flavors.
         if weights is None:
             p_eff = p
         else:
-            w = jnp.asarray(weights, jnp.float32)
-            m = w.shape[0]
-            s = w.sum()
+            s, m = weight_mass(weights)
             p_eff = p * jnp.where(s > 0, s, float(m)) / m
         c = _axpy(p_eff, dc, server_state["c"])
         return x, {"c": c}, {}

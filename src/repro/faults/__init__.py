@@ -1,0 +1,9 @@
+"""Client fault injection, upload screening, and rng-salted schedules."""
+from repro.faults.inject import (CORRUPT_MODES, FaultConfig, corrupt_payload,
+                                 fault_draws, fault_round_keys, make_faults,
+                                 screen_upload, wire_corruptor)
+
+__all__ = [
+    "CORRUPT_MODES", "FaultConfig", "corrupt_payload", "fault_draws",
+    "fault_round_keys", "make_faults", "screen_upload", "wire_corruptor",
+]

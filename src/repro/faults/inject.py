@@ -1,0 +1,274 @@
+"""Deterministic client fault injection + server-side upload screening.
+
+The fault model mirrors the comm layer's rng contract: every per-round,
+per-client fault draw derives from the round's batch key through a
+``fold_in`` salt -- a pure function of an existing key, consuming nothing
+from the round stream -- so turning faults on perturbs neither the cohort
+sample nor the batch draws, and ``fault_rate=0`` configs trace the exact
+no-fault program (``FaultConfig.active`` gates the whole layer out
+statically).
+
+Fault classes (ISSUE 7 / DESIGN.md §10):
+
+  * dropouts       -- the client never uploads; its lane is screened to
+                      zero weight AND zero value, its client/pms/ef rows
+                      revert to their pre-round state.
+  * corrupted      -- the upload arrives damaged: non-finite (nan/inf),
+    uploads           Byzantine (sign-flip / scale), or bit-flips applied
+                      to the compressed WIRE buffer (composing with
+                      ``repro.comm``).
+  * stragglers     -- async-only deadline faults (``deadline``): a
+                      dispatch whose simulated finish time exceeds the
+                      deadline never delivers (``async_rounds``).
+
+Screening is NOT a second collective: ``screen_upload`` runs inside the
+per-client lane (shard-local under the mesh placement), emits a per-lane
+weight in [0, 1] -- 0 for dropped/non-finite lanes, a clip scale for
+over-norm ones -- and ZEROES the values of every zero-weight lane so a
+NaN can never ride the psum (0 * NaN = NaN otherwise).  The engine lowers
+the weights into the round's single cross-client psum via
+``strategies.LocalWeights`` / ``engine._psum_mean_fn``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# fold_in salt deriving the fault layer's per-round key from k_batch --
+# same contract as engine._COMM_SALT (0xC0111): a pure function of an
+# existing key, so fault schedules are deterministic AND adding faults
+# never perturbs the cohort/batch/comm streams.
+_FAULT_SALT = 0xFA017
+
+CORRUPT_MODES = ("nan", "inf", "signflip", "scale", "bitflip")
+
+_UINT_OF_SIZE = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Per-client per-round fault probabilities + screening knobs.
+
+    ``drop``/``corrupt`` are per-client per-round probabilities (a client
+    cannot be both: corruption is drawn from the survivors).  ``deadline``
+    (simulated time units, async regime only) marks dispatches whose
+    finish time exceeds it as timed out.  ``clip_norm`` > 0 enables
+    server-side upload-norm clipping (screening, not injection: it is
+    applied to every upload, faulty or not)."""
+
+    drop: float = 0.0
+    corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    corrupt_scale: float = 100.0   # 'scale' mode multiplier
+    bitflip_frac: float = 1e-3     # 'bitflip' mode: fraction of elements
+    deadline: float = 0.0          # async straggler deadline (0 = off)
+    clip_norm: float = 0.0         # upload L2-norm clip (0 = off)
+
+    def __post_init__(self):
+        for f in ("drop", "corrupt"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultConfig.{f}={v} not in [0, 1]")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(
+                f"corrupt_mode {self.corrupt_mode!r} not in {CORRUPT_MODES}")
+        if self.deadline < 0 or self.clip_norm < 0:
+            raise ValueError("deadline / clip_norm must be >= 0")
+        if not 0.0 <= self.bitflip_frac <= 1.0:
+            raise ValueError("bitflip_frac must be in [0, 1]")
+
+    @property
+    def active(self) -> bool:
+        """True when the SYNC fault layer changes the round program.
+        ``deadline`` alone is async-only and keeps the sync trace
+        untouched; the engine normalizes inactive configs to ``None`` so
+        fault_rate=0 is bitwise-equal to the no-fault trace."""
+        return self.drop > 0 or self.corrupt > 0 or self.clip_norm > 0
+
+    @property
+    def spec(self) -> str:
+        """Canonical ``--faults`` spec string (checkpoint metadata: two
+        configs match iff their specs match)."""
+        d = FaultConfig()
+        parts = []
+        if self.drop != d.drop:
+            parts.append(f"drop:{self.drop:g}")
+        if self.corrupt != d.corrupt:
+            parts.append(f"corrupt:{self.corrupt:g}")
+        if self.corrupt_mode != d.corrupt_mode:
+            parts.append(f"mode:{self.corrupt_mode}")
+        if self.corrupt_scale != d.corrupt_scale:
+            parts.append(f"scale:{self.corrupt_scale:g}")
+        if self.bitflip_frac != d.bitflip_frac:
+            parts.append(f"bitflip:{self.bitflip_frac:g}")
+        if self.deadline != d.deadline:
+            parts.append(f"deadline:{self.deadline:g}")
+        if self.clip_norm != d.clip_norm:
+            parts.append(f"clip:{self.clip_norm:g}")
+        return ",".join(parts) if parts else "none"
+
+
+def make_faults(spec: Optional[str], clip_norm: float = 0.0
+                ) -> Optional[FaultConfig]:
+    """Parse a ``--faults`` spec ('drop:0.2,corrupt:0.05,mode:nan,
+    deadline:3.5,...') into a FaultConfig; 'none'/''/None with no
+    clip_norm -> None (the engine's fault-free fast path)."""
+    kw: Dict[str, Any] = {}
+    if spec and spec != "none":
+        for tok in spec.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            if ":" not in tok:
+                raise ValueError(f"--faults token {tok!r}: want key:value")
+            k, v = tok.split(":", 1)
+            k = k.strip()
+            try:
+                key, cast = {
+                    "drop": ("drop", float),
+                    "corrupt": ("corrupt", float),
+                    "mode": ("corrupt_mode", str),
+                    "scale": ("corrupt_scale", float),
+                    "bitflip": ("bitflip_frac", float),
+                    "deadline": ("deadline", float),
+                    "clip": ("clip_norm", float),
+                }[k]
+            except KeyError:
+                raise ValueError(f"--faults: unknown key {k!r}") from None
+            kw[key] = cast(v.strip())
+    if clip_norm:
+        kw["clip_norm"] = float(clip_norm)
+    if not kw:
+        return None
+    cfg = FaultConfig(**kw)
+    if not cfg.active and cfg.deadline == 0:
+        return None
+    return cfg
+
+
+def fault_round_keys(k_batch, m: int) -> jax.Array:
+    """Per-cohort-lane fault keys, derived from (not consuming) the
+    round's batch key -- one definition for every placement and block
+    size, so the fault schedule is a pure function of (seed, round)."""
+    return jax.random.split(jax.random.fold_in(k_batch, _FAULT_SALT), m)
+
+
+def fault_draws(cfg: FaultConfig, fkey) -> Tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+    """One lane's fault draw: ``(dropped, corrupted, k_payload)``.
+    Corruption is drawn from the drop survivors (a dropped client has no
+    upload to corrupt); ``k_payload`` seeds the payload damage."""
+    k_drop, k_cor, k_pay = jax.random.split(fkey, 3)
+    dropped = jax.random.uniform(k_drop, ()) < cfg.drop
+    corrupted = jnp.logical_and(
+        jnp.logical_not(dropped),
+        jax.random.uniform(k_cor, ()) < cfg.corrupt)
+    return dropped, corrupted, k_pay
+
+
+def _bitflip_array(t: jax.Array, key, frac: float, gate) -> jax.Array:
+    """Flip one random bit in ~``frac`` of ``t``'s elements (when ``gate``
+    is true): bitcast to the same-width uint, XOR a random single-bit
+    mask on the hit elements, bitcast back.  Models transport-level wire
+    damage -- f32 exponent hits produce huge/non-finite values, which is
+    the point."""
+    nbits = t.dtype.itemsize * 8
+    ut = _UINT_OF_SIZE[t.dtype.itemsize]
+    k_hit, k_bit = jax.random.split(key)
+    hit = jax.random.uniform(k_hit, t.shape) < frac
+    bit = jax.random.randint(k_bit, t.shape, 0, nbits, dtype=jnp.int32)
+    mask = (jnp.ones((), ut) << bit.astype(ut)).astype(ut)
+    raw = jax.lax.bitcast_convert_type(t, ut)
+    flipped = jax.lax.bitcast_convert_type(raw ^ mask, t.dtype)
+    take = jnp.logical_and(gate, hit)
+    return jnp.where(take, flipped, t)
+
+
+def corrupt_payload(cfg: FaultConfig, upload: Pytree, corrupted,
+                    key) -> Pytree:
+    """Apply the configured non-wire corruption to one lane's (dense,
+    decompressed) upload when ``corrupted`` is true.  'bitflip' here is
+    the no-compressor fallback (with a compressor the flip targets the
+    wire buffer via ``wire_corruptor``)."""
+    mode = cfg.corrupt_mode
+    if mode in ("nan", "inf"):
+        v = float("nan") if mode == "nan" else float("inf")
+        return jax.tree.map(
+            lambda t: jnp.where(corrupted, jnp.full_like(t, v), t), upload)
+    if mode == "signflip":
+        return jax.tree.map(
+            lambda t: jnp.where(corrupted, -t, t), upload)
+    if mode == "scale":
+        return jax.tree.map(
+            lambda t: jnp.where(
+                corrupted,
+                (cfg.corrupt_scale * t.astype(jnp.float32)).astype(t.dtype),
+                t), upload)
+    # bitflip (dense fallback): per-leaf keys so flips are independent
+    leaves, treedef = jax.tree_util.tree_flatten(upload)
+    out = [_bitflip_array(t, jax.random.fold_in(key, i), cfg.bitflip_frac,
+                          corrupted)
+           for i, t in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def wire_corruptor(cfg: FaultConfig, corrupted, key
+                   ) -> Optional[Callable[[jax.Array], jax.Array]]:
+    """Single-buffer corruption hook for ``Compressor.roundtrip``: only
+    'bitflip' targets the wire representation (the compressed codes);
+    the Byzantine/non-finite modes damage the decoded payload instead
+    (``corrupt_payload``)."""
+    if cfg.corrupt_mode != "bitflip":
+        return None
+
+    def flip(buf: jax.Array) -> jax.Array:
+        return _bitflip_array(buf, key, cfg.bitflip_frac, corrupted)
+
+    return flip
+
+
+def screen_upload(cfg: FaultConfig, upload: Pytree, dropped
+                  ) -> Tuple[Pytree, jax.Array, Dict[str, jax.Array]]:
+    """Server-side screening of one lane: ``(clean_upload, weight,
+    fault_metrics)``.
+
+    * non-finite detection: any NaN/Inf leaf -> weight 0;
+    * dropped lanes -> weight 0 (no upload exists);
+    * ``clip_norm`` > 0: over-norm uploads are SCALED down to the clip
+      (weight in (0, 1]), standard norm clipping against Byzantine
+      magnitude attacks;
+    * every zero-weight lane's VALUES are zeroed too -- the weighted mean
+      multiplies by the weight, and 0 * NaN would still be NaN inside the
+      psum.
+
+    Shard-local by construction (per-lane math only): the engine lowers
+    the resulting (m,) weight vector into the round's single psum."""
+    leaves = jax.tree.leaves(upload)
+    finite = jnp.asarray(True)
+    for t in leaves:
+        finite = jnp.logical_and(
+            finite, jnp.all(jnp.isfinite(t.astype(jnp.float32))))
+    ok = jnp.logical_and(finite, jnp.logical_not(dropped))
+    if cfg.clip_norm > 0:
+        sq = sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
+                 for t in leaves)
+        # NaN norms are gated by ok=False below; the max keeps the rsqrt
+        # finite for all-zero uploads
+        scale = jnp.minimum(
+            1.0, cfg.clip_norm * jax.lax.rsqrt(jnp.maximum(sq, 1e-30)))
+    else:
+        scale = jnp.asarray(1.0, jnp.float32)
+    w = jnp.where(ok, scale, 0.0).astype(jnp.float32)
+    zero_gate = jnp.logical_not(ok)
+    clean = jax.tree.map(
+        lambda t: jnp.where(zero_gate, jnp.zeros_like(t), t), upload)
+    fm = {
+        "screened": 1.0 - ok.astype(jnp.float32),  # lanes w/ zero weight
+        "dropped": dropped.astype(jnp.float32),
+    }
+    return clean, w, fm

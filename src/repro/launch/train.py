@@ -54,6 +54,23 @@ simulated time, so compression shortens the straggler queue:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
       --block-rounds 4 --batch 2 --seq 64 --compress topk:0.25
+
+``--faults drop:P,corrupt:P[,mode:M,...]`` and ``--clip-norm C``
+(engine placements) inject deterministic per-client faults and screen
+them server-side (repro/faults): dropped/non-finite uploads become
+zero-weight lanes inside the round's single psum, and records report
+per-round ``screened``/``dropped`` counts.  With ``--ckpt-dir`` the
+driver is crash-safe: a non-finite global model at a round/block
+boundary rolls back to the last good state and retries with a reseeded
+schedule (``--max-retries`` bounds it).  ``--regime async`` instead
+takes ``--faults deadline:T``: dispatches finishing after T simulated
+time units never deliver.  Resumed runs re-validate the checkpoint's
+``compress``/``faults`` metadata against the CLI and fail fast on
+mismatch:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
+      --batch 2 --seq 64 --faults drop:0.2,corrupt:0.05 --clip-norm 10
 """
 from __future__ import annotations
 
@@ -69,11 +86,12 @@ from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
 from repro.comm import make_compressor, uplink_bytes_per_round
 from repro.configs import get_config, list_configs
-from repro.core import (AsyncSimConfig, STRATEGIES, SimConfig,
-                        init_async_state, init_sim_state,
+from repro.core import (AsyncSimConfig, RollbackGuard, STRATEGIES,
+                        SimConfig, init_async_state, init_sim_state,
                         make_async_round_fn, make_block_fn,
                         make_global_eval, make_placement, make_round_fn,
                         make_round_step, run_blocks)
+from repro.faults import make_faults
 from repro.core.federated import make_lm_grad_fn
 from repro.data import lm_client_batch, make_federated_lm
 from repro.models import init_model, transformer
@@ -102,18 +120,32 @@ def _ckpt_tree(s):
             s.get("ef", {}))
 
 
-def _restore_state(state, args):
+def _restore_state(state, args, expect=None):
     """Load the latest checkpoint (if any) into ``state`` in place;
     returns ``(resume_round, meta)``.  Counter keys are the caller's job:
     the shared tree carries only what ``_ckpt_tree`` names, and any
     regime-specific counters (the async clock/version) travel in the
-    checkpoint's metadata dict."""
+    checkpoint's metadata dict.
+
+    ``expect`` ({key: canonical value}) re-validates the restored run's
+    configuration against the CLI: a checkpoint written under a
+    different ``compress``/``faults`` config fails fast instead of
+    silently mixing EF/fault state into a mismatched trajectory.
+    Legacy checkpoints without the keys restore unchecked."""
     if not args.ckpt_dir:
         return 0, {}
     path = latest_checkpoint(args.ckpt_dir)
     if not path:
         return 0, {}
     tree, meta = restore_checkpoint(path, _ckpt_tree(state))
+    for key, want in (expect or {}).items():
+        have = meta.get(key)
+        if have is not None and str(have) != str(want):
+            raise SystemExit(
+                f"checkpoint {path} was written with {key}={have!r} but "
+                f"this run requests {key}={want!r}: resuming would mix "
+                "incompatible error-feedback/fault state -- rerun with "
+                f"matching flags or a fresh --ckpt-dir")
     (state["x"], state["clients"], state["pms"], state["server"],
      state["rng"], ef) = tree
     if jax.tree.leaves(ef):
@@ -123,25 +155,47 @@ def _restore_state(state, args):
 
 
 def _drive_rounds(state, round_fn, args, start: int, rec_extra=None,
-                  meta_fn=None):
+                  meta_fn=None, base_meta=None, guard=None):
     """The shared round loop: JSON line per round, periodic + final
     checkpoints.  One copy so every regime inherits identical restore/
     save/print semantics.  ``meta_fn(state) -> dict`` supplies extra
-    checkpoint metadata (the async regime's simulated clock/version)."""
+    checkpoint metadata (the async regime's simulated clock/version);
+    ``base_meta`` is static metadata stamped into every save (the
+    compress/faults config the resume path re-validates).
+
+    ``guard`` (core.RollbackGuard) makes the loop crash-safe: a round
+    that leaves the global model non-finite is DISCARDED -- the guard
+    restores the last good state with a reseeded rng, a rollback record
+    is printed, and the same round re-runs (bounded by the guard's retry
+    counter)."""
     t0 = time.time()
 
     def _save(step):
+        meta = dict(base_meta or {})
+        if meta_fn:
+            meta.update(meta_fn(state))
         save_checkpoint(args.ckpt_dir, step, _ckpt_tree(state),
-                        metadata=meta_fn(state) if meta_fn else None)
+                        metadata=meta or None)
 
-    for k in range(start, args.rounds):
+    k = start
+    while k < args.rounds:
         state, metrics = round_fn(state)
+        if guard is not None:
+            state, ok = guard.after(state)
+            if not ok:
+                print(json.dumps({"round": k + 1, "rollback": 1.0,
+                                  "rollbacks": guard.rollbacks}),
+                      flush=True)
+                continue
         rec = {"round": k + 1, **(rec_extra or {}),
                **{m: float(v) for m, v in metrics.items()},
                "elapsed_s": round(time.time() - t0, 2)}
+        if guard is not None:
+            rec["rollbacks"] = guard.rollbacks
         print(json.dumps(rec), flush=True)
-        if args.ckpt_dir and (k + 1) % args.ckpt_every == 0:
-            _save(k + 1)
+        k += 1
+        if args.ckpt_dir and k % args.ckpt_every == 0:
+            _save(k)
     if args.ckpt_dir:
         _save(args.rounds)
     return 0
@@ -152,6 +206,7 @@ def run_async(cfg, strategy, args):
     global model, staleness-discounted aggregation."""
     _require_token_arch(cfg, args.arch, "--regime async")
     compressor = make_compressor(args.compress)
+    faults = make_faults(args.faults)
     placement = make_placement(args.placement) if args.placement else None
     acfg = AsyncSimConfig(
         n_clients=args.clients, m_concurrent=args.concurrent,
@@ -169,13 +224,17 @@ def run_async(cfg, strategy, args):
                              placement=placement)
     round_fn = make_async_round_fn(acfg, strategy, grad_fn, data,
                                    compressor=compressor,
-                                   placement=placement)
+                                   placement=placement, faults=faults)
 
     # checkpoints land at aggregation boundaries; in-flight slots/buffer
     # are dropped, so a restart redispatches -- but the simulated clock
     # and model version persist in the checkpoint metadata: sim_time and
-    # the staleness reference never jump backward across restarts
-    start, meta = _restore_state(state, args)
+    # the staleness reference never jump backward across restarts.  The
+    # canonical compress/faults specs are stamped into every save and
+    # re-validated on restore (fail fast over silent config mixing).
+    cfg_meta = {"compress": compressor.name if compressor else "none",
+                "faults": faults.spec if faults else "none"}
+    start, meta = _restore_state(state, args, expect=cfg_meta)
     state["round"] = start
     state["version"] = int(meta.get("version", start))
     state["t"] = float(meta.get("t", 0.0))
@@ -186,7 +245,8 @@ def run_async(cfg, strategy, args):
                    "uplink_bytes_per_round": uplink_bytes_per_round(
                        compressor, strategy, x, acfg.buffer_size)},
         meta_fn=lambda s: {"t": float(s["t"]),
-                           "version": int(s["version"])})
+                           "version": int(s["version"])},
+        base_meta=cfg_meta)
 
 
 def _make_lm_eval(cfg, args):
@@ -222,6 +282,11 @@ def run_engine(cfg, strategy, args):
     _require_token_arch(cfg, args.arch, "--placement")
     placement = make_placement(args.placement)
     compressor = make_compressor(args.compress)
+    faults = make_faults(args.faults, clip_norm=args.clip_norm)
+    if faults is not None and not faults.active:
+        raise SystemExit("--faults deadline:T is the async regime's "
+                         "straggler model: pass --regime async (the "
+                         "synchronous engine has no simulated clock)")
     m = args.sampled or args.clients
     sim = SimConfig(n_clients=args.clients, m_sampled=m, tau=args.tau,
                     batch_size=args.batch, seed=args.seed)
@@ -236,12 +301,22 @@ def run_engine(cfg, strategy, args):
     comm_extra = {"compress": args.compress,
                   "uplink_bytes_per_round": uplink_bytes_per_round(
                       compressor, strategy, x, m)}
+    if faults is not None:
+        comm_extra["faults"] = faults.spec
+    cfg_meta = {"compress": compressor.name if compressor else "none",
+                "faults": faults.spec if faults else "none"}
 
-    start, _ = _restore_state(state, args)
+    start, _ = _restore_state(state, args, expect=cfg_meta)
     if start:
         state["round"] = jnp.asarray(start, jnp.int32)
         # restored arrays are host-loaded: re-place on the mesh
         state = placement.place_state(state)
+
+    # crash-safe recovery under injected faults: snapshot the (possibly
+    # restored) starting state, roll back + reseed on divergence
+    guard = RollbackGuard(state, max_retries=args.max_retries,
+                          place_state=placement.place_state) \
+        if faults is not None else None
 
     if args.block_rounds:
         t0 = time.time()
@@ -264,23 +339,28 @@ def run_engine(cfg, strategy, args):
             mark = (start + done) // args.ckpt_every
             if mark > ckpt_mark[0]:
                 ckpt_mark[0] = mark
-                save_checkpoint(args.ckpt_dir, start + done, _ckpt_tree(s))
+                save_checkpoint(args.ckpt_dir, start + done, _ckpt_tree(s),
+                                metadata=cfg_meta)
 
         state, _ = run_blocks(
             state, lambda size: make_block_fn(
                 sim, strategy, grad_fn, data, block_size=size,
-                placement=placement, compressor=compressor),
+                placement=placement, compressor=compressor,
+                faults=faults),
             args.rounds - start, args.block_rounds, eval_fn=eval_fn,
-            log=log, on_block=on_block, first_round=start)
+            log=log, on_block=on_block, first_round=start, guard=guard)
         if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, args.rounds, _ckpt_tree(state))
+            save_checkpoint(args.ckpt_dir, args.rounds, _ckpt_tree(state),
+                            metadata=cfg_meta)
         return 0
 
     round_fn = make_round_fn(sim, strategy, grad_fn, data,
-                             placement=placement, compressor=compressor)
+                             placement=placement, compressor=compressor,
+                             faults=faults)
     return _drive_rounds(state, round_fn, args, start,
                          rec_extra={"placement": placement.name,
-                                    **comm_extra})
+                                    **comm_extra},
+                         base_meta=cfg_meta, guard=guard)
 
 
 def main(argv=None):
@@ -351,6 +431,25 @@ def main(argv=None):
                     help="async: uplink bytes per simulated-time unit; "
                          "deliveries pay payload_bytes/bandwidth extra "
                          "(0 = no bandwidth model)")
+    # fault injection + screening (repro.faults); engine placements, and
+    # deadline-only faults on the async regime
+    ap.add_argument("--faults", default="none",
+                    help="fault spec: none | drop:P,corrupt:P[,mode:M,"
+                         "scale:S,bitflip:F,deadline:T] -- per-client "
+                         "per-round dropouts / corrupted uploads "
+                         "(M in nan|inf|signflip|scale|bitflip), all "
+                         "derived deterministically from the round rng; "
+                         "deadline:T is async-only (dispatches finishing "
+                         "after T sim-time units never deliver)")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="server-side upload-norm clip: uploads with "
+                         "l2 norm above C are scaled down inside the "
+                         "aggregation weights (0 = off; engine "
+                         "placements only)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="crash-safe recovery: consecutive rollback+"
+                         "reseed retries of a round/block that left the "
+                         "global model non-finite before giving up")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -379,6 +478,18 @@ def main(argv=None):
                          "queue: pass --regime async (the synchronous "
                          "regimes have no simulated clock; previously "
                          "the flag was silently ignored)")
+    if (args.faults != "none" or args.clip_norm) \
+            and args.regime != "async" and not args.placement:
+        raise SystemExit("--faults/--clip-norm ride the fault-aware "
+                         "paths: pass --placement {vmap,mesh} or "
+                         "--regime async (the legacy fixed-cohort "
+                         "datacenter step has no screening seam)")
+    if args.clip_norm and args.regime == "async":
+        raise SystemExit("--clip-norm screens synchronous cohort uploads "
+                         "inside the weighted mean: the async regime's "
+                         "staleness-discounted buffer has no per-lane "
+                         "weight vector (only --faults deadline:T "
+                         "applies there)")
     if args.regime == "async":
         return run_async(cfg, strategy, args)
     if args.placement:

@@ -19,6 +19,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Pytree = Any
 
+# state-dict keys holding per-client stores (leading n_clients dim):
+# client state, personal models, and the compressor's error-feedback
+# residuals.  One constant so the layout contract (`sim_state_specs`),
+# the checkpoint tree, and the fault/rollback machinery agree on which
+# entries are client-row-indexed.
+CLIENT_STORE_KEYS: Tuple[str, ...] = ("clients", "pms", "ef")
+
 # logical template per trailing-dims, keyed by the leaf's last path key.
 #   O: out-feature  -> model axis (tensor parallel)
 #   I: in-feature   -> fsdp axis (multi-pod ZeRO-style)
@@ -182,7 +189,7 @@ def sim_state_specs(state: Pytree, mesh: Mesh, *, client: str,
     rep = NamedSharding(mesh, P())
     out = {}
     for key, sub in state.items():
-        if key in ("clients", "pms", "ef") and jax.tree.leaves(sub):
+        if key in CLIENT_STORE_KEYS and jax.tree.leaves(sub):
             out[key] = param_specs(sub, mesh, model=model, fsdp=fsdp,
                                    client=client)
         else:

@@ -128,3 +128,42 @@ def test_latest_checkpoint_ordering(tmp_path):
     for step in (3, 12, 7):
         save_checkpoint(d, step, {"a": jnp.zeros(1)})
     assert latest_checkpoint(d).endswith("ckpt_00000012.npz")
+
+
+def test_checkpoint_midwrite_kill_is_atomic(tmp_path, monkeypatch):
+    """A kill at ANY point during save never leaves a loadable-but-
+    truncated checkpoint: the archive is written to a tmp name and
+    renamed over the target only once complete.  Simulated by making
+    np.savez write half the payload then die -- the target must be
+    either absent or the intact PREVIOUS checkpoint, and no stale tmp
+    may survive to trip a later save."""
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    prev = save_checkpoint(d, 1, tree)
+
+    real_savez = np.savez
+
+    def dying_savez(f, **kw):
+        some = {k: kw[k] for k in list(kw)[:1]}
+        real_savez(f, **some)       # partial bytes hit the tmp file
+        raise KeyboardInterrupt("simulated kill mid-write")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    new_tree = {"a": jnp.full((8,), 9.0)}
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(d, 2, new_tree)
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    # target of the killed save never materialized; previous ckpt intact
+    assert not os.path.exists(os.path.join(d, "ckpt_00000002.npz"))
+    assert latest_checkpoint(d) == prev
+    restored, meta = restore_checkpoint(prev, tree)
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    # no stale tmp left behind; the retried save lands cleanly
+    assert not [f for f in os.listdir(d) if ".tmp" in f]
+    p2 = save_checkpoint(d, 2, new_tree)
+    assert latest_checkpoint(d) == p2
+    restored2, _ = restore_checkpoint(p2, new_tree)
+    np.testing.assert_array_equal(np.asarray(restored2["a"]), 9.0)

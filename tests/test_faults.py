@@ -1,0 +1,654 @@
+"""Fault injection + screening + crash-safe recovery (ISSUE 7).
+
+Determinism: the fault schedule is a pure function of (seed, round) --
+identical across the host loop, scan blocks (K in {1, 3}), and the mesh
+placement -- and ``fault_rate=0`` configs trace the exact no-fault
+program (bitwise).  Screening rides the round's single cross-client psum
+(jaxpr-counted for FedDeper AND Scaffold).  Recovery: RollbackGuard
+discards non-finite blocks and retries with a reseeded schedule.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+from repro.comm import make_compressor
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (AsyncSimConfig, FedDeper, MeshPlacement, Scaffold,
+                        SimConfig, RollbackGuard, init_async_state,
+                        init_sim_state, make_async_round_fn, make_block_fn,
+                        make_global_eval, make_round_fn, peek_round_faults,
+                        run_blocks, run_rounds, state_is_finite)
+from repro.data import make_federated_classification
+from repro.faults import (CORRUPT_MODES, FaultConfig, corrupt_payload,
+                          make_faults, screen_upload)
+from repro.launch.mesh import make_client_mesh
+from repro.models import classifier_loss, init_classifier
+
+CFG = MLP_MNIST
+
+DEPER = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+
+
+def apply_loss(p, b):
+    return classifier_loss(CFG, p, b)
+
+
+def grad_fn(p, mb):
+    (l, _), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_classification(n_clients=6, per_client=64,
+                                         split="shards", seed=2)
+
+
+@pytest.fixture(scope="module")
+def data(ds):
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(11))
+
+
+SIM = SimConfig(n_clients=6, m_sampled=4, tau=3, batch_size=16, seed=5)
+
+FAULTS = make_faults("drop:0.25,corrupt:0.25")
+
+COLLECTIVES = {"psum", "psum2", "all_gather", "all_to_all", "ppermute",
+               "pmax", "pmin"}
+
+
+def count_collectives(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVES:
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "eqns"):
+                n += count_collectives(v)
+            elif hasattr(v, "jaxpr"):
+                n += count_collectives(v.jaxpr)
+    return n
+
+
+def _leaves_equal(a, b, keys=("x", "clients", "pms"), atol=0.0, msg=""):
+    for key in keys:
+        for la, lb in zip(jax.tree.leaves(a[key]), jax.tree.leaves(b[key])):
+            if atol:
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=0, atol=atol,
+                                           err_msg=f"{msg}{key}")
+            else:
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb),
+                                              err_msg=f"{msg}{key}")
+
+
+# ----------------------------------------------------------- config/parsing
+
+def test_make_faults_parsing_roundtrip():
+    cfg = make_faults("drop:0.2,corrupt:0.05,mode:signflip,deadline:3.5")
+    assert cfg.drop == 0.2 and cfg.corrupt == 0.05
+    assert cfg.corrupt_mode == "signflip" and cfg.deadline == 3.5
+    # canonical spec string survives a parse->spec->parse cycle
+    assert make_faults(cfg.spec).spec == cfg.spec
+    assert make_faults("none") is None
+    assert make_faults(None) is None
+    assert make_faults("", clip_norm=0.0) is None
+    # clip-only config is active (screening without injection)
+    clip = make_faults("none", clip_norm=10.0)
+    assert clip.active and clip.clip_norm == 10.0
+    # deadline-only: inactive for sync, but kept for the async regime
+    dl = make_faults("deadline:5")
+    assert dl is not None and not dl.active and dl.deadline == 5.0
+
+
+def test_make_faults_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown key"):
+        make_faults("dropp:0.1")
+    with pytest.raises(ValueError, match="key:value"):
+        make_faults("drop=0.1")
+    with pytest.raises(ValueError, match="not in"):
+        make_faults("drop:0.1,mode:garbage")
+    with pytest.raises(ValueError, match="not in"):
+        make_faults("drop:1.5")
+    for mode in CORRUPT_MODES:
+        assert make_faults(f"corrupt:0.1,mode:{mode}") is not None
+
+
+# --------------------------------------------------------- screening units
+
+def test_screen_upload_zeroes_nonfinite_lanes():
+    cfg = FaultConfig(corrupt=0.5)
+    up = {"a": jnp.array([1.0, jnp.nan]), "b": jnp.ones(2)}
+    clean, w, fm = screen_upload(cfg, up, jnp.asarray(False))
+    assert float(w) == 0.0
+    assert float(fm["screened"]) == 1.0 and float(fm["dropped"]) == 0.0
+    # values zeroed too: 0 * NaN would still poison the psum
+    for leaf in jax.tree.leaves(clean):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+def test_screen_upload_dropped_lane():
+    clean, w, fm = screen_upload(FaultConfig(drop=0.5),
+                                 {"a": jnp.ones(3)}, jnp.asarray(True))
+    assert float(w) == 0.0 and float(fm["dropped"]) == 1.0
+    np.testing.assert_array_equal(np.asarray(clean["a"]), 0.0)
+
+
+def test_screen_upload_norm_clip():
+    cfg = FaultConfig(clip_norm=5.0)
+    up = {"a": jnp.full((4,), 5.0)}  # l2 norm = 10
+    clean, w, fm = screen_upload(cfg, up, jnp.asarray(False))
+    np.testing.assert_allclose(float(w), 0.5, rtol=1e-6)
+    assert float(fm["screened"]) == 0.0
+    # under-norm uploads pass with weight exactly 1
+    _, w1, _ = screen_upload(cfg, {"a": jnp.ones(4)}, jnp.asarray(False))
+    assert float(w1) == 1.0
+
+
+def test_corrupt_payload_modes():
+    key = jax.random.PRNGKey(0)
+    up = {"a": jnp.arange(4, dtype=jnp.float32) + 1.0}
+    on, off = jnp.asarray(True), jnp.asarray(False)
+    for mode in CORRUPT_MODES:
+        cfg = FaultConfig(corrupt=1.0, corrupt_mode=mode)
+        out_off = corrupt_payload(cfg, up, off, key)
+        np.testing.assert_array_equal(np.asarray(out_off["a"]),
+                                      np.asarray(up["a"]), err_msg=mode)
+    nan = corrupt_payload(FaultConfig(corrupt=1.0), up, on, key)
+    assert np.all(np.isnan(np.asarray(nan["a"])))
+    sf = corrupt_payload(
+        FaultConfig(corrupt=1.0, corrupt_mode="signflip"), up, on, key)
+    np.testing.assert_array_equal(np.asarray(sf["a"]),
+                                  -np.asarray(up["a"]))
+    sc = corrupt_payload(
+        FaultConfig(corrupt=1.0, corrupt_mode="scale", corrupt_scale=10.0),
+        up, on, key)
+    np.testing.assert_allclose(np.asarray(sc["a"]),
+                               10.0 * np.asarray(up["a"]), rtol=1e-6)
+
+
+# ------------------------------------------------- determinism/equivalence
+
+def test_fault_rate_zero_bitwise_both_placements(data, x0):
+    """An all-default FaultConfig() is normalized out of the trace: the
+    round program -- and therefore the trajectory -- is bitwise the
+    no-fault engine's, on vmap AND on the mesh placement."""
+    inactive = FaultConfig()
+    assert not inactive.active
+    for pl in (None, MeshPlacement(make_client_mesh())):
+        ref, href = run_rounds(
+            init_sim_state(SIM, DEPER, x0, placement=pl),
+            make_round_fn(SIM, DEPER, grad_fn, data, placement=pl), 3)
+        got, hgot = run_rounds(
+            init_sim_state(SIM, DEPER, x0, placement=pl),
+            make_round_fn(SIM, DEPER, grad_fn, data, placement=pl,
+                          faults=inactive), 3)
+        _leaves_equal(ref, got, msg=f"{pl and 'mesh' or 'vmap'}:")
+        for hr, hg in zip(href, hgot):
+            assert set(hr) == set(hg)  # no screened/dropped keys appear
+
+
+def test_fault_schedule_identical_across_drivers(data, x0):
+    """Same seed + FaultConfig -> the host loop and scan blocks (K=1, 3)
+    produce the identical trajectory AND identical per-round
+    screened/dropped counts (the schedule is a pure function of
+    (seed, round), not of the driver)."""
+    ref, hist = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data, faults=FAULTS), 6)
+    sched = [(h["screened"], h["dropped"]) for h in hist]
+    assert sum(s for s, _ in sched) > 0  # the config actually fires
+    for k in (1, 3):
+        st, hb = run_blocks(
+            init_sim_state(SIM, DEPER, x0),
+            lambda size: make_block_fn(SIM, DEPER, grad_fn, data,
+                                       block_size=size, faults=FAULTS),
+            6, k)
+        _leaves_equal(ref, st, msg=f"K={k}:")
+        assert [(h["screened"], h["dropped"]) for h in hb] == sched
+
+
+def test_mesh_screened_round_matches_vmap(data, x0):
+    """Screened mesh rounds match screened vmap rounds: counts exactly,
+    state at 1e-6 (the mesh weighted mean runs dot-then-normalize inside
+    the psum; vmap normalizes outside -- same math, f32 reassociation)."""
+    pl = MeshPlacement(make_client_mesh())
+    faults = make_faults("drop:0.25,corrupt:0.25", clip_norm=10.0)
+    sv, hv = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data, faults=faults), 4)
+    sm, hm = run_rounds(
+        init_sim_state(SIM, DEPER, x0, placement=pl),
+        make_round_fn(SIM, DEPER, grad_fn, data, placement=pl,
+                      faults=faults), 4)
+    _leaves_equal(sv, sm, atol=1e-6, msg="mesh:")
+    for a, b in zip(hv, hm):
+        assert a["screened"] == b["screened"]
+        assert a["dropped"] == b["dropped"]
+
+
+def test_peek_round_faults_matches_execution(data, x0):
+    """``peek_round_faults`` replays the executor's draw: the peeked
+    dropped/corrupted(nan) counts equal the executed round's metrics."""
+    faults = make_faults("drop:0.4,corrupt:0.4")
+    state = init_sim_state(SIM, DEPER, x0)
+    rf = make_round_fn(SIM, DEPER, grad_fn, data, faults=faults,
+                       donate=False)
+    for _ in range(4):
+        dropped, corrupted = peek_round_faults(state, SIM, faults)
+        nd = int(np.asarray(dropped).sum())
+        nc = int(np.asarray(corrupted).sum())
+        state, m = rf(state)
+        assert int(m["dropped"]) == nd
+        # nan corruption always screens; dropped lanes screen too
+        assert int(m["screened"]) == nd + nc
+
+
+def test_drop_all_leaves_global_model_unchanged(data, x0):
+    """drop=1.0: no lane carries mass -- the global model and server
+    state survive the round bitwise, every lane reports dropped."""
+    faults = make_faults("drop:1.0")
+    state = init_sim_state(SIM, DEPER, x0)
+    rf = make_round_fn(SIM, DEPER, grad_fn, data, faults=faults,
+                       donate=False)
+    out, m = rf(state)
+    assert int(m["dropped"]) == SIM.m_sampled
+    assert int(m["screened"]) == SIM.m_sampled
+    for a, b in zip(jax.tree.leaves(state["x"]), jax.tree.leaves(out["x"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # dropped clients' stores revert: nothing trained this round
+    for key in ("clients", "pms"):
+        for a, b in zip(jax.tree.leaves(state[key]),
+                        jax.tree.leaves(out[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+
+
+@pytest.mark.parametrize("strategy", [
+    DEPER, Scaffold(eta=0.05),
+], ids=["feddeper", "scaffold"])
+def test_screened_mesh_round_has_one_collective(strategy, data, x0):
+    """Screening-as-weights keeps the one-psum invariant: the (m,) weight
+    vector, the screened/dropped metrics, and (Scaffold) dv/dc all ride
+    the round's single cross-client psum."""
+    pl = MeshPlacement(make_client_mesh())
+    faults = make_faults("drop:0.2,corrupt:0.05", clip_norm=10.0)
+    rf = make_round_fn(SIM, strategy, grad_fn, data, placement=pl,
+                       faults=faults, donate=False)
+    state = init_sim_state(SIM, strategy, x0, placement=pl)
+    assert count_collectives(jax.make_jaxpr(rf)(state).jaxpr) == 1
+
+
+def test_scaffold_p_eff_sees_screened_mass(data, x0):
+    """Scaffold under drop=1.0 stays finite and keeps x/server unchanged:
+    p_eff picks up the zero screened mass instead of dividing by it."""
+    faults = make_faults("drop:1.0")
+    strat = Scaffold(eta=0.05)
+    state = init_sim_state(SIM, strat, x0)
+    out, m = make_round_fn(SIM, strat, grad_fn, data, faults=faults,
+                           donate=False)(state)
+    assert state_is_finite(out)
+    for a, b in zip(jax.tree.leaves(state["server"]),
+                    jax.tree.leaves(out["server"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------- convergence under nan
+
+def test_nan_corruption_run_finishes_finite_within_2pct(ds, data, x0):
+    """The acceptance run: corrupt=0.05 nan over 24 rounds completes with
+    a finite global model within 2% eval accuracy of the clean run."""
+    test = {k: jnp.asarray(v) for k, v in ds.test.items()}
+    eval_fn = make_global_eval(apply_loss, test)
+    clean, _ = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data), 24)
+    faulty, _ = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data,
+                      faults=make_faults("corrupt:0.05")), 24)
+    assert state_is_finite(faulty)
+    acc_clean = float(eval_fn(clean)["test_acc"])
+    acc_faulty = float(eval_fn(faulty)["test_acc"])
+    assert acc_faulty >= acc_clean - 0.02, (acc_faulty, acc_clean)
+
+
+def test_wire_bitflip_composes_with_q8(data, x0):
+    """'bitflip' + a q8 compressor flips the int8 WIRE codes: damage is
+    bounded by the leaf scale, the run stays finite, and nothing is
+    screened (bounded Byzantine damage is below any non-finite gate)."""
+    faults = make_faults("corrupt:0.5,mode:bitflip,bitflip:0.01")
+    comp = make_compressor("q8")
+    state, hist = run_rounds(
+        init_sim_state(SIM, DEPER, x0, compressor=comp),
+        make_round_fn(SIM, DEPER, grad_fn, data, compressor=comp,
+                      faults=faults), 3)
+    assert state_is_finite(state)
+    assert all("screened" in h for h in hist)
+
+
+def test_nan_corruption_composes_with_topk(data, x0):
+    """nan corruption through the TopK(EF) compressor: the screened lane
+    never reaches the mean, the run stays finite, and the error-feedback
+    store stays finite too (EF reflects what the client sent, pre-wire)."""
+    faults = make_faults("drop:0.25,corrupt:0.25")
+    comp = make_compressor("topk:0.5")
+    state, hist = run_rounds(
+        init_sim_state(SIM, DEPER, x0, compressor=comp),
+        make_round_fn(SIM, DEPER, grad_fn, data, compressor=comp,
+                      faults=faults), 4)
+    assert state_is_finite(state)
+    for leaf in jax.tree.leaves(state["ef"]):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    assert sum(h["screened"] for h in hist) > 0
+
+
+# ----------------------------------------------------------- async deadline
+
+def _acfg(**kw):
+    base = dict(n_clients=8, m_concurrent=4, buffer_size=2, tau=2,
+                batch_size=16, alpha=0.5, delay=5.0,
+                delay_dist="lognormal", delay_sigma=1.5, seed=3)
+    base.update(kw)
+    return AsyncSimConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def adata():
+    ds8 = make_federated_classification(n_clients=8, per_client=64,
+                                        split="shards", seed=1)
+    return {k: jnp.asarray(v) for k, v in ds8.train.items()}
+
+
+def test_async_rejects_sync_fault_classes(adata, x0):
+    with pytest.raises(ValueError, match="only deadline faults"):
+        make_async_round_fn(_acfg(), DEPER, grad_fn, adata,
+                            faults=make_faults("drop:0.2"))
+
+
+def test_async_deadline_below_every_delay_raises(adata, x0):
+    with pytest.raises(ValueError, match="below every client delay"):
+        make_async_round_fn(
+            _acfg(delay_dist="constant", delay=5.0), DEPER, grad_fn,
+            adata, faults=make_faults("deadline:1.0"))
+
+
+def test_async_deadline_drops_stragglers(adata, x0):
+    """A deadline inside the lognormal delay spread: some dispatches time
+    out (metrics['dropped'] accumulates), the run stays finite, and the
+    simulated clock still advances monotonically."""
+    acfg = _acfg()
+    arf = make_async_round_fn(acfg, DEPER, grad_fn, adata,
+                              faults=make_faults("deadline:6.0"))
+    state = init_async_state(acfg, DEPER, x0)
+    dropped, t_prev = 0.0, 0.0
+    for _ in range(8):
+        state, m = arf(state)
+        dropped += m["dropped"]
+        assert state["t"] >= t_prev
+        t_prev = state["t"]
+    assert dropped > 0
+    assert state_is_finite(state)
+
+
+def test_async_huge_deadline_is_noop(adata, x0):
+    """A deadline above every delay never fires: the trajectory is
+    bitwise the no-faults async run's."""
+    acfg = _acfg()
+    ref = init_async_state(acfg, DEPER, x0)
+    arf_ref = make_async_round_fn(acfg, DEPER, grad_fn, adata)
+    got = init_async_state(acfg, DEPER, x0)
+    arf_got = make_async_round_fn(acfg, DEPER, grad_fn, adata,
+                                  faults=make_faults("deadline:1e9"))
+    for _ in range(4):
+        ref, mr = arf_ref(ref)
+        got, mg = arf_got(got)
+        assert mg["dropped"] == 0.0
+    _leaves_equal(ref, got)
+    assert ref["t"] == got["t"] and ref["version"] == got["version"]
+
+
+# ------------------------------------------------------ crash-safe recovery
+
+def _tiny_state(x_val=1.0):
+    return {"x": {"w": jnp.full((2,), x_val)}, "server": {},
+            "clients": {}, "pms": {},
+            "rng": jax.random.PRNGKey(0), "round": jnp.asarray(0)}
+
+
+def test_state_is_finite_checks_x_and_server_only():
+    s = _tiny_state()
+    assert state_is_finite(s)
+    s["x"]["w"] = jnp.array([1.0, jnp.nan])
+    assert not state_is_finite(s)
+    s = _tiny_state()
+    s["clients"] = {"c": jnp.array([jnp.inf])}  # client rows don't count
+    assert state_is_finite(s)
+
+
+def test_rollback_guard_restores_and_reseeds():
+    good = _tiny_state(1.0)
+    guard = RollbackGuard(good, max_retries=3)
+    bad = _tiny_state(float("nan"))
+    bad["rng"] = good["rng"]
+    restored, ok = guard.after(bad)
+    assert not ok and guard.rollbacks == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]["w"]),
+                                  np.asarray(good["x"]["w"]))
+    # the retry draws a DIFFERENT schedule: rng is reseeded, not reused
+    assert not np.array_equal(np.asarray(restored["rng"]),
+                              np.asarray(good["rng"]))
+    # a subsequent good state resets the retry counter and re-snapshots
+    ok_state = _tiny_state(2.0)
+    out, ok = guard.after(ok_state)
+    assert ok and guard.retries == 0 and guard.rollbacks == 1
+
+
+def test_rollback_guard_bounded_retries():
+    guard = RollbackGuard(_tiny_state(1.0), max_retries=2)
+    for _ in range(2):
+        _, ok = guard.after(_tiny_state(float("nan")))
+        assert not ok
+    with pytest.raises(RuntimeError, match="non-finite after 2"):
+        guard.after(_tiny_state(float("nan")))
+
+
+def test_run_blocks_guard_discards_and_retries():
+    """A block that diverges is discarded: run_blocks re-runs the same
+    rounds from the restored state and the history only records accepted
+    rounds (plus the guard's rollback tally)."""
+    calls = {"n": 0}
+
+    def make_block(size):
+        def block(state):
+            calls["n"] += 1
+            poison = calls["n"] == 2  # second block diverges once
+            val = float("nan") if poison else calls["n"]
+            out = dict(state)
+            out["x"] = {"w": jnp.full((2,), val)}
+            return out, {"m": jnp.full((size,), float(calls["n"]))}
+        return block
+
+    logged = []
+    state, hist = run_blocks(_tiny_state(), make_block, 4, 2,
+                             guard=RollbackGuard(_tiny_state(),
+                                                 max_retries=3),
+                             log=logged.append)
+    assert calls["n"] == 3  # 2 accepted blocks + 1 discarded
+    assert [h["round"] for h in hist] == [1, 2, 3, 4]
+    # the discarded block's metrics never reach the history
+    assert [h["m"] for h in hist] == [1.0, 1.0, 3.0, 3.0]
+    assert any("rollback" in rec for rec in logged)
+
+
+def test_guarded_engine_block_recovers(data, x0):
+    """End to end with REAL engine state (device arrays, donated block
+    buffers): one block's output is poisoned to NaN; the guard discards
+    it, restores the snapshot, and the rerun completes all rounds with a
+    finite model."""
+    from repro.core.strategies import tmap
+    calls = {"n": 0}
+
+    def make_block(size):
+        inner = make_block_fn(SIM, DEPER, grad_fn, data, block_size=size)
+
+        def block(state):
+            calls["n"] += 1
+            out, mets = inner(state)
+            if calls["n"] == 2:  # simulate an unscreened divergence
+                out = dict(out)
+                out["x"] = tmap(lambda t: jnp.full_like(t, jnp.nan),
+                                out["x"])
+            return out, mets
+        return block
+
+    guard = RollbackGuard(init_sim_state(SIM, DEPER, x0), max_retries=3)
+    state, hist = run_blocks(init_sim_state(SIM, DEPER, x0), make_block,
+                             6, 2, guard=guard)
+    assert guard.rollbacks == 1
+    assert state_is_finite(state)
+    assert [h["round"] for h in hist] == list(range(1, 7))
+
+
+# ----------------------------------------------------- 4-device emulation
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.paper_models import MLP_MNIST
+    from repro.core import (FedDeper, Scaffold, SimConfig, MeshPlacement,
+                            init_sim_state, make_round_fn, run_rounds)
+    from repro.data import make_federated_classification
+    from repro.faults import FaultConfig, make_faults
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import classifier_loss, init_classifier
+
+    assert jax.local_device_count() == 4
+
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(
+            lambda p, b: classifier_loss(MLP_MNIST, p, b),
+            has_aux=True)(p, mb)
+        return l, g
+
+    ds = make_federated_classification(n_clients=8, per_client=64,
+                                       split="shards", seed=2)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    x0 = init_classifier(MLP_MNIST, jax.random.PRNGKey(11))
+    sim = SimConfig(n_clients=8, m_sampled=4, tau=2, batch_size=16,
+                    seed=5)
+    pl = MeshPlacement(make_client_mesh())
+    faults = make_faults("drop:0.25,corrupt:0.25", clip_norm=10.0)
+
+    strat = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    sv, hv = run_rounds(
+        init_sim_state(sim, strat, x0),
+        make_round_fn(sim, strat, grad_fn, data, faults=faults), 4)
+    sm, hm = run_rounds(
+        init_sim_state(sim, strat, x0, placement=pl),
+        make_round_fn(sim, strat, grad_fn, data, placement=pl,
+                      faults=faults), 4)
+    # the SCHEDULE is placement-independent (exact counts); values meet
+    # the mesh's documented f32 reassociation tolerance
+    for a, b in zip(hv, hm):
+        assert a["screened"] == b["screened"], (a, b)
+        assert a["dropped"] == b["dropped"], (a, b)
+    for key in ("x", "clients", "pms"):
+        for a, b in zip(jax.tree.leaves(sv[key]),
+                        jax.tree.leaves(sm[key])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=1e-6, err_msg=key)
+
+    # fault_rate=0 on a real 4-way axis: bitwise the no-fault trace
+    ref, _ = run_rounds(
+        init_sim_state(sim, strat, x0, placement=pl),
+        make_round_fn(sim, strat, grad_fn, data, placement=pl), 3)
+    got, _ = run_rounds(
+        init_sim_state(sim, strat, x0, placement=pl),
+        make_round_fn(sim, strat, grad_fn, data, placement=pl,
+                      faults=FaultConfig()), 3)
+    for key in ("x", "clients", "pms"):
+        for a, b in zip(jax.tree.leaves(ref[key]),
+                        jax.tree.leaves(got[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=key)
+
+    # one collective per screened round on the 4-device mesh, both
+    # strategies
+    def count(jx, names):
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name in names:
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "eqns"):
+                    n += count(v, names)
+                elif hasattr(v, "jaxpr"):
+                    n += count(v.jaxpr, names)
+        return n
+    names = {"psum", "psum2", "all_gather", "all_to_all", "ppermute"}
+    for s in (strat, Scaffold(eta=0.05)):
+        rf = make_round_fn(sim, s, grad_fn, data, placement=pl,
+                           faults=faults, donate=False)
+        st = init_sim_state(sim, s, x0, placement=pl)
+        assert count(jax.make_jaxpr(rf)(st).jaxpr, names) == 1, s.name
+
+    print("FAULTS_4DEV_OK")
+""")
+
+
+def test_faults_4device_emulation():
+    """4-way client axis: screened mesh rounds match screened vmap rounds
+    (counts exact, state at 1e-6), fault_rate=0 stays bitwise, and the
+    one-psum invariant holds for FedDeper and Scaffold."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True,
+                         env=_SUBPROC_ENV, timeout=560)
+    assert "FAULTS_4DEV_OK" in out.stdout, (out.stdout[-1000:],
+                                            out.stderr[-3000:])
+
+
+# --------------------------------------------------- ckpt config validation
+
+def test_restore_rejects_mismatched_fault_config(tmp_path):
+    """A checkpoint stamped with one compress/faults config refuses to
+    resume a run requesting another (fail fast beats silently mixing
+    EF/fault state); legacy checkpoints without the keys still restore."""
+    import argparse
+    from repro.checkpoint import save_checkpoint
+    from repro.launch.train import _ckpt_tree, _restore_state
+
+    state = {"x": {"w": jnp.ones(2)}, "clients": {}, "pms": {},
+             "server": {}, "rng": jax.random.PRNGKey(0)}
+    args = argparse.Namespace(ckpt_dir=str(tmp_path))
+    save_checkpoint(str(tmp_path), 3, _ckpt_tree(state),
+                    metadata={"compress": "none", "faults": "drop:0.2"})
+    with pytest.raises(SystemExit, match="faults='drop:0.2'"):
+        _restore_state(state, args,
+                       expect={"compress": "none", "faults": "drop:0.5"})
+    # matching config restores
+    start, _ = _restore_state(state, args,
+                              expect={"compress": "none",
+                                      "faults": "drop:0.2"})
+    assert start == 3
+    # legacy checkpoint (no config keys): restored unchecked
+    for f in tmp_path.iterdir():
+        f.unlink()
+    save_checkpoint(str(tmp_path), 5, _ckpt_tree(state))
+    start, _ = _restore_state(state, args,
+                              expect={"compress": "q8",
+                                      "faults": "drop:0.9"})
+    assert start == 5

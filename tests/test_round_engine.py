@@ -263,6 +263,28 @@ def test_bench_schema_strict_keys_and_comm_rows():
                           "uplink_bytes_per_round": 4096}})
 
 
+def test_bench_schema_fault_rows():
+    """Rows carrying a ``faults`` config must track ``screened_per_round``
+    (a non-negative number); fault-free rows must NOT carry it."""
+    from benchmarks.round_engine import validate_bench
+    base = {"us_per_round": 1.0, "peak_bytes": 1024, "config": {}}
+    with pytest.raises(ValueError, match="screened_per_round"):
+        validate_bench({"b": {**base, "config": {"faults": "drop:0.2"}}})
+    with pytest.raises(ValueError, match="screened_per_round"):
+        validate_bench({"b": {**base, "config": {"faults": "drop:0.2"},
+                              "screened_per_round": None}})
+    with pytest.raises(ValueError, match="screened_per_round"):
+        validate_bench({"b": {**base, "config": {"faults": "drop:0.2"},
+                              "screened_per_round": -1.0}})
+    # screened counts on a fault-free row mean the harness mixed up fns
+    with pytest.raises(ValueError, match="no 'faults' spec"):
+        validate_bench({"b": {**base, "screened_per_round": 2.0}})
+    validate_bench({"b": {**base, "config": {"faults": "drop:0.2"},
+                          "screened_per_round": 2.1}})
+    validate_bench({"b": {**base, "config": {"faults": "clip:10"},
+                          "screened_per_round": 0}})
+
+
 def test_bench_speedup_regression_gate():
     """check_speedups: fails only when a smoke ratio drops below tol x
     the tracked ratio; missing rows/ratios are skipped."""
@@ -304,6 +326,15 @@ def test_checked_in_bench_file_is_valid():
     dense_b = obj["feddeper_sync_identity"]["uplink_bytes_per_round"]
     for row in ("feddeper_sync_q8", "feddeper_sync_topk"):
         assert dense_b >= 3.99 * obj[row]["uplink_bytes_per_round"], row
+    # fault row: screening actually fires at drop=0.2/corrupt=0.05, and
+    # the tracked eval accuracy stays within 5pp of the clean reference
+    # (the tested acceptance bound is 2pp over 24 rounds; the tracked
+    # 12-round row gets headroom for timing-protocol noise)
+    frow = obj["feddeper_sync_faults"]
+    assert frow["screened_per_round"] > 0
+    fcfg = frow["config"]
+    assert fcfg["faults"] == "drop:0.2,corrupt:0.05"
+    assert fcfg["eval_acc"] >= fcfg["eval_acc_clean"] - 0.05, fcfg
 
 
 @pytest.mark.slow
