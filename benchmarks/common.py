@@ -11,6 +11,7 @@ from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.paper_models import MLP_MNIST, ClassifierConfig
 from repro.core import (FedAvg, FedDeper, FedProx, Scaffold, SimConfig,
@@ -45,6 +46,50 @@ def build_task(cfg: ClassifierConfig, n_clients: int, seed: int = 0):
     return dict(ds=ds, data=data, test=test, personal=personal,
                 train_flat=train_flat, apply_loss=apply_loss,
                 grad_fn=grad_fn)
+
+
+class SyntheticClientData:
+    """On-demand federated classification rows: the virtual round
+    executor's data source for populations too large to materialize as
+    dense ``(n_clients, per_client, ...)`` arrays.  ``take(idx)``
+    synthesizes the requested clients' rows (class-prototype Gaussians
+    with a skewed per-client label mixture, same family as
+    ``make_federated_classification``) deterministically from
+    ``np.random.SeedSequence([seed, client_id])`` -- a client's rows
+    are identical every time they are drawn, and no population-sized
+    array ever exists, so n=100k costs the same host memory as n=10."""
+
+    def __init__(self, *, input_shape=(784,), num_classes=10,
+                 n_clients=10, per_client=256, noise=4.0, seed=0):
+        self.input_shape = tuple(input_shape)
+        self.num_classes = int(num_classes)
+        self.n_clients = int(n_clients)
+        self.n_rows = int(per_client)
+        self.noise = float(noise)
+        self.seed = int(seed)
+        # prototypes are population-global; the population-sized part
+        # (per-client rows) stays virtual
+        prng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.n_clients]))
+        self._protos = prng.normal(
+            0, 1.0, size=(self.num_classes,) + self.input_shape
+        ).astype(np.float32)
+
+    def _client_rows(self, c: int):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, int(c)]))
+        mix = rng.dirichlet([0.3] * self.num_classes)
+        y = rng.choice(self.num_classes, size=self.n_rows,
+                       p=mix).astype(np.int32)
+        x = (self._protos[y] + rng.normal(
+            0, self.noise,
+            size=(self.n_rows,) + self.input_shape)).astype(np.float32)
+        return x, y
+
+    def take(self, idx):
+        cols = [self._client_rows(c) for c in np.asarray(idx).ravel()]
+        return {"x": np.stack([x for x, _ in cols]),
+                "y": np.stack([y for _, y in cols])}
 
 
 def run_strategy(cfg, task, strategy, *, n, m, tau, rounds, batch=32,

@@ -37,7 +37,16 @@ round engine has:
                           dense fused row (``speedup_vs_dense``); q8 and
                           topk:0.1 price real compressors and track
                           ``uplink_bytes_per_round`` -- the bandwidth
-                          axis of the baseline.
+                          axis of the baseline;
+* ``*_virtual_n{N}``    -- the virtual client store (core/store.py) at
+                          population scales a dense store cannot reach:
+                          only the sampled cohort's rows live on device
+                          (reconstructible backing tier, on-demand
+                          synthetic client data), so ``peak_bytes``
+                          stays O(m) while n grows 100-10000x; the rows
+                          additionally track ``store_bytes`` -- the
+                          host-side backing-tier footprint, O(touched
+                          rows) for the recon tier.
 
 Every run rewrites ``BENCH_round_engine.json`` at the repo root so each
 PR leaves a perf trajectory.  Schema (validated by ``validate_bench``;
@@ -73,13 +82,14 @@ from typing import Dict, Iterable, List, Optional
 import jax
 import numpy as np
 
-from benchmarks.common import build_task, csv_row
+from benchmarks.common import SyntheticClientData, build_task, csv_row
 from repro.comm import make_compressor, uplink_bytes_per_round
 from repro.configs.paper_models import MLP_MNIST
 from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
                         SimConfig, init_async_state, init_sim_state,
                         make_async_round_fn, make_block_fn, make_global_eval,
-                        make_placement, make_round_fn, twin_grad_fn)
+                        make_layout, make_placement, make_round_fn,
+                        state_store_bytes, twin_grad_fn)
 from repro.faults import make_faults
 from repro.core.engine import make_per_client
 from repro.core.strategies import tmap
@@ -152,6 +162,11 @@ class _Prepared:
         self.state, mets = round_fn(state)
         self._note(mets)
         jax.block_until_ready(jax.tree.leaves(self.state["x"])[0])
+        if self.peak_bytes is None:
+            # virtual-store round_fns are host wrappers (no .lower); they
+            # AOT-compile their jitted block on first call and publish
+            # the same temp+output measure as an attribute
+            self.peak_bytes = getattr(self.round_fn, "peak_bytes", None)
         self.best = float("inf")
 
     def _note(self, mets):
@@ -194,25 +209,32 @@ class _Prepared:
 
 
 def _prep_sync(task, x0, scale, strategy, *, donate, twin,
-               placement=None, block=None, compress=None, faults=None):
+               placement=None, block=None, compress=None, faults=None,
+               store=None):
     sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
                     tau=scale["tau"], batch_size=scale["batch"], seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
     pl = make_placement(placement) if placement else None
     comp = make_compressor(compress) if compress else None
     fl = make_faults(faults) if faults else None
+    layout = make_layout(store)
     if block:
         rf = make_block_fn(sim, strategy, grad_fn, task["data"],
                            block_size=block, donate=donate, placement=pl,
-                           compressor=comp, faults=fl)
+                           compressor=comp, faults=fl, layout=layout)
     else:
         rf = make_round_fn(sim, strategy, grad_fn, task["data"],
                            donate=donate, placement=pl, compressor=comp,
-                           faults=fl)
+                           faults=fl, layout=layout)
     cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
                twin_grads=twin, placement=placement or "vmap", **scale)
     if block:
         cfg["block_rounds"] = block
+    if layout.virtual:
+        # virtual rows additionally track store_bytes at the entry level
+        # (validate_bench requires it when config carries a virtual
+        # "store" spec)
+        cfg["store"] = layout.spec
     if faults:
         # fault rows additionally track screened_per_round at the entry
         # level (validate_bench requires it when config carries "faults")
@@ -227,7 +249,7 @@ def _prep_sync(task, x0, scale, strategy, *, donate, twin,
         if hasattr(strategy, k):
             cfg[k] = getattr(strategy, k)
     return _Prepared(rf, init_sim_state(sim, strategy, x0, placement=pl,
-                                        compressor=comp),
+                                        compressor=comp, layout=layout),
                      cfg, rounds_per_call=block or 1, uplink_bytes=uplink)
 
 
@@ -298,7 +320,8 @@ def _prep_async(task, x0, scale, strategy, *, donate, twin,
 # future bench edits fail loudly in the smoke lane instead of silently
 # shipping unvalidated fields
 _ENTRY_KEYS = {"us_per_round", "peak_bytes", "config",
-               "uplink_bytes_per_round", "screened_per_round"}
+               "uplink_bytes_per_round", "screened_per_round",
+               "store_bytes"}
 
 
 def validate_bench(obj) -> None:
@@ -352,6 +375,17 @@ def validate_bench(obj) -> None:
             raise ValueError(
                 f"{name}: screened_per_round on a row whose config has "
                 "no 'faults' spec")
+        if str(entry["config"].get("store", "")).startswith("virtual"):
+            sb = entry.get("store_bytes")
+            if not isinstance(sb, int) or isinstance(sb, bool) or sb <= 0:
+                raise ValueError(
+                    f"{name}: virtual-store rows must track store_bytes "
+                    f"(host backing-tier footprint) as a positive int "
+                    f"(got {sb!r})")
+        elif "store_bytes" in entry:
+            raise ValueError(
+                f"{name}: store_bytes on a row whose config has no "
+                "virtual 'store' spec (dense stores live in peak_bytes)")
 
 
 # regression gate: a smoke ratio may drop to this fraction of its
@@ -360,19 +394,43 @@ def validate_bench(obj) -> None:
 # or a broken block driver (ratio -> <1) trips it
 SPEEDUP_TOL = 0.5
 
+# memory gate: a smoke row's peak_bytes may grow to this multiple of its
+# tracked value before CI fails.  peak_bytes is the compiled
+# executable's STATIC allocation plan -- deterministic, so unlike the
+# timing ratios the tolerance covers layout jitter across jax/XLA
+# versions, not run-to-run noise; a dense store sneaking back into a
+# virtual row (a 10-100x jump at n=1k) clears it by an order of
+# magnitude
+MEM_TOL = 1.5
+
 
 def check_speedups(smoke: Dict, tracked: Dict,
-                   tol: float = SPEEDUP_TOL) -> List[str]:
+                   tol: float = SPEEDUP_TOL,
+                   mem_tol: float = MEM_TOL) -> List[str]:
     """Compare every ``speedup_vs_*`` ratio a smoke run produced against
     the tracked baseline row of the same name: returns failure messages
     for each ratio below ``tol * tracked`` (empty = gate passes).  Rows
     or ratios missing from either side are skipped -- the gate watches
-    regressions of what IS tracked, not coverage."""
+    regressions of what IS tracked, not coverage.
+
+    Also gates MEMORY: when both sides of a row carry an integer
+    ``peak_bytes``, the smoke value must stay at or under ``mem_tol`` x
+    the tracked one -- the live-memory analogue of the timing gate, and
+    the CI tripwire for the virtual store's O(cohort) claim."""
     fails = []
     for name, entry in smoke.items():
         ref = tracked.get(name)
         if not isinstance(ref, dict):
             continue
+        pb, base_pb = entry.get("peak_bytes"), ref.get("peak_bytes")
+        if isinstance(pb, int) and not isinstance(pb, bool) \
+                and isinstance(base_pb, int) and not isinstance(base_pb,
+                                                                bool) \
+                and base_pb > 0 and pb > base_pb * mem_tol:
+            fails.append(
+                f"{name}.peak_bytes: smoke {pb} > ceiling "
+                f"{int(base_pb * mem_tol)} (tracked {base_pb} x "
+                f"mem_tol {mem_tol})")
         for key, val in entry.get("config", {}).items():
             if not key.startswith("speedup_vs_"):
                 continue
@@ -458,6 +516,21 @@ def _benches():
             "sync", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True,
                  faults="drop:0.2,corrupt:0.05")),
+        # the virtual client store (core/store.py) at cross-DEVICE
+        # population scales: n=1k / n=100k clients, m=10 sampled -- the
+        # dense (n, params) store would need 100-10000x the cohort's
+        # device memory, the virtual rows keep peak_bytes pinned at the
+        # n=10 dense row's scale.  The recon backing tier + on-demand
+        # SyntheticClientData mean NOTHING population-sized exists on
+        # host either; store_bytes tracks the O(touched-rows) footprint
+        "feddeper_sync_virtual_n1k": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, store="virtual:recon",
+                 scale=dict(n=1000, m=10, tau=5, batch=32))),
+        "feddeper_sync_virtual_n100k": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, store="virtual:recon",
+                 scale=dict(n=100000, m=10, tau=5, batch=32))),
         "feddeper_async_unfused": (
             "async", FedDeper(fuse_grads=False, **DEPER),
             dict(donate=False, twin=False)),
@@ -531,14 +604,24 @@ def round_engine_rows(quick: bool = True, *,
         # timed window to a whole number of calls (at least one)
         k = opts.get("block", 1)
         n_rounds[name] = max(k, (base // k) * k)
+        row_scale, row_task = scale, task
+        if "scale" in opts:
+            # population-scale rows bring their own n (too large for the
+            # dense build_task arrays): same model/grad_fn, on-demand
+            # synthetic per-client data in place of the (n, Ni, ...) leaves
+            row_scale = opts["scale"]
+            row_task = dict(task, data=SyntheticClientData(
+                input_shape=MLP_MNIST.input_shape,
+                n_clients=row_scale["n"], per_client=256, seed=0))
         if kind == "sync":
-            prepared[name] = _prep_sync(task, x0, scale, strategy,
+            prepared[name] = _prep_sync(row_task, x0, row_scale, strategy,
                                         donate=opts["donate"],
                                         twin=opts["twin"],
                                         placement=opts.get("placement"),
                                         block=opts.get("block"),
                                         compress=opts.get("compress"),
-                                        faults=opts.get("faults"))
+                                        faults=opts.get("faults"),
+                                        store=opts.get("store"))
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
@@ -595,6 +678,10 @@ def round_engine_rows(quick: bool = True, *,
         if "faults" in p.cfg:
             results[name]["screened_per_round"] = \
                 round(p.screened_per_round or 0.0, 4)
+        if "store" in p.cfg:
+            # post-run backing-tier footprint: for the recon tier this is
+            # O(touched rows), the bench's O(cohort)-not-O(n) receipt
+            results[name]["store_bytes"] = state_store_bytes(p.state)
 
     rows = []
     for name, entry in results.items():
@@ -604,6 +691,8 @@ def round_engine_rows(quick: bool = True, *,
                 entry["uplink_bytes_per_round"]
         if "screened_per_round" in entry:
             derived["screened_per_round"] = entry["screened_per_round"]
+        if "store_bytes" in entry:
+            derived["store_bytes"] = entry["store_bytes"]
         pair = _SPEEDUP_PAIRS.get(name)
         if pair and name in pair_ratio:
             speedup = pair_ratio[name]

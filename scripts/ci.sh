@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate.
 #
-#   scripts/ci.sh [--shard unit|multidev|bench|all] [pytest args...]
+#   scripts/ci.sh [--shard unit|multidev|bench|virtual|all] [pytest args...]
 #
 # Shards (each one a lane in .github/workflows/ci.yml):
 #   unit     -- the fast (non-slow) suite;
@@ -14,13 +14,18 @@
 #   bench    -- quick-mode round-engine smoke: schema validation of the
 #               tracked baseline AND the speedup regression gate
 #               (benchmarks.round_engine.check_speedups);
+#   virtual  -- the virtual client store lane: the full dense-vs-virtual
+#               bitwise suite (tests/test_virtual_store.py, including
+#               the bigmem n=100k cohort-footprint smoke) plus the n=1k
+#               virtual bench row, schema-validated and gated on
+#               peak_bytes against the tracked baseline (MEM_TOL);
 #   all      -- everything above (the no-argument default).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 SHARD=all
 if [ "${1:-}" = "--shard" ]; then
-    SHARD="${2:?--shard needs unit|multidev|bench|all}"
+    SHARD="${2:?--shard needs unit|multidev|bench|virtual|all}"
     shift 2
 fi
 
@@ -96,10 +101,53 @@ print(f"ci.sh: bench smoke OK ({BENCH_PATH} schema valid)")
 PY
 }
 
+run_virtual() {
+    # Dense-vs-virtual equivalence suite, including the deselected-by-
+    # default bigmem n=100k smoke (cheap in wall time -- the recon tier
+    # materializes only touched rows -- but population-scale in intent).
+    python -m pytest -x -q -m "" tests/test_virtual_store.py
+    # n=1k virtual bench row: schema (store_bytes required) + the
+    # peak_bytes memory gate against the tracked baseline.
+    python - <<'PY'
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+from benchmarks.round_engine import (BENCH_PATH, check_speedups,
+                                     round_engine_rows, validate_bench)
+
+scratch = None if not BENCH_PATH.exists() else \
+    Path(tempfile.NamedTemporaryFile(suffix=".json", delete=False).name)
+try:
+    rows = round_engine_rows(
+        quick=True, rounds=2, reps=1, out_path=scratch or BENCH_PATH,
+        include=("feddeper_sync_virtual_n1k",))
+    for r in rows:
+        print(r)
+    tracked = json.loads(BENCH_PATH.read_text())
+    validate_bench(tracked)
+    if scratch is not None:
+        smoke = json.loads(scratch.read_text())
+        validate_bench(smoke)
+        fails = check_speedups(smoke, tracked)
+        if fails:
+            print("ci.sh: virtual bench gate FAILED:", file=sys.stderr)
+            for f in fails:
+                print(f"  {f}", file=sys.stderr)
+            sys.exit(1)
+        print("ci.sh: virtual bench memory gate OK")
+finally:
+    if scratch is not None:
+        scratch.unlink(missing_ok=True)
+PY
+}
+
 case "$SHARD" in
 unit)     run_unit "$@" ;;
 multidev) run_multidev ;;
 bench)    run_bench ;;
+virtual)  run_virtual ;;
 all)
     run_unit "$@"
     # The unfiltered run above already executes the multidev files, so
@@ -118,9 +166,11 @@ all)
         run_multidev
     fi
     run_bench
+    run_virtual
     ;;
 *)
-    echo "ci.sh: unknown shard '$SHARD' (want unit|multidev|bench|all)" >&2
+    echo "ci.sh: unknown shard '$SHARD' (want unit|multidev|bench|" \
+         "virtual|all)" >&2
     exit 2
     ;;
 esac

@@ -3,6 +3,15 @@
 Handles arbitrary nested dict/list/tuple/NamedTuple pytrees (the treedef is
 serialized via jax.tree_util key paths and rebuilt on restore against a
 template pytree).
+
+Virtual client stores (``core.store.VirtualStore`` leaves) are NEVER
+densified: their backing-tier rows go to a per-checkpoint sidecar
+directory (``ckpt_XXXXXXXX.stores/<key>/``) as atomic shard files --
+written BEFORE the main npz so the npz ``os.replace`` stays the single
+commit point -- and the npz itself carries only a ``__vstore__/<key>``
+layout-meta marker.  Restore loads the shards back into the template's
+store objects and fails fast when the checkpoint's store layout does not
+match the template's (resuming under a different ``--store`` spec).
 """
 from __future__ import annotations
 
@@ -17,12 +26,32 @@ import jax.numpy as jnp
 
 Pytree = Any
 
+_VSTORE_PREFIX = "__vstore__/"
+
+
+def _is_vstore(leaf) -> bool:
+    return hasattr(leaf, "save_rows") and hasattr(leaf, "meta_dict")
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _store_sidecar(path: str) -> str:
+    """``.../ckpt_00000012.npz`` -> ``.../ckpt_00000012.stores`` (per-step
+    named: a crash while writing step T's sidecar leaves step T-1's
+    checkpoint and sidecar untouched)."""
+    base = path[:-len(".npz")] if path.endswith(".npz") else path
+    return base + ".stores"
+
 
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = _path_key(path)
+        if _is_vstore(leaf):
+            continue  # save_checkpoint routes these to the sidecar
         arr = np.asarray(leaf)
         if arr.dtype.name == "bfloat16":  # npz has no native bf16
             arr = arr.astype(np.float32)
@@ -37,11 +66,26 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
     is atomic on POSIX) -- a kill at ANY point leaves either the
     complete previous checkpoint or the complete new one, never a
     loadable-but-truncated file; ``latest_checkpoint`` never matches the
-    tmp name."""
+    tmp name.
+
+    Virtual-store leaves write their rows to the checkpoint's sidecar
+    dir as atomic shards (``VirtualStore.save_rows``) FIRST; the npz
+    replace then commits the whole checkpoint."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     tmp = path + ".tmp.npz"  # .npz suffix stops np.savez appending another
     flat = _flatten(tree)
+    vstores = {
+        _path_key(p): leaf
+        for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+        if _is_vstore(leaf)
+    }
+    for key, store in vstores.items():
+        store.save_rows(os.path.join(_store_sidecar(path),
+                                     key.replace("/", "_")))
+        marker = json.dumps(store.meta_dict())
+        flat[_VSTORE_PREFIX + key] = np.frombuffer(marker.encode(),
+                                                   np.uint8)
     meta = json.dumps({"step": step, **(metadata or {})})
     try:
         with open(tmp, "wb") as f:
@@ -63,7 +107,13 @@ def save_checkpoint(directory: str, step: int, tree: Pytree,
 
 
 def restore_checkpoint(path: str, template: Pytree) -> tuple:
-    """Restore into the structure of ``template``.  Returns (tree, meta)."""
+    """Restore into the structure of ``template``.  Returns (tree, meta).
+
+    A virtual-store template leaf loads its rows from the checkpoint's
+    sidecar dir (in place; the same store object is returned in the
+    tree).  Mixing layouts fails fast: a dense checkpoint cannot restore
+    into a virtual template or vice versa -- rerun with the ``--store``
+    spec the checkpoint was written under."""
     with np.load(path) as data:
         meta = json.loads(bytes(data["__meta__"]).decode()) \
             if "__meta__" in data else {}
@@ -72,9 +122,30 @@ def restore_checkpoint(path: str, template: Pytree) -> tuple:
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     leaves = []
     for (path_keys, leaf_t) in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_keys)
+        key = _path_key(path_keys)
+        if _is_vstore(leaf_t):
+            if _VSTORE_PREFIX + key not in flat:
+                raise ValueError(
+                    f"checkpoint stores DENSE rows for {key!r} but this "
+                    "run uses a virtual store layout -- restore with the "
+                    "--store spec the checkpoint was written with")
+            leaf_t.load_rows(os.path.join(_store_sidecar(path),
+                                          key.replace("/", "_")))
+            leaves.append(leaf_t)
+            continue
         if key not in flat:
+            # a dense template leaf "clients/b" hits a virtual ckpt whose
+            # marker sits at the store root, "__vstore__/clients"
+            marked = any(
+                k.startswith(_VSTORE_PREFIX)
+                and key.startswith(k[len(_VSTORE_PREFIX):])
+                for k in flat)
+            if marked:
+                raise ValueError(
+                    f"checkpoint stores VIRTUAL rows for {key!r} but "
+                    "this run uses the dense store layout -- restore "
+                    "with the --store spec the checkpoint was written "
+                    "with")
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
         if tuple(arr.shape) != tuple(leaf_t.shape):

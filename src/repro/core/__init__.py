@@ -43,6 +43,16 @@ from repro.core.rounds import (  # noqa: F401
     scatter_client_rows,
     state_is_finite,
 )
+from repro.core.store import (  # noqa: F401
+    DenseLayout,
+    StoreLayout,
+    VirtualLayout,
+    VirtualStore,
+    is_virtual_store,
+    make_layout,
+    make_virtual_round_fn,
+    state_store_bytes,
+)
 from repro.core.federated import (  # noqa: F401
     make_decode_step,
     make_lm_grad_fn,

@@ -110,7 +110,7 @@ def staleness_weights(staleness, alpha: float) -> jax.Array:
 
 
 def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
-                     compressor=None, placement=None):
+                     compressor=None, placement=None, layout=None):
     """Async simulation state: the jax parts mirror ``init_sim_state``
     (same PRNG stream, same store layout via the shared helpers);
     scheduling bookkeeping lives host-side.  ``x`` is copied so the
@@ -119,11 +119,15 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
     (mirroring ``init_cohort_state``).  A mesh ``placement`` lays the
     jax-side stores out per ``MeshPlacement.state_specs`` (client/pms/ef
     over the client axis, model replicated) -- the host-side scheduling
-    keys (slots/buffer/delays/counters) stay host-side."""
+    keys (slots/buffer/delays/counters) stay host-side.  ``layout``
+    (core.store) picks dense stores (default) or virtual backing tiers:
+    dispatch then gathers rows host->device per cohort and delivery
+    scatters them back host-side, so device memory stays O(cohort)."""
+    from repro.core.store import resolve_layout
+    layout = resolve_layout(layout)
     x = tmap(jnp.copy, x)
-    clients = broadcast_client_store(strategy.client_init(x),
-                                     acfg.n_clients)
-    pms = broadcast_client_store(x, acfg.n_clients)
+    clients = layout.init_store(strategy.client_init(x), acfg.n_clients)
+    pms = layout.init_store(x, acfg.n_clients)
     state = {
         "x": x,
         "clients": clients,
@@ -137,7 +141,7 @@ def init_async_state(acfg: AsyncSimConfig, strategy: Strategy, x: Pytree,
         "buffer": [],            # delivered uploads awaiting aggregation
         "delays": acfg.client_delays(),
     }
-    ef = init_ef_store(strategy, x, acfg.n_clients, compressor)
+    ef = init_ef_store(strategy, x, acfg.n_clients, compressor, layout)
     if jax.tree.leaves(ef):
         state["ef"] = ef
     if placement is not None:
@@ -210,6 +214,16 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
         if donate else (lambda *a: jax.jit)
     _scatter = scatter_client_rows if donate else \
         jax.jit(scatter_cohort_rows)
+
+    def _scatter_row(store, c, row):
+        """Delivery scatter: a virtual store takes the row host-side (its
+        backing tier updates in place, device memory untouched); a dense
+        store goes through the donated jitted scatter as before."""
+        if hasattr(store, "scatter_rows"):
+            store.scatter_rows(np.asarray([int(c)]),
+                               tmap(lambda t: np.asarray(t)[None], row))
+            return store
+        return _scatter(store, c, row)
     dispatch_cohort = make_dispatch_cohort(strategy, grad_fn, placement,
                                            compressor)
 
@@ -418,10 +432,11 @@ def make_async_round_fn(acfg: AsyncSimConfig, strategy: Strategy, grad_fn,
                 new_cs, upload, pm, ef_row = s["payload"]
                 c = jnp.int32(s["client"])
                 if jax.tree.leaves(state["clients"]):
-                    state["clients"] = _scatter(state["clients"], c, new_cs)
-                state["pms"] = _scatter(state["pms"], c, pm)
+                    state["clients"] = _scatter_row(state["clients"], c,
+                                                    new_cs)
+                state["pms"] = _scatter_row(state["pms"], c, pm)
                 if stateful:
-                    state["ef"] = _scatter(state["ef"], c, ef_row)
+                    state["ef"] = _scatter_row(state["ef"], c, ef_row)
                 state["buffer"].append({
                     "upload": upload,
                     "staleness": state["version"] - s["version"],

@@ -129,7 +129,11 @@ def broadcast_client_store(template: Pytree, n: int) -> Pytree:
 
 def gather_client_state(clients: Pytree, idx: jax.Array) -> Pytree:
     """Rows ``idx`` of the client store; {} for stateless strategies --
-    the one empty-client-state path for every regime."""
+    the one empty-client-state path for every regime.  A virtual store
+    (``core.store.VirtualStore``) gathers host-side and streams the rows
+    to device; the dense path is trace-identical to before."""
+    if hasattr(clients, "gather_rows"):
+        return clients.gather_rows(idx)
     if not jax.tree.leaves(clients):
         return {}
     return tmap(lambda t: t[idx], clients)
@@ -453,7 +457,17 @@ class MeshPlacement:
                                model=self.roles.model, fsdp=self.roles.fsdp)
 
     def place_state(self, state: Pytree) -> Pytree:
-        """Lay the state out on the mesh per ``state_specs``."""
+        """Lay the state out on the mesh per ``state_specs``.  Virtual
+        stores (host-side backing tiers, ``core.store``) pass through
+        untouched -- only their gathered working-set rows ever get a
+        device layout, via the same specs on the cohort-sized carry."""
+        virt = {k: v for k, v in state.items()
+                if hasattr(v, "gather_rows")}
+        if virt:
+            rest = {k: v for k, v in state.items() if k not in virt}
+            placed = jax.tree.map(jax.device_put, rest,
+                                  self.state_specs(rest))
+            return {**placed, **virt}
         return jax.tree.map(jax.device_put, state,
                             self.state_specs(state))
 
@@ -645,30 +659,38 @@ def make_placement(name: str, mesh: Optional[Mesh] = None):
 # ---------------------------------------------------------------------------
 
 def init_ef_store(strategy: Strategy, x: Pytree, n_clients: int,
-                  compressor) -> Pytree:
+                  compressor, layout=None) -> Pytree:
     """The error-feedback residual store a stateful compressor carries:
     ``n_clients`` f32 zero rows shaped like one client's upload
     (``strategy.upload_template``).  {} for stateless compressors --
     the state pytree then has no ``ef`` entry at all, keeping the
-    uncompressed trace byte-identical."""
+    uncompressed trace byte-identical.  ``layout`` (core.store) picks
+    dense rows vs a virtual backing tier."""
     if compressor is None or not compressor.stateful:
         return {}
+    from repro.core.store import resolve_layout
     tmpl = compressor.init_residual(strategy.upload_template(x))
-    return broadcast_client_store(tmpl, n_clients)
+    return resolve_layout(layout).init_store(tmpl, n_clients)
 
 
 def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
-                      placement=None, compressor=None) -> Pytree:
+                      placement=None, compressor=None,
+                      layout=None) -> Pytree:
     """Full simulation state pytree.  ``x`` is copied: the state owns
     every buffer it holds, so donating rounds never invalidate caller-held
     params.  A mesh placement lays the stores out over the client axis.
     A stateful ``compressor`` (repro.comm, e.g. top-k with error
     feedback) adds the ``n_clients x upload`` residual store ``ef``,
-    laid out/donated exactly like the client/pms stores."""
+    laid out/donated exactly like the client/pms stores.  ``layout``
+    (core.store.make_layout spec) chooses dense stores (default,
+    bit-for-bit the historical state) or virtual backing tiers whose
+    rows only reach the device per-cohort."""
+    from repro.core.store import resolve_layout
+    layout = resolve_layout(layout)
     x = tmap(jnp.copy, x)
-    clients = broadcast_client_store(strategy.client_init(x), sim.n_clients)
+    clients = layout.init_store(strategy.client_init(x), sim.n_clients)
     # personalized-model store (Fig. 7): last local model per client
-    pms = broadcast_client_store(x, sim.n_clients)
+    pms = layout.init_store(x, sim.n_clients)
     state = {
         "x": x,
         "clients": clients,
@@ -677,7 +699,7 @@ def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
         "rng": jax.random.PRNGKey(sim.seed),
         "round": jnp.zeros((), jnp.int32),
     }
-    ef = init_ef_store(strategy, x, sim.n_clients, compressor)
+    ef = init_ef_store(strategy, x, sim.n_clients, compressor, layout)
     if jax.tree.leaves(ef):
         state["ef"] = ef
     if placement is not None:
@@ -773,7 +795,8 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
 
 def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
                       data: Dict[str, jax.Array], *, placement=None,
-                      donate: bool = True, compressor=None, faults=None):
+                      donate: bool = True, compressor=None, faults=None,
+                      layout=None):
     """The per-round executor: returns jitted ``round_fn(state) -> (state,
     metrics)``.
 
@@ -782,7 +805,16 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
     the state pytree into the jitted call -- the client/pms stores update
     in place; the passed-in state must not be reused afterwards.
     ``compressor`` compresses the uplink; ``faults`` injects + screens
-    client faults (see ``make_round_body``)."""
+    client faults (see ``make_round_body``).  A virtual ``layout``
+    (core.store) swaps in the host-backed executor: same contract, only
+    cohort rows on device, trajectory bitwise-equal to dense."""
+    from repro.core.store import make_virtual_round_fn, resolve_layout
+    layout = resolve_layout(layout)
+    if layout.virtual:
+        return make_virtual_round_fn(
+            sim, strategy, grad_fn, data, layout=layout,
+            placement=placement, donate=donate, compressor=compressor,
+            faults=faults)
     round_body = make_round_body(sim, strategy, grad_fn, data, placement,
                                  compressor, faults)
     if donate:
@@ -793,7 +825,7 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
 def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, block_size: int,
                   placement=None, donate: bool = True, compressor=None,
-                  faults=None):
+                  faults=None, layout=None):
     """The multi-round executor: ``block_size`` rounds inside ONE jitted
     ``lax.scan``.  Returns ``block_fn(state) -> (state, metrics)`` where
     every metric scalar comes back stacked as a ``(block_size,)`` array
@@ -816,6 +848,13 @@ def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     boundary -- drive it with ``rounds.run_blocks``."""
     if block_size < 1:
         raise ValueError(f"block_size must be >= 1, got {block_size}")
+    from repro.core.store import make_virtual_round_fn, resolve_layout
+    layout = resolve_layout(layout)
+    if layout.virtual:
+        return make_virtual_round_fn(
+            sim, strategy, grad_fn, data, layout=layout,
+            placement=placement, donate=donate, compressor=compressor,
+            faults=faults, block_size=block_size)
     round_body = make_round_body(sim, strategy, grad_fn, data, placement,
                                  compressor, faults)
 

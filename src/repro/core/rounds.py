@@ -54,18 +54,22 @@ Pytree = Any
 
 
 def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree,
-                   placement=None, compressor=None):
+                   placement=None, compressor=None, layout=None):
     """Returns the full simulation state pytree.  ``x`` is copied: the
     state owns every buffer it holds, so donating rounds never invalidate
     caller-held params.  A mesh placement lays the client/pms stores out
     over the mesh's client axis.  A stateful ``compressor`` (repro.comm)
-    adds the per-client error-feedback residual store ``ef``."""
-    return init_cohort_state(sim, strategy, x, placement, compressor)
+    adds the per-client error-feedback residual store ``ef``.
+    ``layout`` (core.store spec, e.g. ``'virtual:host'``) swaps the dense
+    stores for host-backed virtual ones."""
+    return init_cohort_state(sim, strategy, x, placement, compressor,
+                             layout)
 
 
 def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, donate: bool = True,
-                  placement=None, compressor=None, faults=None):
+                  placement=None, compressor=None, faults=None,
+                  layout=None):
     """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
     {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state).
 
@@ -77,10 +81,12 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     ``compressor`` (repro.comm) compresses each client's uplink delta;
     None is trace-identical to the pre-comm engine.  ``faults``
     (repro.faults) injects + screens client faults; None (or an inactive
-    config) is trace-identical to the pre-fault engine."""
+    config) is trace-identical to the pre-fault engine.  ``layout``
+    (core.store) picks dense vs virtual client stores."""
     return make_cohort_round(sim, strategy, grad_fn, data,
                              placement=placement, donate=donate,
-                             compressor=compressor, faults=faults)
+                             compressor=compressor, faults=faults,
+                             layout=layout)
 
 
 def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:
@@ -157,10 +163,26 @@ class RollbackGuard:
         self._snapshot(state)
 
     def _snapshot(self, state) -> None:
-        self._good = tmap(lambda t: np.array(t, copy=True), state)
+        # virtual stores (core.store) mutate their backing tier in place
+        # when a block scatters back, so the snapshot deep-clones them;
+        # dense entries keep the explicit np copy
+        self._good = {
+            k: (v.clone() if hasattr(v, "clone")
+                and hasattr(v, "gather_rows")
+                else tmap(lambda t: np.array(t, copy=True), v))
+            for k, v in state.items()
+        }
 
     def _restore(self):
-        state = tmap(jnp.asarray, self._good)
+        # hand back CLONES of snapshotted virtual stores: the retried
+        # block scatters into them, and a second rollback must still
+        # find the snapshot intact
+        state = {
+            k: (v.clone() if hasattr(v, "clone")
+                and hasattr(v, "gather_rows")
+                else tmap(jnp.asarray, v))
+            for k, v in self._good.items()
+        }
         state["rng"] = jax.random.fold_in(
             state["rng"].astype(jnp.uint32),
             _RETRY_SALT + self.retries)

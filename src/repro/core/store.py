@@ -1,0 +1,657 @@
+"""Virtual client store: O(cohort) device memory for million-client runs.
+
+Every regime used to materialize the per-client stores (``clients`` /
+``pms`` / ``ef``) as dense ``n_clients x params`` device buffers, so
+memory was O(n) even though a round only touches the m-client cohort.
+This module makes the store layout pluggable (DESIGN.md §11):
+
+  * ``DenseLayout``   -- the historical layout: dense device buffers,
+    in-graph gather/scatter, bit-for-bit the old trace.
+  * ``VirtualLayout`` -- only the sampled cohort's rows live on device.
+    Rows are gathered from / scattered back to a ``VirtualStore``
+    backing tier on the host:
+
+      - ``host``  : pinned numpy arrays, streamed with ``jax.device_put``
+                    at gather time.  O(n) host RAM, O(m) device.
+      - ``recon`` : stores NOTHING until a row is first touched.  Valid
+                    because every store is broadcast-initialized from a
+                    single template (FedAvg has no rows; FedDeper's
+                    v-row and the pms row start at x0; Scaffold's
+                    control variate starts at zero; EF residuals start
+                    at zero), so an untouched row is *reconstructible*
+                    from the template.  O(touched) host RAM.
+      - ``shard`` : checkpoint-shard ``.npz`` files of ``shard_rows``
+                    rows each, for populations that do not fit host
+                    RAM.  Untouched shards are synthesized from the
+                    template; writes are atomic (tmp + ``os.replace``,
+                    the PR 7 contract).
+
+The virtual executor (``make_virtual_round_fn``) keeps the device-side
+contract of the dense engine intact: the jitted block's carry holds only
+the working set (the union of the block's cohorts, fixed capacity
+``block_size x m``), the round body is the SAME gather -> local rounds ->
+scatter -> aggregate body with local indices, the mesh placement still
+emits exactly ONE cross-client psum per round, donation still updates
+the carry in place, and the host syncs once per block (gather before
+the call, scatter-back after) -- PR 4's one-host-sync-per-block holds.
+
+Bitwise contract: cohort sampling and batch draws replay the exact
+in-graph rng stream (``split_round_rng`` / ``sample_cohort`` /
+``jax.random.randint``) eagerly on the host, so the dense and virtual
+trajectories are bit-for-bit equal on both placements (tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.strategies import tmap
+from repro.faults.inject import fault_round_keys
+
+Pytree = Any
+
+_TIERS = ("host", "recon", "shard")
+
+
+def is_virtual_store(obj) -> bool:
+    """Duck-typed check used at every seam (placement, rollback guard,
+    checkpoint, async delivery) so none of them has to import this
+    module at module scope."""
+    return hasattr(obj, "gather_rows") and hasattr(obj, "scatter_rows")
+
+
+def _leaf_np(t) -> np.ndarray:
+    a = np.asarray(t)
+    # bf16 has no numpy dtype; the engine's stores are f32 throughout,
+    # so this only defends against exotic templates
+    return a
+
+
+class VirtualStore:
+    """One per-client store (``clients`` | ``pms`` | ``ef``) backed by a
+    host tier instead of a dense device buffer.
+
+    A VirtualStore is a pytree LEAF: jax never traces through it.  The
+    engine talks to it through exactly two methods --
+    ``gather_rows(idx) -> device pytree (len(idx), ...)`` and
+    ``scatter_rows(idx, rows)`` (host-side, in place) -- plus
+    ``clone`` (RollbackGuard snapshots), ``nbytes`` (the bench's
+    ``store_bytes``), and ``save_rows``/``load_rows`` (sharded
+    checkpoints, never densified)."""
+
+    def __init__(self, template: Pytree, n: int, *, tier: str = "host",
+                 shard_rows: int = 1024, shard_dir: Optional[str] = None):
+        if tier not in _TIERS:
+            raise ValueError(f"unknown store tier {tier!r} (want "
+                             f"{'|'.join(_TIERS)})")
+        leaves, treedef = jax.tree.flatten(template)
+        if not leaves:
+            raise ValueError("VirtualStore needs a non-empty template; "
+                             "stateless stores stay {}")
+        self.n = int(n)
+        self.tier = tier
+        self.shard_rows = int(shard_rows)
+        self._treedef = treedef
+        self._template = [_leaf_np(t).copy() for t in leaves]
+        self._shapes = [t.shape for t in self._template]
+        self._dtypes = [t.dtype for t in self._template]
+        self._data: List[np.ndarray] = []
+        self._rows: Dict[int, List[np.ndarray]] = {}
+        self._dir: Optional[str] = None
+        self._owns_dir = False
+        if tier == "host":
+            self._data = [
+                np.broadcast_to(t, (self.n,) + t.shape).copy()
+                for t in self._template
+            ]
+        elif tier == "shard":
+            if shard_dir is None:
+                shard_dir = tempfile.mkdtemp(prefix="vstore_")
+                self._owns_dir = True
+            os.makedirs(shard_dir, exist_ok=True)
+            self._dir = shard_dir
+
+    # -- row access ------------------------------------------------------
+
+    def _rows_host(self, idx: np.ndarray) -> List[np.ndarray]:
+        if self.tier == "host":
+            return [d[idx] for d in self._data]
+        if self.tier == "recon":
+            out = [np.empty((len(idx),) + s, d)
+                   for s, d in zip(self._shapes, self._dtypes)]
+            for j, c in enumerate(idx.tolist()):
+                row = self._rows.get(c, self._template)
+                for o, r in zip(out, row):
+                    o[j] = r
+            return out
+        # shard tier: group by shard file, synthesize untouched shards
+        out = [np.empty((len(idx),) + s, d)
+               for s, d in zip(self._shapes, self._dtypes)]
+        by_shard: Dict[int, List[int]] = {}
+        for j, c in enumerate(idx.tolist()):
+            by_shard.setdefault(c // self.shard_rows, []).append(j)
+        for s, js in by_shard.items():
+            shard = self._read_shard(s)
+            for j in js:
+                r = int(idx[j]) - s * self.shard_rows
+                for o, arr in zip(out, shard):
+                    o[j] = arr[r]
+        return out
+
+    def gather_rows(self, idx) -> Pytree:
+        """Device pytree of rows ``idx``: (len(idx), ...) per leaf,
+        streamed host->device with ``jnp.asarray`` (``device_put``)."""
+        idx = np.asarray(idx).astype(np.int64).ravel()
+        rows = self._rows_host(idx)
+        return jax.tree.unflatten(self._treedef,
+                                  [jnp.asarray(r) for r in rows])
+
+    def scatter_rows(self, idx, rows: Pytree) -> None:
+        """Write rows ``idx`` back to the backing tier (host side, in
+        place).  ``rows`` leaves are (len(idx), ...) device or host
+        arrays; duplicate ids take the last write, matching
+        ``.at[idx].set`` semantics."""
+        idx = np.asarray(idx).astype(np.int64).ravel()
+        leaves = [np.asarray(r) for r in jax.tree.leaves(rows)]
+        if self.tier == "host":
+            for d, r in zip(self._data, leaves):
+                d[idx] = r
+            return
+        if self.tier == "recon":
+            for j, c in enumerate(idx.tolist()):
+                self._rows[c] = [np.array(r[j], copy=True) for r in leaves]
+            return
+        by_shard: Dict[int, List[int]] = {}
+        for j, c in enumerate(idx.tolist()):
+            by_shard.setdefault(c // self.shard_rows, []).append(j)
+        for s, js in by_shard.items():
+            shard = self._read_shard(s)
+            for j in js:
+                r = int(idx[j]) - s * self.shard_rows
+                for arr, nw in zip(shard, leaves):
+                    arr[r] = nw[j]
+            self._write_shard(self._dir, s, shard)
+
+    # -- shard-tier files ------------------------------------------------
+
+    def _shard_len(self, s: int) -> int:
+        return min(self.shard_rows, self.n - s * self.shard_rows)
+
+    def _shard_path(self, directory: str, s: int) -> str:
+        return os.path.join(directory, f"shard_{s:08d}.npz")
+
+    def _read_shard(self, s: int) -> List[np.ndarray]:
+        path = self._shard_path(self._dir, s)
+        if os.path.exists(path):
+            with np.load(path) as z:
+                return [z[f"l{i}"].copy()
+                        for i in range(len(self._template))]
+        k = self._shard_len(s)
+        return [np.broadcast_to(t, (k,) + t.shape).copy()
+                for t in self._template]
+
+    @staticmethod
+    def _write_shard(directory: str, s: int,
+                     arrays: List[np.ndarray]) -> None:
+        """Atomic per-shard write: tmp + fsync + ``os.replace`` (the
+        PR 7 checkpoint contract) so a crash mid-write never leaves a
+        torn shard."""
+        path = os.path.join(directory, f"shard_{s:08d}.npz")
+        tmp = path + ".tmp.npz"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **{f"l{i}": a for i, a in enumerate(arrays)})
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- lifecycle -------------------------------------------------------
+
+    def clone(self) -> "VirtualStore":
+        """Deep copy for RollbackGuard snapshots: restoring a clone must
+        not alias the snapshot's buffers (or shard files)."""
+        c = VirtualStore(jax.tree.unflatten(self._treedef, self._template),
+                         self.n, tier=self.tier, shard_rows=self.shard_rows)
+        if self.tier == "host":
+            c._data = [d.copy() for d in self._data]
+        elif self.tier == "recon":
+            c._rows = {k: [r.copy() for r in row]
+                       for k, row in self._rows.items()}
+        else:
+            for name in os.listdir(self._dir):
+                if name.startswith("shard_") and name.endswith(".npz"):
+                    shutil.copy2(os.path.join(self._dir, name),
+                                 os.path.join(c._dir, name))
+        return c
+
+    def nbytes(self) -> int:
+        """Backing-tier bytes actually held for rows (template excluded):
+        O(n) for host, O(touched) for recon, on-disk bytes for shard."""
+        if self.tier == "host":
+            return int(sum(d.nbytes for d in self._data))
+        if self.tier == "recon":
+            row = sum(t.nbytes for t in self._template)
+            return int(len(self._rows) * row)
+        total = 0
+        for name in os.listdir(self._dir):
+            if name.startswith("shard_") and name.endswith(".npz"):
+                total += os.path.getsize(os.path.join(self._dir, name))
+        return int(total)
+
+    def meta_dict(self) -> Dict[str, Any]:
+        return {
+            "tier": self.tier,
+            "n": self.n,
+            "shard_rows": self.shard_rows,
+            "shapes": [list(s) for s in self._shapes],
+            "dtypes": [str(d) for d in self._dtypes],
+        }
+
+    # -- sharded checkpointing (never densifies) -------------------------
+
+    def save_rows(self, directory: str) -> None:
+        """Write the backing tier under ``directory`` as atomic shard
+        files + ``meta.json`` (meta last: its presence marks a complete
+        store dir).  host/shard tiers write every shard; recon writes
+        only the touched rows (ids + rows per shard-sized chunk)."""
+        os.makedirs(directory, exist_ok=True)
+        tmpl_path = os.path.join(directory, "template.npz")
+        tmp = tmpl_path + ".tmp.npz"
+        with open(tmp, "wb") as f:
+            np.savez(f, **{f"l{i}": t
+                           for i, t in enumerate(self._template)})
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, tmpl_path)
+        if self.tier == "host":
+            for s in range((self.n + self.shard_rows - 1)
+                           // self.shard_rows):
+                lo = s * self.shard_rows
+                hi = lo + self._shard_len(s)
+                self._write_shard(directory, s,
+                                  [d[lo:hi] for d in self._data])
+        elif self.tier == "recon":
+            ids = np.asarray(sorted(self._rows), np.int64)
+            for s in range(0, max(len(ids), 1), self.shard_rows):
+                chunk = ids[s:s + self.shard_rows]
+                if not len(chunk):
+                    continue
+                arrays = [np.stack([self._rows[int(c)][i] for c in chunk])
+                          for i in range(len(self._template))]
+                path = os.path.join(directory,
+                                    f"touched_{s // self.shard_rows:08d}"
+                                    ".npz")
+                tmp = path + ".tmp.npz"
+                with open(tmp, "wb") as f:
+                    np.savez(f, ids=chunk,
+                             **{f"l{i}": a for i, a in enumerate(arrays)})
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+        else:
+            for name in sorted(os.listdir(self._dir)):
+                if name.startswith("shard_") and name.endswith(".npz"):
+                    tmp = os.path.join(directory, name + ".tmp")
+                    shutil.copy2(os.path.join(self._dir, name), tmp)
+                    os.replace(tmp, os.path.join(directory, name))
+        meta_path = os.path.join(directory, "meta.json")
+        tmp = meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.meta_dict(), f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, meta_path)
+
+    def load_rows(self, directory: str) -> None:
+        """Load a ``save_rows`` directory back into this store.  The
+        saved layout must match this store's (tier, n, leaf shapes) --
+        resuming a virtual run under a different ``--store`` spec fails
+        fast here instead of silently retraining."""
+        meta_path = os.path.join(directory, "meta.json")
+        if not os.path.exists(meta_path):
+            raise ValueError(
+                f"virtual-store checkpoint dir {directory!r} is missing "
+                "meta.json (incomplete or not a store checkpoint)")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        want = self.meta_dict()
+        for k in ("tier", "n", "shapes", "dtypes"):
+            if meta.get(k) != want[k]:
+                raise ValueError(
+                    f"virtual-store layout mismatch on {k!r}: checkpoint "
+                    f"has {meta.get(k)!r}, this run expects {want[k]!r} "
+                    "(pass the --store spec the checkpoint was written "
+                    "with)")
+        if self.tier == "recon":
+            self._rows = {}
+            for name in sorted(os.listdir(directory)):
+                if not (name.startswith("touched_")
+                        and name.endswith(".npz")):
+                    continue
+                with np.load(os.path.join(directory, name)) as z:
+                    ids = z["ids"]
+                    arrays = [z[f"l{i}"]
+                              for i in range(len(self._template))]
+                    for j, c in enumerate(ids.tolist()):
+                        self._rows[int(c)] = [np.array(a[j], copy=True)
+                                              for a in arrays]
+            return
+        shard_names = [name for name in sorted(os.listdir(directory))
+                       if name.startswith("shard_")
+                       and name.endswith(".npz")]
+        if self.tier == "host":
+            for name in shard_names:
+                s = int(name[len("shard_"):-len(".npz")])
+                lo = s * self.shard_rows
+                with np.load(os.path.join(directory, name)) as z:
+                    for i, d in enumerate(self._data):
+                        arr = z[f"l{i}"]
+                        d[lo:lo + arr.shape[0]] = arr
+            return
+        for name in os.listdir(self._dir):
+            if name.startswith("shard_") and name.endswith(".npz"):
+                os.unlink(os.path.join(self._dir, name))
+        for name in shard_names:
+            shutil.copy2(os.path.join(directory, name),
+                         os.path.join(self._dir, name))
+
+    def __repr__(self) -> str:
+        return (f"VirtualStore(tier={self.tier!r}, n={self.n}, "
+                f"leaves={len(self._template)})")
+
+
+# ---------------------------------------------------------------------------
+# layouts
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StoreLayout:
+    """Dense layout (the default): per-client stores are dense device
+    buffers and every gather/scatter stays in-graph -- bit-for-bit the
+    historical trace."""
+    name = "dense"
+    virtual = False
+
+    @property
+    def spec(self) -> str:
+        return "dense"
+
+    def init_store(self, template: Pytree, n: int) -> Pytree:
+        return eng.broadcast_client_store(template, n)
+
+
+DenseLayout = StoreLayout
+
+
+@dataclass(frozen=True)
+class VirtualLayout(StoreLayout):
+    """Virtual layout: stores are ``VirtualStore`` backing tiers; only
+    the cohort working set lives on device (``make_virtual_round_fn``)."""
+    tier: str = "host"
+    shard_rows: int = 1024
+    shard_dir: Optional[str] = None
+    name = "virtual"
+    virtual = True
+
+    @property
+    def spec(self) -> str:
+        return f"virtual:{self.tier}"
+
+    def init_store(self, template: Pytree, n: int) -> Pytree:
+        if not jax.tree.leaves(template):
+            return {}
+        return VirtualStore(template, n, tier=self.tier,
+                            shard_rows=self.shard_rows,
+                            shard_dir=self.shard_dir)
+
+
+def make_layout(spec=None) -> StoreLayout:
+    """Parse a ``--store`` spec:
+
+      ``None`` | ``"dense"``      -> DenseLayout
+      ``"virtual"``               -> VirtualLayout(host)
+      ``"virtual:host"``          -> VirtualLayout(host)
+      ``"virtual:recon"``         -> VirtualLayout(recon)
+      ``"virtual:shard[:<dir>]"`` -> VirtualLayout(shard), optional dir
+
+    An already-constructed StoreLayout passes through."""
+    if spec is None or isinstance(spec, StoreLayout):
+        return spec or StoreLayout()
+    if spec == "dense":
+        return StoreLayout()
+    if spec == "virtual":
+        return VirtualLayout()
+    if spec.startswith("virtual:"):
+        rest = spec.split(":", 2)[1:]
+        tier = rest[0]
+        if tier not in _TIERS:
+            raise ValueError(f"unknown store spec {spec!r} (tier must be "
+                             f"{'|'.join(_TIERS)})")
+        if tier == "shard" and len(rest) > 1:
+            return VirtualLayout(tier="shard", shard_dir=rest[1])
+        return VirtualLayout(tier=tier)
+    raise ValueError(f"unknown store spec {spec!r} (want 'dense' | "
+                     "'virtual[:host|:recon|:shard[:dir]]')")
+
+
+def resolve_layout(layout) -> StoreLayout:
+    return make_layout(layout)
+
+
+def state_store_bytes(state: Dict[str, Any]) -> Optional[int]:
+    """Sum of backing-tier bytes over the state's virtual stores; None
+    when the state holds no virtual store (dense layout)."""
+    sizes = [v.nbytes() for v in state.values() if is_virtual_store(v)]
+    if not sizes:
+        return None
+    return int(sum(sizes))
+
+
+# ---------------------------------------------------------------------------
+# the virtual executor
+# ---------------------------------------------------------------------------
+
+def make_virtual_round_fn(sim, strategy, grad_fn, data, *, layout,
+                          placement=None, donate: bool = True,
+                          compressor=None, faults=None,
+                          block_size: Optional[int] = None):
+    """Round/block executor over virtual stores: ``fn(state) -> (state,
+    metrics)`` with the same contract as ``make_cohort_round``
+    (``block_size=None``) or ``make_block_fn`` (metrics stacked
+    ``(block_size,)``).
+
+    Per call the host (1) replays the next ``block_size`` rounds' rng
+    splits to learn their cohorts WITHOUT consuming ``state['rng']``
+    (the ``peek_sampled_clients`` idiom), (2) builds the block's working
+    set -- the first-occurrence union of the cohorts, padded to fixed
+    capacity ``block_size x m`` so the jit compiles once per block size
+    (pad rows repeat a real id, are never addressed by a local index,
+    and are dropped at scatter-back), (3) draws every round's minibatch
+    indices with the SAME ``jax.random.randint`` the dense body traces
+    (bitwise-identical values) and materializes cohort data rows --
+    ``data`` may be dense arrays or an on-demand source exposing
+    ``take(idx) / n_rows``, so no ``n``-leading array need ever exist,
+    (4) gathers working-set rows into the device carry and runs ONE
+    AOT-compiled jitted block (donated; in-graph body identical to the
+    dense round body with local indices; one psum per round under the
+    mesh placement), then (5) scatters the real working-set rows back
+    to the backing tier.  Host sync: once per block, after the call.
+
+    The returned fn exposes ``peak_bytes`` (compiled temp+output bytes,
+    set at first call) and ``trace(state)`` (the block's jaxpr, for
+    collective counting)."""
+    placement = placement or eng.VmapPlacement()
+    placement.check(sim)
+    if faults is not None and not faults.active:
+        faults = None
+    n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
+    stateful = compressor is not None and compressor.stateful
+    K = 1 if block_size is None else int(block_size)
+    if K < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    scalar_metrics = block_size is None
+    w_cap = K * m
+
+    if hasattr(data, "take"):
+        take, n_i = data.take, int(data.n_rows)
+    else:
+        data_host = tmap(np.asarray, data)
+        n_i = jax.tree.leaves(data_host)[0].shape[1]
+
+        def take(idx):
+            return tmap(lambda t: t[idx], data_host)
+
+    def body(carry, ops):
+        # identical to engine.make_round_body's body with the in-graph
+        # cohort sample replaced by host-fed local indices; k_sel is
+        # split (stream layout preserved) but unused -> DCE'd
+        lidx, batches = ops
+        rng, _k_sel, k_batch = eng.split_round_rng(carry["rng"])
+        cs = eng.gather_client_state(carry["clients"], lidx)
+        ctx = strategy.broadcast(carry["x"], carry["server"])
+        comm_kw = {}
+        if compressor is not None:
+            comm_kw = dict(
+                compressor=compressor,
+                ef=eng.gather_client_state(carry.get("ef", {}), lidx),
+                keys=eng.comm_round_keys(k_batch, m))
+        if faults is not None:
+            comm_kw.update(
+                faults=faults,
+                pms=eng.gather_client_state(carry["pms"], lidx),
+                fkeys=fault_round_keys(k_batch, m))
+        new_cs, pms_new, x, server, metrics, ef_new = placement.execute(
+            strategy, carry["x"], carry["server"], ctx, cs, batches,
+            grad_fn, sim.p, **comm_kw)
+        if faults is not None:
+            metrics = dict(metrics)
+            for k in ("screened", "dropped"):
+                metrics[k] = metrics[k] * m
+        out = {
+            "x": x,
+            "clients": placement.constrain_store(
+                eng.scatter_cohort_rows(carry["clients"], lidx, new_cs)),
+            "pms": placement.constrain_store(
+                eng.scatter_cohort_rows(carry["pms"], lidx, pms_new)),
+            "server": server,
+            "rng": rng,
+            "round": carry["round"] + 1,
+        }
+        if stateful:
+            out["ef"] = placement.constrain_store(
+                eng.scatter_cohort_rows(carry["ef"], lidx, ef_new))
+        return out, metrics
+
+    def blocked(carry, lidx, batches):
+        if scalar_metrics:
+            return body(carry, (lidx[0], tmap(lambda t: t[0], batches)))
+        return jax.lax.scan(body, carry, (lidx, batches))
+
+    jitted = (jax.jit(blocked, donate_argnums=(0,)) if donate
+              else jax.jit(blocked))
+    cache: Dict[str, Any] = {}
+
+    def _operands(state):
+        # (1) peek the block's cohorts by replaying the rng stream
+        r = state["rng"]
+        idxs, kbs = [], []
+        for _ in range(K):
+            r, k_sel, k_batch = eng.split_round_rng(r)
+            idxs.append(np.asarray(eng.sample_cohort(k_sel, n, m)))
+            kbs.append(k_batch)
+        # (2) working set: first-occurrence union, fixed capacity K*m
+        pos: Dict[int, int] = {}
+        order: List[int] = []
+        for idx in idxs:
+            for c in idx.tolist():
+                if c not in pos:
+                    pos[c] = len(order)
+                    order.append(c)
+        w_real = len(order)
+        wids = np.asarray(order + [order[0]] * (w_cap - w_real), np.int64)
+        lidx = np.asarray([[pos[c] for c in idx.tolist()] for idx in idxs],
+                          np.int32)
+        # (3) batches, drawn with the dense body's exact randint stream
+        lanes = np.arange(m)[:, None, None]
+        per_round = []
+        for idx, k_batch in zip(idxs, kbs):
+            bidx = np.asarray(
+                jax.random.randint(k_batch, (m, tau, b), 0, n_i))
+            rows = take(idx)
+            per_round.append(tmap(lambda t: t[lanes, bidx], rows))
+        batches = tmap(lambda *ts: jnp.asarray(np.stack(ts)), *per_round)
+        return wids, w_real, jnp.asarray(lidx), batches
+
+    def _build_carry(state, wids):
+        carry = {"x": state["x"], "server": state["server"],
+                 "rng": state["rng"], "round": state["round"]}
+        stores = {}
+        for key in ("clients", "pms", "ef"):
+            s = state.get(key)
+            if s is None:
+                continue
+            if is_virtual_store(s):
+                stores[key] = s
+                carry[key] = s.gather_rows(wids)
+            else:
+                carry[key] = s  # {} for stateless strategies
+        if stores and placement.name == "mesh":
+            placed = placement.place_state(
+                {k: carry[k] for k in stores})
+            carry.update(placed)
+        return carry, stores
+
+    def round_fn(state):
+        if stateful and "ef" not in state:
+            raise ValueError(
+                f"compressor {compressor.name!r} carries error-feedback "
+                "residuals: init the state with the same compressor "
+                "(init_cohort_state/init_sim_state(..., compressor=...))")
+        wids, w_real, lidx, batches = _operands(state)
+        carry, stores = _build_carry(state, wids)
+        fn = cache.get("fn")
+        if fn is None:
+            compiled = jitted.lower(carry, lidx, batches).compile()
+            try:
+                ma = compiled.memory_analysis()
+                round_fn.peak_bytes = (int(ma.temp_size_in_bytes)
+                                       + int(ma.output_size_in_bytes))
+            except Exception:
+                round_fn.peak_bytes = None
+            cache["fn"] = fn = compiled
+        out, metrics = fn(carry, lidx, batches)
+        # one host sync per block: pull the real working-set rows and
+        # push them to the backing tier (pad rows dropped)
+        for key, store in stores.items():
+            store.scatter_rows(
+                wids[:w_real],
+                tmap(lambda t: np.asarray(t)[:w_real], out[key]))
+        new_state = dict(state)
+        for key in ("x", "server", "rng", "round"):
+            new_state[key] = out[key]
+        return new_state, metrics
+
+    def trace(state):
+        """The block's jaxpr (for collective counting in tests)."""
+        wids, _w_real, lidx, batches = _operands(state)
+        carry, _stores = _build_carry(state, wids)
+        return jax.make_jaxpr(blocked)(carry, lidx, batches)
+
+    round_fn.peak_bytes = None
+    round_fn.layout = layout
+    round_fn.block_size = K
+    round_fn.trace = trace
+    return round_fn

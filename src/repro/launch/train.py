@@ -71,6 +71,19 @@ mismatch:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
       --batch 2 --seq 64 --faults drop:0.2,corrupt:0.05 --clip-norm 10
+
+``--store virtual[:host|:recon|:shard[:DIR]]`` (engine placements and
+the async regime) swaps the dense ``(n_clients, ...)`` client/pms/EF
+stores for the virtual client store (core/store.py): only the sampled
+cohort's rows live on device, gathered from / scattered back to a host,
+reconstructible, or checkpoint-shard backing tier.  Device memory drops
+from O(n_clients) to O(m_sampled) at a bitwise-identical trajectory;
+checkpoints write the backing tier as sidecar shard files instead of
+densifying, and resume re-validates the store layout against the CLI:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --placement vmap --clients 100000 --sampled 8 --tau 2 \
+      --rounds 4 --batch 2 --seq 64 --store virtual:recon
 """
 from __future__ import annotations
 
@@ -89,8 +102,8 @@ from repro.configs import get_config, list_configs
 from repro.core import (AsyncSimConfig, RollbackGuard, STRATEGIES,
                         SimConfig, init_async_state, init_sim_state,
                         make_async_round_fn, make_block_fn,
-                        make_global_eval, make_placement, make_round_fn,
-                        make_round_step, run_blocks)
+                        make_global_eval, make_layout, make_placement,
+                        make_round_fn, make_round_step, run_blocks)
 from repro.faults import make_faults
 from repro.core.federated import make_lm_grad_fn
 from repro.data import lm_client_batch, make_federated_lm
@@ -207,6 +220,7 @@ def run_async(cfg, strategy, args):
     _require_token_arch(cfg, args.arch, "--regime async")
     compressor = make_compressor(args.compress)
     faults = make_faults(args.faults)
+    layout = make_layout(args.store)
     placement = make_placement(args.placement) if args.placement else None
     acfg = AsyncSimConfig(
         n_clients=args.clients, m_concurrent=args.concurrent,
@@ -221,7 +235,7 @@ def run_async(cfg, strategy, args):
     grad_fn = make_lm_grad_fn(cfg)
     x = init_model(cfg, jax.random.PRNGKey(args.seed))
     state = init_async_state(acfg, strategy, x, compressor=compressor,
-                             placement=placement)
+                             placement=placement, layout=layout)
     round_fn = make_async_round_fn(acfg, strategy, grad_fn, data,
                                    compressor=compressor,
                                    placement=placement, faults=faults)
@@ -233,7 +247,8 @@ def run_async(cfg, strategy, args):
     # canonical compress/faults specs are stamped into every save and
     # re-validated on restore (fail fast over silent config mixing).
     cfg_meta = {"compress": compressor.name if compressor else "none",
-                "faults": faults.spec if faults else "none"}
+                "faults": faults.spec if faults else "none",
+                "store": layout.spec}
     start, meta = _restore_state(state, args, expect=cfg_meta)
     state["round"] = start
     state["version"] = int(meta.get("version", start))
@@ -282,6 +297,7 @@ def run_engine(cfg, strategy, args):
     _require_token_arch(cfg, args.arch, "--placement")
     placement = make_placement(args.placement)
     compressor = make_compressor(args.compress)
+    layout = make_layout(args.store)
     faults = make_faults(args.faults, clip_norm=args.clip_norm)
     if faults is not None and not faults.active:
         raise SystemExit("--faults deadline:T is the async regime's "
@@ -297,14 +313,17 @@ def run_engine(cfg, strategy, args):
     grad_fn = make_lm_grad_fn(cfg)
     x = init_model(cfg, jax.random.PRNGKey(args.seed))
     state = init_sim_state(sim, strategy, x, placement=placement,
-                           compressor=compressor)
+                           compressor=compressor, layout=layout)
     comm_extra = {"compress": args.compress,
                   "uplink_bytes_per_round": uplink_bytes_per_round(
                       compressor, strategy, x, m)}
     if faults is not None:
         comm_extra["faults"] = faults.spec
+    if layout.virtual:
+        comm_extra["store"] = layout.spec
     cfg_meta = {"compress": compressor.name if compressor else "none",
-                "faults": faults.spec if faults else "none"}
+                "faults": faults.spec if faults else "none",
+                "store": layout.spec}
 
     start, _ = _restore_state(state, args, expect=cfg_meta)
     if start:
@@ -346,7 +365,7 @@ def run_engine(cfg, strategy, args):
             state, lambda size: make_block_fn(
                 sim, strategy, grad_fn, data, block_size=size,
                 placement=placement, compressor=compressor,
-                faults=faults),
+                faults=faults, layout=layout),
             args.rounds - start, args.block_rounds, eval_fn=eval_fn,
             log=log, on_block=on_block, first_round=start, guard=guard)
         if args.ckpt_dir:
@@ -356,7 +375,7 @@ def run_engine(cfg, strategy, args):
 
     round_fn = make_round_fn(sim, strategy, grad_fn, data,
                              placement=placement, compressor=compressor,
-                             faults=faults)
+                             faults=faults, layout=layout)
     return _drive_rounds(state, round_fn, args, start,
                          rec_extra={"placement": placement.name,
                                     **comm_extra},
@@ -421,6 +440,15 @@ def main(argv=None):
     ap.add_argument("--per-client", type=int, default=64,
                     help="async/--placement: LM sequences materialized "
                          "per client")
+    # client-store layout (repro.core.store); engine placements + async
+    ap.add_argument("--store", default="dense",
+                    help="client-store layout: dense | virtual[:host|"
+                         ":recon|:shard[:DIR]] -- 'dense' keeps full "
+                         "(n_clients, ...) stores on device; 'virtual' "
+                         "keeps only the sampled cohort's rows on device "
+                         "against a host / reconstructible / "
+                         "checkpoint-shard backing tier (O(cohort) "
+                         "device memory, bitwise-identical trajectory)")
     # uplink compression (repro.comm); engine placements + async regime
     ap.add_argument("--compress", default="none",
                     help="uplink compressor: none | identity | q8 | fp8 "
@@ -473,6 +501,12 @@ def main(argv=None):
                          "--placement {vmap,mesh} or --regime async "
                          "(the legacy fixed-cohort datacenter step has "
                          "no uplink seam)")
+    if args.store != "dense" and args.regime != "async" \
+            and not args.placement:
+        raise SystemExit("--store virtual rides the cohort-engine store "
+                         "seam: pass --placement {vmap,mesh} or --regime "
+                         "async (the legacy fixed-cohort datacenter step "
+                         "holds its client store inline)")
     if args.bandwidth and args.regime != "async":
         raise SystemExit("--bandwidth prices the simulated async uplink "
                          "queue: pass --regime async (the synchronous "

@@ -1,0 +1,384 @@
+"""Virtual client store (core/store.py): only the sampled cohort's rows
+on device, gathered from / scattered to a pluggable backing tier -- and
+the trajectory must be BITWISE the dense engine's on every seam it
+crosses (DESIGN.md §11): sync vmap + mesh, scan blocks, compression EF,
+fault screening, the async regime, checkpoints.  Device memory is the
+point: the n=100k smoke pins peak_bytes at the n=m dense round's scale.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.comm import make_compressor
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (AsyncSimConfig, FedAvg, FedDeper, Scaffold,
+                        SimConfig, VirtualStore, init_async_state,
+                        init_sim_state, make_async_round_fn, make_layout,
+                        make_round_fn, run_blocks, run_rounds,
+                        state_store_bytes)
+from repro.core.rounds import make_block_fn
+from repro.data import make_federated_classification
+from repro.faults import make_faults
+from repro.launch.mesh import make_client_mesh
+from repro.core.engine import MeshPlacement
+from repro.models import classifier_loss, init_classifier
+
+CFG = MLP_MNIST
+
+
+def apply_loss(p, b):
+    return classifier_loss(CFG, p, b)
+
+
+def grad_fn(p, mb):
+    (l, _), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = make_federated_classification(n_clients=6, per_client=64,
+                                       split="shards", seed=2)
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(11))
+
+
+SIM = SimConfig(n_clients=6, m_sampled=4, tau=3, batch_size=16, seed=5)
+
+COLLECTIVES = {"psum", "psum2", "all_gather", "all_to_all", "ppermute",
+               "pmax", "pmin"}
+
+
+def count_executed_collectives(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVES:
+            n += 1
+        elif eqn.primitive.name == "scan":
+            n += eqn.params["length"] * \
+                count_executed_collectives(eqn.params["jaxpr"].jaxpr)
+        else:
+            for v in eqn.params.values():
+                if hasattr(v, "eqns"):
+                    n += count_executed_collectives(v)
+                elif hasattr(v, "jaxpr"):
+                    n += count_executed_collectives(v.jaxpr)
+    return n
+
+
+def _run(strategy, data, x0, *, layout=None, placement=None, rounds=4,
+         compressor=None, faults=None):
+    state = init_sim_state(SIM, strategy, x0, placement=placement,
+                           compressor=compressor, layout=layout)
+    rf = make_round_fn(SIM, strategy, grad_fn, data, placement=placement,
+                       compressor=compressor, faults=faults, layout=layout)
+    hist = []
+    for _ in range(rounds):
+        state, mets = rf(state)
+        hist.append({k: np.asarray(v) for k, v in mets.items()})
+    return state, hist
+
+
+def _store_rows(store, n):
+    """Full store contents as host arrays, dense or virtual."""
+    if hasattr(store, "gather_rows"):
+        return [np.asarray(l) for l in
+                jax.tree.leaves(store.gather_rows(np.arange(n)))]
+    return [np.asarray(l) for l in jax.tree.leaves(store)]
+
+
+def _assert_same_trajectory(sa, ha, sb, hb, n=SIM.n_clients):
+    for la, lb in zip(jax.tree.leaves(sa["x"]), jax.tree.leaves(sb["x"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for key in ("clients", "pms", "ef"):
+        if key not in sa and key not in sb:
+            continue
+        for la, lb in zip(_store_rows(sa[key], n), _store_rows(sb[key], n)):
+            np.testing.assert_array_equal(la, lb)
+    for ma, mb in zip(ha, hb):
+        assert set(ma) == set(mb)
+        for k in ma:
+            np.testing.assert_array_equal(ma[k], mb[k])
+
+
+@pytest.mark.parametrize("tier", ["host", "recon", "shard"])
+@pytest.mark.parametrize("strategy", [FedDeper(), FedAvg(), Scaffold()],
+                         ids=["feddeper", "fedavg", "scaffold"])
+def test_virtual_matches_dense_sync(data, x0, tier, strategy):
+    """Every backing tier reproduces the dense vmap engine bitwise:
+    global model, full client/pms store contents, metric history."""
+    sd, hd = _run(strategy, data, x0)
+    sv, hv = _run(strategy, data, x0, layout=make_layout(f"virtual:{tier}"))
+    _assert_same_trajectory(sd, hd, sv, hv)
+
+
+def test_virtual_matches_dense_mesh_one_psum(data, x0):
+    """Under the mesh placement the virtual round is bitwise the dense
+    mesh round AND still lowers to exactly ONE cross-client collective
+    per round -- gathering through the store must not add any."""
+    mesh = make_client_mesh()
+    layout = make_layout("virtual:host")
+    pd = MeshPlacement(mesh)
+    pv = MeshPlacement(mesh)
+    sd, hd = _run(FedDeper(), data, x0, placement=pd, rounds=3)
+    state = init_sim_state(SIM, FedDeper(), x0, placement=pv, layout=layout)
+    rf = make_round_fn(SIM, FedDeper(), grad_fn, data, placement=pv,
+                       layout=layout)
+    jaxpr = rf.trace(state)
+    assert count_executed_collectives(jaxpr.jaxpr) == 1
+    hv = []
+    for _ in range(3):
+        state, mets = rf(state)
+        hv.append({k: np.asarray(v) for k, v in mets.items()})
+    _assert_same_trajectory(sd, hd, state, hv)
+
+
+def test_virtual_block_matches_dense_loop(data, x0):
+    """run_blocks with a virtual layout (K rounds per jitted scan, ONE
+    host gather/scatter per block, cohort collisions across the scanned
+    rounds) is bitwise the dense per-round host loop."""
+    strategy = FedDeper()
+    sd = init_sim_state(SIM, strategy, x0)
+    rfd = make_round_fn(SIM, strategy, grad_fn, data)
+    sd, hist_d = run_rounds(sd, rfd, 6)
+    layout = make_layout("virtual:recon")
+    sv = init_sim_state(SIM, strategy, x0, layout=layout)
+    sv, hist_v = run_blocks(
+        sv, lambda size: make_block_fn(SIM, strategy, grad_fn, data,
+                                       block_size=size, layout=layout),
+        6, 3)
+    for la, lb in zip(jax.tree.leaves(sd["x"]), jax.tree.leaves(sv["x"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for la, lb in zip(_store_rows(sd["clients"], SIM.n_clients),
+                      _store_rows(sv["clients"], SIM.n_clients)):
+        np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(
+        np.concatenate([np.atleast_1d(h["local_loss"]) for h in hist_d]),
+        np.concatenate([np.atleast_1d(np.asarray(h["local_loss"]))
+                        for h in hist_v]))
+
+
+def test_virtual_matches_dense_compression_ef(data, x0):
+    """Stateful top-k compression: the per-client error-feedback
+    residual STORE is virtual too, and its rows stay bitwise the dense
+    run's across rounds."""
+    comp_d, comp_v = make_compressor("topk:0.25"), make_compressor(
+        "topk:0.25")
+    sd, hd = _run(FedDeper(), data, x0, compressor=comp_d)
+    sv, hv = _run(FedDeper(), data, x0, compressor=comp_v,
+                  layout=make_layout("virtual:host"))
+    assert hasattr(sv["ef"], "gather_rows")
+    _assert_same_trajectory(sd, hd, sv, hv)
+
+
+def test_virtual_matches_dense_faults(data, x0):
+    """Fault injection + screening rides the same round rng stream, so
+    dropped/corrupted lanes (and the screened counts) are identical."""
+    sd, hd = _run(FedDeper(), data, x0,
+                  faults=make_faults("drop:0.25,corrupt:0.25"))
+    sv, hv = _run(FedDeper(), data, x0,
+                  faults=make_faults("drop:0.25,corrupt:0.25"),
+                  layout=make_layout("virtual:host"))
+    assert any(float(np.sum(h["screened"])) > 0 for h in hd)
+    _assert_same_trajectory(sd, hd, sv, hv)
+
+
+def test_virtual_async_matches_dense(data, x0):
+    """The buffered-async regime's dispatch gather / delivery scatter
+    route through the store seam: virtual clients+pms reproduce the
+    dense async trajectory bitwise."""
+    acfg = AsyncSimConfig(n_clients=6, m_concurrent=4, buffer_size=2,
+                          tau=3, batch_size=16, alpha=0.5, delay=5.0,
+                          seed=3)
+    outs = []
+    for layout in (None, make_layout("virtual:host")):
+        st = init_async_state(acfg, FedDeper(), x0, layout=layout)
+        arf = make_async_round_fn(acfg, FedDeper(), grad_fn, data)
+        hist = []
+        for _ in range(6):
+            st, mets = arf(st)
+            hist.append({k: float(v) for k, v in mets.items()})
+        outs.append((st, hist))
+    (sd, hd), (sv, hv) = outs
+    assert hasattr(sv["clients"], "gather_rows")
+    for la, lb in zip(jax.tree.leaves(sd["x"]), jax.tree.leaves(sv["x"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for key in ("clients", "pms"):
+        for la, lb in zip(_store_rows(sd[key], 6), _store_rows(sv[key], 6)):
+            np.testing.assert_array_equal(la, lb)
+    assert hd == hv
+
+
+def test_recon_store_bytes_is_o_touched(data, x0):
+    """The reconstructible tier materializes NOTHING until a row is
+    written: store_bytes starts at 0 and grows with touched rows, never
+    approaching the dense footprint for a lightly-sampled population."""
+    layout = make_layout("virtual:recon")
+    state = init_sim_state(SIM, FedDeper(), x0, layout=layout)
+    assert state_store_bytes(state) == 0
+    rf = make_round_fn(SIM, FedDeper(), grad_fn, data, layout=layout)
+    state, _ = rf(state)
+    touched = state_store_bytes(state)
+    assert touched > 0
+    dense = init_sim_state(SIM, FedDeper(), x0)
+    dense_bytes = sum(np.asarray(l).nbytes
+                      for k in ("clients", "pms")
+                      for l in jax.tree.leaves(dense[k]))
+    # one round touches m of n clients: at most m/n of the dense bytes
+    assert touched <= dense_bytes * SIM.m_sampled / SIM.n_clients + 1
+
+
+def test_checkpoint_virtual_shard_resume_bitwise(data, x0, tmp_path):
+    """Kill/resume through a sharded virtual checkpoint: stop after 3
+    rounds, checkpoint (sidecar shard files, no densification), restore
+    into a FRESH process-worth of state, continue -- bitwise the
+    uninterrupted run."""
+    strategy = FedDeper()
+
+    def fresh(shard_dir):
+        layout = make_layout(f"virtual:shard:{shard_dir}")
+        st = init_sim_state(SIM, strategy, x0, layout=layout)
+        rf = make_round_fn(SIM, strategy, grad_fn, data, layout=layout)
+        return st, rf
+
+    s_ref, rf = fresh(tmp_path / "tiers_ref")
+    for _ in range(6):
+        s_ref, _ = rf(s_ref)
+
+    s1, rf1 = fresh(tmp_path / "tiers_a")
+    for _ in range(3):
+        s1, _ = rf1(s1)
+    ckdir = str(tmp_path / "ck")
+    path = save_checkpoint(ckdir, 3, s1, {"store": "virtual:shard"})
+    # the sidecar holds shards, the npz holds no densified store rows
+    assert (tmp_path / "ck" / "ckpt_00000003.stores").is_dir()
+    with np.load(path) as z:
+        assert not any(k.startswith("clients/") for k in z.files)
+
+    s2, rf2 = fresh(tmp_path / "tiers_b")
+    tmpl = {k: s2[k] for k in ("x", "clients", "pms", "server", "rng")}
+    restored, meta = restore_checkpoint(path, tmpl)
+    assert meta["store"] == "virtual:shard"
+    s2.update(restored)
+    s2["round"] = jnp.asarray(3, s2["round"].dtype)
+    for _ in range(3):
+        s2, _ = rf2(s2)
+    for la, lb in zip(jax.tree.leaves(s_ref["x"]),
+                      jax.tree.leaves(s2["x"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for la, lb in zip(_store_rows(s_ref["clients"], SIM.n_clients),
+                      _store_rows(s2["clients"], SIM.n_clients)):
+        np.testing.assert_array_equal(la, lb)
+
+
+def test_checkpoint_layout_mismatch_fails_fast(x0, tmp_path):
+    """Restoring a virtual checkpoint under --store dense (or vice
+    versa, or under a different tier) must raise a clear error instead
+    of silently densifying or zero-filling the stores."""
+    strategy = FedDeper()
+    sv = init_sim_state(SIM, strategy, x0,
+                        layout=make_layout("virtual:host"))
+    pv = save_checkpoint(str(tmp_path), 1,
+                         {k: sv[k] for k in ("x", "clients")}, {})
+    sd = init_sim_state(SIM, strategy, x0)
+    with pytest.raises(ValueError, match="VIRTUAL"):
+        restore_checkpoint(pv, {k: sd[k] for k in ("x", "clients")})
+    pd = save_checkpoint(str(tmp_path), 2,
+                         {k: sd[k] for k in ("x", "clients")}, {})
+    with pytest.raises(ValueError, match="DENSE"):
+        restore_checkpoint(pd, {"x": sd["x"], "clients": sv["clients"]})
+    s_recon = init_sim_state(SIM, strategy, x0,
+                             layout=make_layout("virtual:recon"))
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_checkpoint(pv, {"x": sd["x"],
+                                "clients": s_recon["clients"]})
+
+
+def test_packed_topk_matches_reference_with_ties():
+    """The single packed-buffer threshold pass is bitwise the per-leaf
+    ``lax.top_k`` reference on every leaf -- including crafted |value|
+    TIES straddling the k-th position, where both sides must keep the
+    lowest flat indices first."""
+    tree = {
+        "a": jnp.asarray([3.0, -3.0, 3.0, 1.0, -3.0, 0.5]),
+        "b": jnp.asarray([[1.0, -1.0], [1.0, 2.0]]),
+        "c": jnp.zeros((3,)),
+        "d": jnp.asarray(np.random.default_rng(0).normal(
+            size=(37,)).astype(np.float32)),
+    }
+    for ratio in (0.0, 0.1, 1 / 3, 0.5, 1.0):
+        comp = make_compressor(f"topk:{ratio}")
+        ref = jax.tree.map(comp._sparsify_leaf, tree)
+        got = comp._sparsify_packed(tree)
+        for lr, lg in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(lr), np.asarray(lg))
+
+
+def test_validate_bench_requires_store_bytes():
+    from benchmarks.round_engine import validate_bench
+    row = {"us_per_round": 1.0, "peak_bytes": 10,
+           "config": {"store": "virtual:recon"}}
+    with pytest.raises(ValueError, match="store_bytes"):
+        validate_bench({"v": dict(row)})
+    validate_bench({"v": dict(row, store_bytes=123)})
+    with pytest.raises(ValueError, match="store_bytes"):
+        validate_bench({"d": {"us_per_round": 1.0, "peak_bytes": 10,
+                              "config": {}, "store_bytes": 5}})
+
+
+def test_check_speedups_memory_gate():
+    from benchmarks.round_engine import check_speedups
+    tracked = {"row": {"us_per_round": 1.0, "peak_bytes": 100,
+                       "config": {}}}
+    ok = {"row": {"us_per_round": 1.0, "peak_bytes": 140, "config": {}}}
+    bad = {"row": {"us_per_round": 1.0, "peak_bytes": 151, "config": {}}}
+    assert check_speedups(ok, tracked) == []
+    fails = check_speedups(bad, tracked)
+    assert len(fails) == 1 and "peak_bytes" in fails[0]
+
+
+@pytest.mark.bigmem
+def test_bigmem_100k_clients_cohort_footprint():
+    """n=100k population, m=10 cohort: the virtual round compiles to a
+    device footprint within 2x the n=m=10 DENSE round's -- the round
+    engine never sees the population size."""
+    from benchmarks.common import SyntheticClientData
+    n_big, m = 100_000, 10
+    src = SyntheticClientData(input_shape=CFG.input_shape,
+                              n_clients=n_big, per_client=64, seed=0)
+    x0 = init_classifier(CFG, jax.random.PRNGKey(42))
+    strategy = FedDeper()
+
+    sim_small = SimConfig(n_clients=m, m_sampled=m, tau=3, batch_size=16,
+                          seed=0)
+    small = SyntheticClientData(input_shape=CFG.input_shape, n_clients=m,
+                                per_client=64, seed=0)
+    data_small = {k: jnp.asarray(v)
+                  for k, v in small.take(np.arange(m)).items()}
+    rf_d = make_round_fn(sim_small, strategy, grad_fn, data_small)
+    st_d = init_sim_state(sim_small, strategy, x0)
+    compiled = rf_d.lower(st_d).compile()
+    ma = compiled.memory_analysis()
+    dense_peak = int(ma.temp_size_in_bytes) + int(ma.output_size_in_bytes)
+
+    sim_big = SimConfig(n_clients=n_big, m_sampled=m, tau=3,
+                        batch_size=16, seed=0)
+    layout = make_layout("virtual:recon")
+    st_v = init_sim_state(sim_big, strategy, x0, layout=layout)
+    rf_v = make_round_fn(sim_big, strategy, grad_fn, src, layout=layout)
+    st_v, _ = rf_v(st_v)
+    assert rf_v.peak_bytes is not None
+    assert rf_v.peak_bytes <= 2 * dense_peak, \
+        f"virtual n=100k peak {rf_v.peak_bytes} > 2x dense n=m " \
+        f"peak {dense_peak}"
+    # and the backing tier holds only the touched cohort
+    touched = state_store_bytes(st_v)
+    row_budget = 3 * m  # clients+pms (+slack) rows for one round
+    leaf_bytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(x0))
+    assert touched <= row_budget * leaf_bytes * 2
