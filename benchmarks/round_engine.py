@@ -88,8 +88,8 @@ from repro.configs.paper_models import MLP_MNIST
 from repro.core import (AsyncSimConfig, FedAvg, FedDeper, FedProx, Scaffold,
                         SimConfig, init_async_state, init_sim_state,
                         make_async_round_fn, make_block_fn, make_global_eval,
-                        make_layout, make_placement, make_round_fn,
-                        state_store_bytes, twin_grad_fn)
+                        make_layout, make_placement, make_robust,
+                        make_round_fn, state_store_bytes, twin_grad_fn)
 from repro.faults import make_faults
 from repro.core.engine import make_per_client
 from repro.core.strategies import tmap
@@ -160,6 +160,13 @@ class _Prepared:
         # host sync inside the window) and reduced at report time
         self._screened: list = []
         self.state, mets = round_fn(state)
+        # rounds this bench has ADVANCED from x0 (warmup + every timed
+        # block): robust rows replay an un-defended reference for exactly
+        # this many rounds so the attack x defense matrix is like-for-like
+        self.rounds_done = self.rounds_per_call
+        # robust rows fill this post-timing (clean/attacked/defended
+        # accuracy triple); validate_bench rejects a robust row without it
+        self.robust_matrix = None
         self._note(mets)
         jax.block_until_ready(jax.tree.leaves(self.state["x"])[0])
         if self.peak_bytes is None:
@@ -200,6 +207,7 @@ class _Prepared:
         per_round = (time.perf_counter() - t0) / (calls *
                                                   self.rounds_per_call)
         self.best = min(self.best, per_round)
+        self.rounds_done += calls * self.rounds_per_call
         self.state = s
         return per_round
 
@@ -210,22 +218,24 @@ class _Prepared:
 
 def _prep_sync(task, x0, scale, strategy, *, donate, twin,
                placement=None, block=None, compress=None, faults=None,
-               store=None):
+               store=None, robust=None):
     sim = SimConfig(n_clients=scale["n"], m_sampled=scale["m"],
                     tau=scale["tau"], batch_size=scale["batch"], seed=0)
     grad_fn = twin_grad_fn(task["apply_loss"]) if twin else task["grad_fn"]
     pl = make_placement(placement) if placement else None
     comp = make_compressor(compress) if compress else None
     fl = make_faults(faults) if faults else None
+    rb = make_robust(robust) if robust else None
     layout = make_layout(store)
     if block:
         rf = make_block_fn(sim, strategy, grad_fn, task["data"],
                            block_size=block, donate=donate, placement=pl,
-                           compressor=comp, faults=fl, layout=layout)
+                           compressor=comp, faults=fl, layout=layout,
+                           robust=rb)
     else:
         rf = make_round_fn(sim, strategy, grad_fn, task["data"],
                            donate=donate, placement=pl, compressor=comp,
-                           faults=fl, layout=layout)
+                           faults=fl, layout=layout, robust=rb)
     cfg = dict(regime="sync", model=MLP_MNIST.name, donate=donate,
                twin_grads=twin, placement=placement or "vmap", **scale)
     if block:
@@ -239,6 +249,11 @@ def _prep_sync(task, x0, scale, strategy, *, donate, twin,
         # fault rows additionally track screened_per_round at the entry
         # level (validate_bench requires it when config carries "faults")
         cfg["faults"] = faults
+    if rb is not None:
+        # robust rows additionally track the attack x defense accuracy
+        # matrix at the entry level (validate_bench requires it when
+        # config carries "robust")
+        cfg["robust"] = rb.spec
     uplink = None
     if compress:
         # compression rows track their wire cost next to us_per_round /
@@ -321,7 +336,12 @@ def _prep_async(task, x0, scale, strategy, *, donate, twin,
 # shipping unvalidated fields
 _ENTRY_KEYS = {"us_per_round", "peak_bytes", "config",
                "uplink_bytes_per_round", "screened_per_round",
-               "store_bytes"}
+               "store_bytes", "robust_matrix"}
+
+# the attack x defense accuracy matrix every robust row must publish:
+# the same model attacked and undefended (plain mean), attacked and
+# defended (the row's reducer), and the paired clean reference
+_ROBUST_MATRIX_KEYS = {"clean", "attacked_mean", "defended"}
 
 
 def validate_bench(obj) -> None:
@@ -375,6 +395,20 @@ def validate_bench(obj) -> None:
             raise ValueError(
                 f"{name}: screened_per_round on a row whose config has "
                 "no 'faults' spec")
+        if "robust" in entry["config"]:
+            rm = entry.get("robust_matrix")
+            if not isinstance(rm, dict) or \
+                    set(rm) != _ROBUST_MATRIX_KEYS or \
+                    not all(isinstance(v, (int, float)) and
+                            not isinstance(v, bool) for v in rm.values()):
+                raise ValueError(
+                    f"{name}: robust rows must track robust_matrix as a "
+                    f"dict with float keys {sorted(_ROBUST_MATRIX_KEYS)} "
+                    f"(got {rm!r})")
+        elif "robust_matrix" in entry:
+            raise ValueError(
+                f"{name}: robust_matrix on a row whose config has no "
+                "'robust' spec (nothing defends a plain-mean row)")
         if str(entry["config"].get("store", "")).startswith("virtual"):
             sb = entry.get("store_bytes")
             if not isinstance(sb, int) or isinstance(sb, bool) or sb <= 0:
@@ -516,6 +550,17 @@ def _benches():
             "sync", FedDeper(fuse_grads=True, **DEPER),
             dict(donate=True, twin=True,
                  faults="drop:0.2,corrupt:0.05")),
+        # Byzantine-robust aggregation (repro.robust): 20% colluding
+        # lanes riding the clip boundary (negated, rescaled to exactly
+        # clip_norm -- screening cannot reject them) against Krum-lite
+        # filtering -- the ratio prices the gather + Gram-matrix reduce
+        # against the clean fused round, and the post-timing
+        # robust_matrix records the attack x defense accuracy triple
+        # (clean / attacked_mean / defended) at identical round counts
+        "feddeper_sync_robust": (
+            "sync", FedDeper(fuse_grads=True, **DEPER),
+            dict(donate=True, twin=True, faults="collude:0.2,clip:2.0",
+                 robust="krum:0.3")),
         # the virtual client store (core/store.py) at cross-DEVICE
         # population scales: n=1k / n=100k clients, m=10 sampled -- the
         # dense (n, params) store would need 100-10000x the cohort's
@@ -581,6 +626,10 @@ _SPEEDUP_PAIRS = {
     # (<= 1.0 expected -- screening's weighted mean rides the same psum,
     # so the gap is the fault-draw/clip math, not an extra collective)
     "feddeper_sync_faults": ("feddeper_sync_fused", "speedup_vs_clean"),
+    # robust ratio: gather + Krum vs the clean fused round (<= 1.0
+    # expected -- krum adds one all_gather and an (m, m) Gram matrix;
+    # the win is the robust_matrix accuracy column, not wall time)
+    "feddeper_sync_robust": ("feddeper_sync_fused", "speedup_vs_clean"),
 }
 
 
@@ -621,7 +670,8 @@ def round_engine_rows(quick: bool = True, *,
                                         block=opts.get("block"),
                                         compress=opts.get("compress"),
                                         faults=opts.get("faults"),
-                                        store=opts.get("store"))
+                                        store=opts.get("store"),
+                                        robust=opts.get("robust"))
         else:
             prepared[name] = _prep_async(task, x0, scale, strategy,
                                          donate=opts["donate"],
@@ -667,6 +717,27 @@ def round_engine_rows(quick: bool = True, *,
             if ref in prepared:
                 p.cfg["eval_acc_clean"] = round(
                     float(test_eval(prepared[ref].state)["test_acc"]), 4)
+            if "robust" not in p.cfg:
+                continue
+            # the attack x defense matrix's missing cell: the SAME
+            # attack with the defense off (plain weighted mean).  Runs
+            # un-timed after every window, advanced to exactly the
+            # rounds the defended row consumed so all three accuracies
+            # price identical training budgets
+            _, strat, opts = _benches()[name]
+            atk = _prep_sync(task, x0, scale, strat,
+                             donate=opts["donate"], twin=opts["twin"],
+                             placement=opts.get("placement"),
+                             block=opts.get("block"),
+                             faults=opts.get("faults"))
+            if p.rounds_done > atk.rounds_done:
+                atk.block(p.rounds_done - atk.rounds_done)
+            p.robust_matrix = {
+                "defended": p.cfg["eval_acc"],
+                "attacked_mean": round(
+                    float(test_eval(atk.state)["test_acc"]), 4),
+                "clean": p.cfg.get("eval_acc_clean", 0.0),
+            }
 
     results: Dict[str, Dict] = {}
     for name, p in prepared.items():
@@ -678,6 +749,8 @@ def round_engine_rows(quick: bool = True, *,
         if "faults" in p.cfg:
             results[name]["screened_per_round"] = \
                 round(p.screened_per_round or 0.0, 4)
+        if "robust" in p.cfg:
+            results[name]["robust_matrix"] = p.robust_matrix
         if "store" in p.cfg:
             # post-run backing-tier footprint: for the recon tier this is
             # O(touched rows), the bench's O(cohort)-not-O(n) receipt
@@ -693,6 +766,8 @@ def round_engine_rows(quick: bool = True, *,
             derived["screened_per_round"] = entry["screened_per_round"]
         if "store_bytes" in entry:
             derived["store_bytes"] = entry["store_bytes"]
+        if "robust_matrix" in entry:
+            derived.update(entry["robust_matrix"])
         pair = _SPEEDUP_PAIRS.get(name)
         if pair and name in pair_ratio:
             speedup = pair_ratio[name]

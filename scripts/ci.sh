@@ -38,7 +38,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MULTIDEV_FILES=(tests/test_engine_placement.py tests/test_block_scan.py
                 tests/test_sharding_rules.py tests/test_compression.py
-                tests/test_async_mesh.py tests/test_faults.py)
+                tests/test_async_mesh.py tests/test_faults.py
+                tests/test_robust.py)
 
 run_unit() {
     python -m pytest -x -q -m "not slow" "$@"
@@ -77,6 +78,7 @@ try:
                  "feddeper_sync_block4", "feddeper_sync_mesh_block4",
                  "feddeper_sync_identity", "feddeper_sync_q8",
                  "feddeper_sync_topk", "feddeper_sync_faults",
+                 "feddeper_sync_robust",
                  "feddeper_async_fused", "feddeper_async_unfused",
                  "feddeper_async_mesh"))
     for r in rows:

@@ -43,6 +43,11 @@ from repro.core.rounds import (  # noqa: F401
     scatter_client_rows,
     state_is_finite,
 )
+from repro.robust.reducers import (  # noqa: F401
+    RobustConfig,
+    make_robust,
+    robust_reduce,
+)
 from repro.core.store import (  # noqa: F401
     DenseLayout,
     StoreLayout,

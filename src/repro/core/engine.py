@@ -52,9 +52,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.strategies import LocalWeights, Strategy, tmap
-from repro.faults.inject import (corrupt_payload, fault_draws,
-                                 fault_round_keys, screen_upload,
+from repro.faults.inject import (attack_round_key, corrupt_payload,
+                                 fault_draws, fault_round_keys,
+                                 needs_attack_key, screen_upload,
                                  wire_corruptor)
+from repro.robust.reducers import (bucket_finish, bucket_partials,
+                                   pack_cohort, robust_reduce)
 
 Pytree = Any
 
@@ -188,7 +191,14 @@ def make_per_client(strategy: Strategy, grad_fn, compressor=None,
     the decoded payload) -> server-side screening zeroes the weight AND
     the values of dropped/non-finite lanes.  A dropped client never ran:
     its cs/pms/ef rows revert to the pre-round values, so the scatter
-    writes back exactly what was there."""
+    writes back exactly what was there.
+
+    A STEALTH corrupt mode (``faults.STEALTH_MODES``) adds one final
+    BROADCAST operand -- the round's shared attack key -- so colluding
+    lanes coordinate without any cross-lane traffic; non-stealth fault
+    traces stay byte-identical to before."""
+    stealth = needs_attack_key(faults)
+
     def per_client(x_i, ctx_i, cs_i, batches_i):
         new_cs, upload, metrics = strategy.local_round(
             x_i, ctx_i, cs_i, batches_i, grad_fn)
@@ -208,6 +218,9 @@ def make_per_client(strategy: Strategy, grad_fn, compressor=None,
         return per_client_comm
 
     def per_client_faulty(x_i, ctx_i, cs_i, batches_i, *rest):
+        akey = None
+        if stealth:
+            rest, akey = rest[:-1], rest[-1]
         if compressor is not None:
             ef_i, key_i, pm_old_i, fkey_i = rest
         else:
@@ -222,7 +235,8 @@ def make_per_client(strategy: Strategy, grad_fn, compressor=None,
                 corrupt=wire_corruptor(faults, corrupted, k_pay))
             metrics = {**metrics, **cm}
         if compressor is None or faults.corrupt_mode != "bitflip":
-            upload = corrupt_payload(faults, upload, corrupted, k_pay)
+            upload = corrupt_payload(faults, upload, corrupted, k_pay,
+                                     akey=akey)
         upload, w_i, fm = screen_upload(faults, upload, dropped)
         revert = lambda old, new: tmap(
             lambda o, n: jnp.where(dropped, o, n), old, new)
@@ -276,7 +290,8 @@ class VmapPlacement:
 
     def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
                 grad_fn, p: float, compressor=None, ef=None, keys=None,
-                faults=None, pms=None, fkeys=None):
+                faults=None, pms=None, fkeys=None, robust=None,
+                akey=None):
         per_client = make_per_client(strategy, grad_fn, compressor,
                                      faults)
         args, axes = [x, ctx, cs, batches], [None, None, 0, 0]
@@ -286,6 +301,9 @@ class VmapPlacement:
         if faults is not None:
             args += [pms, fkeys]
             axes += [0, 0]
+        if akey is not None:
+            args += [akey]
+            axes += [None]
         out = jax.vmap(per_client, in_axes=tuple(axes))(*args)
         w = None
         if faults is not None:
@@ -294,19 +312,45 @@ class VmapPlacement:
             new_cs, uploads, pms_new, metrics, ef_new = out
         else:
             (new_cs, uploads, pms_new, metrics), ef_new = out, {}
+        mean_kw = {}
+        if robust is not None:
+            mean_kw["mean_fn"] = _robust_mean_fn(robust)
         if faults is None:
             x2, server2, agg_metrics = strategy.aggregate(x, server,
-                                                          uploads, p)
+                                                          uploads, p,
+                                                          **mean_kw)
         else:
             x2, server2, agg_metrics = strategy.aggregate(
-                x, server, uploads, p, weights=w)
+                x, server, uploads, p, weights=w, **mean_kw)
         metrics = {k: v.mean() for k, v in metrics.items()}
         metrics.update(agg_metrics)
         return new_cs, pms_new, x2, server2, metrics, ef_new
 
 
+def _robust_mean_fn(robust) -> Callable:
+    """The vmap placement's robust mean: the whole (m, ...) upload stack
+    is on one device, so the reducer (``repro.robust.robust_reduce``)
+    runs directly -- screening weights (raw (m,) array or LocalWeights)
+    become the reducer's lane weights, uniform ones otherwise.  Passed
+    as ``mean_fn`` so ``strategies.resolve_mean`` composition (and the
+    EXACTLY-ONCE contract: Scaffold's whole {dv, dc} dict arrives in one
+    call) is untouched.  Reduced leaves come back f32, same as the mesh
+    psum path."""
+    def mean_fn(tree: Pytree, weights=None) -> Pytree:
+        m = jax.tree.leaves(tree)[0].shape[0]
+        if weights is None:
+            w = jnp.ones((m,), jnp.float32)
+        elif isinstance(weights, LocalWeights):
+            w = weights.w
+        else:
+            w = jnp.asarray(weights, jnp.float32)
+        return robust_reduce(robust, tree, w)
+
+    return mean_fn
+
+
 def _psum_mean_fn(axis: str, metrics_local: Dict[str, jax.Array],
-                  box: Dict, axis_size: int) -> Callable:
+                  box: Dict, axis_size: int, robust=None) -> Callable:
     """The mean ``strategy.aggregate`` lowers to psum under shard_map:
     mean over the local cohort lanes, then ONE ``pmean`` across the client
     axis.  The per-round metric scalars are bundled into the same psum so
@@ -338,8 +382,65 @@ def _psum_mean_fn(axis: str, metrics_local: Dict[str, jax.Array],
     normalize-then-dot (atol 1e-6, DESIGN.md §10); all-zero surviving
     mass degrades to a zero delta, which equals the uniform mean of the
     screened (zero-valued) lanes.  The psum-ed weight sum is recorded on
-    the LocalWeights for Scaffold's p_eff -- still one collective."""
+    the LocalWeights for Scaffold's p_eff -- still one collective.
+
+    ``robust`` (a ``repro.robust.RobustConfig``) swaps the mean for a
+    robust reducer.  None is the bitwise default (this function's body
+    above is untouched).  The declared collective budget per mode:
+
+      * gather modes (trimmed/median/krum) need cross-client ORDER
+        information, so every upload leaf + the lane weights are packed
+        into ONE flat f32 buffer and ONE ``all_gather`` replicates the
+        full stack; each shard then runs the identical reducer on
+        identical data (deterministic => replicated result, no second
+        collective), and the metrics ride ONE scalar psum.  Budget:
+        1 all_gather + 1 psum, jaxpr-counted.
+      * bucket mode pre-aggregates lanes into B buckets by LINEAR
+        weighted partial sums, which therefore ride the round's ONE
+        psum alongside the local weight sum and metrics (same bundling
+        as the LocalWeights branch); the cheap inner reduce over the B
+        replicated bucket means is shard-local.  Budget: 1 psum --
+        O(1) cross-client data movement, same as the plain mean.
+
+    ``weights`` may be None (uniform), or the faults layer's shard-local
+    ``LocalWeights`` (its global sum is recovered from the gathered /
+    psum-ed weights for Scaffold's p_eff -- no extra collective).  The
+    async regime's replicated weight vector never reaches the robust
+    path (``--robust`` is sync-only, guarded at the CLI)."""
+    def robust_fn(tree: Pytree, weights) -> Pytree:
+        leaves = jax.tree.leaves(tree)
+        m_local = leaves[0].shape[0]
+        lw = None
+        if weights is None:
+            w_local = jnp.ones((m_local,), jnp.float32)
+        elif isinstance(weights, LocalWeights):
+            lw, w_local = weights, weights.w
+        else:
+            raise NotImplementedError(
+                "robust aggregation expects shard-local weights "
+                "(LocalWeights) or none; the async regime's replicated "
+                "weight vector is not supported")
+        if robust.mode == "bucket":
+            lane0 = jax.lax.axis_index(axis) * m_local
+            sums, wsum = bucket_partials(robust, tree, w_local, lane0)
+            sums, wsum, ws, msum = jax.lax.psum(
+                (sums, wsum, w_local.sum(), metrics_local), axis)
+            if lw is not None:
+                lw.set_global_sum(ws)
+            box["metrics"] = {k: v / axis_size for k, v in msum.items()}
+            return bucket_finish(robust, sums, wsum)
+        buf, unpack = pack_cohort(tree, w_local)
+        full = jax.lax.all_gather(buf, axis, axis=0, tiled=True)
+        tree_full, w_full = unpack(full)
+        if lw is not None:
+            lw.set_global_sum(w_full.sum())
+        msum = jax.lax.psum(metrics_local, axis)
+        box["metrics"] = {k: v / axis_size for k, v in msum.items()}
+        return robust_reduce(robust, tree_full, w_full)
+
     def mean_fn(tree: Pytree, weights=None) -> Pytree:
+        if robust is not None:
+            return robust_fn(tree, weights)
         if weights is None:
             local = tmap(lambda t: t.mean(0), tree)
             reduced, box["metrics"] = jax.lax.pmean((local, metrics_local),
@@ -523,20 +624,21 @@ class MeshPlacement:
         return mapped
 
     def _aggregate_tail(self, strategy, x, server, uploads, metrics, p,
-                        weights=None):
+                        weights=None, robust=None):
         """The shard-local aggregate: cohort-lane metric means + the
         strategy's aggregate with the delta-mean lowered to the round's
         ONE cross-client psum (metric scalars ride the same collective).
         ``weights`` (a ``LocalWeights``, the faults layer's shard-local
         screening weights) lowers screened aggregation into that same
-        psum."""
+        psum.  ``robust`` swaps the mean for a robust reducer within its
+        declared collective budget (``_psum_mean_fn``)."""
         axis = self.client_axis
         metrics_local = {k: v.mean() for k, v in metrics.items()}
         box: Dict = {}
         x2, server2, agg_metrics = strategy.aggregate(
             x, server, uploads, p, weights=weights,
             mean_fn=_psum_mean_fn(axis, metrics_local, box,
-                                  self.axis_size))
+                                  self.axis_size, robust))
         # a strategy that never called mean_fn still needs its metric
         # scalars reduced (costs a second, scalar-sized collective)
         metrics_global = box.get("metrics")
@@ -594,14 +696,18 @@ class MeshPlacement:
 
     def execute(self, strategy: Strategy, x, server, ctx, cs, batches,
                 grad_fn, p: float, compressor=None, ef=None, keys=None,
-                faults=None, pms=None, fkeys=None):
+                faults=None, pms=None, fkeys=None, robust=None,
+                akey=None):
         # compressed round: the per-client lane compresses AND
         # decompresses its upload (repro.comm contract), so the psum in
         # the aggregate tail still reduces a dense stack -- compression
         # adds no collective.  Faulty round: screening happens per-lane
         # too (shard-local weights, zeroed bad values), and the weight
         # vector lowers into the SAME psum via LocalWeights -- faults
-        # add no collective either.
+        # add no collective either.  A stealth attack key is BROADCAST
+        # (in_spec P()): colluders coordinate through the shared key,
+        # not through traffic.  ``robust`` swaps the aggregate-tail mean
+        # for a robust reducer inside its declared collective budget.
         c = P(self.client_axis)
         per_client = make_per_client(strategy, grad_fn, compressor,
                                      faults)
@@ -611,11 +717,15 @@ class MeshPlacement:
         if faults is not None:
             lane_args += [pms, fkeys]
         n_lane = len(lane_args)
+        n_bcast = 0 if akey is None else 1
+        if n_bcast:
+            lane_args += [akey]
         m_global = jax.tree.leaves(batches)[0].shape[0]
 
         def body(x, server, ctx, *lanes):
             out = jax.vmap(per_client,
-                           in_axes=(None, None) + (0,) * n_lane)(
+                           in_axes=(None, None) + (0,) * n_lane
+                           + (None,) * n_bcast)(
                 x, ctx, *lanes)
             w = None
             if faults is not None:
@@ -625,17 +735,28 @@ class MeshPlacement:
             else:
                 new_cs, uploads, pms_new, metrics = out
             x2, server2, metrics_global = self._aggregate_tail(
-                strategy, x, server, uploads, metrics, p, weights=w)
+                strategy, x, server, uploads, metrics, p, weights=w,
+                robust=robust)
             if compressor is not None:
                 return new_cs, pms_new, x2, server2, metrics_global, ef_new
             return new_cs, pms_new, x2, server2, metrics_global
 
-        in_specs = (P(), P(), P()) + (c,) * n_lane
+        in_specs = (P(), P(), P()) + (c,) * n_lane + (P(),) * n_bcast
         out_specs = (c, c, P(), P(), P())
         if compressor is not None:
             out_specs = out_specs + (c,)
+        sm_kw = {}
+        if robust is not None and robust.gathers:
+            # the gather modes' reduced model IS replicated -- every
+            # shard runs the identical deterministic reducer over the
+            # identical gathered stack -- but jax's rep-checker cannot
+            # infer replication through all_gather, so the static check
+            # is disabled for exactly these modes (the subprocess
+            # equivalence tests pin the actual replication)
+            sm_kw["check_rep"] = False
         out = shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                        out_specs=out_specs)(x, server, ctx, *lane_args)
+                        out_specs=out_specs, **sm_kw)(
+            x, server, ctx, *lane_args)
         if compressor is None:
             out = out + ({},)
         return out
@@ -709,7 +830,8 @@ def init_cohort_state(sim: SimConfig, strategy: Strategy, x: Pytree,
 
 def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
                     data: Dict[str, jax.Array], placement=None,
-                    compressor=None, faults=None) -> Callable:
+                    compressor=None, faults=None,
+                    robust=None) -> Callable:
     """The UN-jitted round body ``body(state) -> (state, metrics)``:
     sample -> gather -> local rounds -> scatter -> aggregate with the
     cohort axis placed per ``placement``.  Everything -- rng splitting,
@@ -733,11 +855,22 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
     other stream.  An INACTIVE config (fault_rate=0, clip off) is
     normalized to None here: the fault-free program is traced, so
     fault_rate=0 stays bitwise-equal to today's trace on both
-    placements."""
+    placements.
+
+    ``robust`` (repro.robust.RobustConfig, or a spec string) swaps the
+    aggregate's mean for a robust reducer on every placement; None (or
+    'none') traces the exact historical program -- same normalization
+    contract as ``faults``.  A stealth fault mode additionally threads
+    the round's shared attack key (one broadcast operand, no
+    collective) into the per-client lanes."""
+    from repro.robust.reducers import make_robust
     placement = placement or VmapPlacement()
     placement.check(sim)
     if faults is not None and not faults.active:
         faults = None
+    robust = make_robust(robust)
+    if robust is not None:
+        robust.check_cohort(sim.m_sampled)
     n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
     stateful = compressor is not None and compressor.stateful
 
@@ -765,6 +898,10 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
             comm_kw.update(faults=faults,
                            pms=gather_client_state(state["pms"], idx),
                            fkeys=fault_round_keys(k_batch, m))
+            if needs_attack_key(faults):
+                comm_kw["akey"] = attack_round_key(k_batch)
+        if robust is not None:
+            comm_kw["robust"] = robust
         new_cs, pms_new, x, server, metrics, ef_new = placement.execute(
             strategy, state["x"], state["server"], ctx, cs, batches,
             grad_fn, sim.p, **comm_kw)
@@ -796,7 +933,7 @@ def make_round_body(sim: SimConfig, strategy: Strategy, grad_fn,
 def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
                       data: Dict[str, jax.Array], *, placement=None,
                       donate: bool = True, compressor=None, faults=None,
-                      layout=None):
+                      layout=None, robust=None):
     """The per-round executor: returns jitted ``round_fn(state) -> (state,
     metrics)``.
 
@@ -805,7 +942,8 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
     the state pytree into the jitted call -- the client/pms stores update
     in place; the passed-in state must not be reused afterwards.
     ``compressor`` compresses the uplink; ``faults`` injects + screens
-    client faults (see ``make_round_body``).  A virtual ``layout``
+    client faults; ``robust`` swaps the aggregate's mean for a robust
+    reducer (see ``make_round_body``).  A virtual ``layout``
     (core.store) swaps in the host-backed executor: same contract, only
     cohort rows on device, trajectory bitwise-equal to dense."""
     from repro.core.store import make_virtual_round_fn, resolve_layout
@@ -814,9 +952,9 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
         return make_virtual_round_fn(
             sim, strategy, grad_fn, data, layout=layout,
             placement=placement, donate=donate, compressor=compressor,
-            faults=faults)
+            faults=faults, robust=robust)
     round_body = make_round_body(sim, strategy, grad_fn, data, placement,
-                                 compressor, faults)
+                                 compressor, faults, robust)
     if donate:
         return jax.jit(round_body, donate_argnums=(0,))
     return jax.jit(round_body)
@@ -825,7 +963,7 @@ def make_cohort_round(sim: SimConfig, strategy: Strategy, grad_fn,
 def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, block_size: int,
                   placement=None, donate: bool = True, compressor=None,
-                  faults=None, layout=None):
+                  faults=None, layout=None, robust=None):
     """The multi-round executor: ``block_size`` rounds inside ONE jitted
     ``lax.scan``.  Returns ``block_fn(state) -> (state, metrics)`` where
     every metric scalar comes back stacked as a ``(block_size,)`` array
@@ -854,9 +992,9 @@ def make_block_fn(sim: SimConfig, strategy: Strategy, grad_fn,
         return make_virtual_round_fn(
             sim, strategy, grad_fn, data, layout=layout,
             placement=placement, donate=donate, compressor=compressor,
-            faults=faults, block_size=block_size)
+            faults=faults, block_size=block_size, robust=robust)
     round_body = make_round_body(sim, strategy, grad_fn, data, placement,
-                                 compressor, faults)
+                                 compressor, faults, robust)
 
     def block_fn(state):
         def step(carry, _):

@@ -69,7 +69,7 @@ def init_sim_state(sim: SimConfig, strategy: Strategy, x: Pytree,
 def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
                   data: Dict[str, jax.Array], *, donate: bool = True,
                   placement=None, compressor=None, faults=None,
-                  layout=None):
+                  layout=None, robust=None):
     """data: per-client arrays with leading (n_clients, N_i) dims, e.g.
     {'x': (n, Ni, ...), 'y': (n, Ni)}.  Returns jitted round(state).
 
@@ -82,11 +82,14 @@ def make_round_fn(sim: SimConfig, strategy: Strategy, grad_fn,
     None is trace-identical to the pre-comm engine.  ``faults``
     (repro.faults) injects + screens client faults; None (or an inactive
     config) is trace-identical to the pre-fault engine.  ``layout``
-    (core.store) picks dense vs virtual client stores."""
+    (core.store) picks dense vs virtual client stores.  ``robust``
+    (repro.robust spec/config) swaps the aggregate's mean for a robust
+    reducer; None (or 'none') is trace-identical to the plain-mean
+    engine."""
     return make_cohort_round(sim, strategy, grad_fn, data,
                              placement=placement, donate=donate,
                              compressor=compressor, faults=faults,
-                             layout=layout)
+                             layout=layout, robust=robust)
 
 
 def peek_sampled_clients(state, sim: SimConfig) -> jax.Array:

@@ -55,7 +55,8 @@ import numpy as np
 
 from repro.core import engine as eng
 from repro.core.strategies import tmap
-from repro.faults.inject import fault_round_keys
+from repro.faults.inject import (attack_round_key, fault_round_keys,
+                                 needs_attack_key)
 
 Pytree = Any
 
@@ -467,7 +468,8 @@ def state_store_bytes(state: Dict[str, Any]) -> Optional[int]:
 def make_virtual_round_fn(sim, strategy, grad_fn, data, *, layout,
                           placement=None, donate: bool = True,
                           compressor=None, faults=None,
-                          block_size: Optional[int] = None):
+                          block_size: Optional[int] = None,
+                          robust=None):
     """Round/block executor over virtual stores: ``fn(state) -> (state,
     metrics)`` with the same contract as ``make_cohort_round``
     (``block_size=None``) or ``make_block_fn`` (metrics stacked
@@ -493,10 +495,14 @@ def make_virtual_round_fn(sim, strategy, grad_fn, data, *, layout,
     The returned fn exposes ``peak_bytes`` (compiled temp+output bytes,
     set at first call) and ``trace(state)`` (the block's jaxpr, for
     collective counting)."""
+    from repro.robust.reducers import make_robust
     placement = placement or eng.VmapPlacement()
     placement.check(sim)
     if faults is not None and not faults.active:
         faults = None
+    robust = make_robust(robust)
+    if robust is not None:
+        robust.check_cohort(sim.m_sampled)
     n, m, tau, b = (sim.n_clients, sim.m_sampled, sim.tau, sim.batch_size)
     stateful = compressor is not None and compressor.stateful
     K = 1 if block_size is None else int(block_size)
@@ -533,6 +539,10 @@ def make_virtual_round_fn(sim, strategy, grad_fn, data, *, layout,
                 faults=faults,
                 pms=eng.gather_client_state(carry["pms"], lidx),
                 fkeys=fault_round_keys(k_batch, m))
+            if needs_attack_key(faults):
+                comm_kw["akey"] = attack_round_key(k_batch)
+        if robust is not None:
+            comm_kw["robust"] = robust
         new_cs, pms_new, x, server, metrics, ef_new = placement.execute(
             strategy, carry["x"], carry["server"], ctx, cs, batches,
             grad_fn, sim.p, **comm_kw)

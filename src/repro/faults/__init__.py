@@ -1,9 +1,12 @@
 """Client fault injection, upload screening, and rng-salted schedules."""
-from repro.faults.inject import (CORRUPT_MODES, FaultConfig, corrupt_payload,
+from repro.faults.inject import (CORRUPT_MODES, STEALTH_MODES, FaultConfig,
+                                 attack_round_key, corrupt_payload,
                                  fault_draws, fault_round_keys, make_faults,
-                                 screen_upload, wire_corruptor)
+                                 needs_attack_key, screen_upload,
+                                 wire_corruptor)
 
 __all__ = [
-    "CORRUPT_MODES", "FaultConfig", "corrupt_payload", "fault_draws",
-    "fault_round_keys", "make_faults", "screen_upload", "wire_corruptor",
+    "CORRUPT_MODES", "STEALTH_MODES", "FaultConfig", "attack_round_key",
+    "corrupt_payload", "fault_draws", "fault_round_keys", "make_faults",
+    "needs_attack_key", "screen_upload", "wire_corruptor",
 ]

@@ -17,6 +17,13 @@ Fault classes (ISSUE 7 / DESIGN.md §10):
     uploads           Byzantine (sign-flip / scale), or bit-flips applied
                       to the compressed WIRE buffer (composing with
                       ``repro.comm``).
+  * stealth        -- finite-valued adversarial modes that PASS the
+    attacks           screening below and target the mean itself:
+                      ``alie`` (small-sigma collusion along one shared
+                      direction), ``collude`` (coordinated sign-flip,
+                      adaptive to ``clip_norm`` -- it rides the clip
+                      boundary), ``ipflip`` (inner-product flip,
+                      -z * upload).  Defended by ``repro.robust``.
   * stragglers     -- async-only deadline faults (``deadline``): a
                       dispatch whose simulated finish time exceeds the
                       deadline never delivers (``async_rounds``).
@@ -45,7 +52,18 @@ Pytree = Any
 # never perturbs the cohort/batch/comm streams.
 _FAULT_SALT = 0xFA017
 
-CORRUPT_MODES = ("nan", "inf", "signflip", "scale", "bitflip")
+# sub-salt WITHIN the 0xFA017 stream for the round's SHARED attack key:
+# colluding lanes coordinate through one broadcast key (fold_in-derived,
+# so it costs no collective and no draw), while fault_round_keys SPLITS
+# the same base key -- fold_in vs split keeps the two derivations
+# structurally disjoint (DESIGN.md §10 salt table).
+_ATTACK_TAG = 0xA11E
+
+# finite-valued colluding modes: they pass PR 7 screening by design and
+# need the shared per-round attack key threaded into the lane
+STEALTH_MODES = ("alie", "collude", "ipflip")
+CORRUPT_MODES = ("nan", "inf", "signflip", "scale", "bitflip") \
+    + STEALTH_MODES
 
 _UINT_OF_SIZE = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
 
@@ -66,6 +84,7 @@ class FaultConfig:
     corrupt_mode: str = "nan"
     corrupt_scale: float = 100.0   # 'scale' mode multiplier
     bitflip_frac: float = 1e-3     # 'bitflip' mode: fraction of elements
+    attack_z: float = 1.5          # stealth attack strength (alie/ipflip)
     deadline: float = 0.0          # async straggler deadline (0 = off)
     clip_norm: float = 0.0         # upload L2-norm clip (0 = off)
 
@@ -76,11 +95,14 @@ class FaultConfig:
                 raise ValueError(f"FaultConfig.{f}={v} not in [0, 1]")
         if self.corrupt_mode not in CORRUPT_MODES:
             raise ValueError(
-                f"corrupt_mode {self.corrupt_mode!r} not in {CORRUPT_MODES}")
+                f"corrupt_mode {self.corrupt_mode!r} not in "
+                f"{'|'.join(CORRUPT_MODES)}")
         if self.deadline < 0 or self.clip_norm < 0:
             raise ValueError("deadline / clip_norm must be >= 0")
         if not 0.0 <= self.bitflip_frac <= 1.0:
             raise ValueError("bitflip_frac must be in [0, 1]")
+        if self.attack_z <= 0:
+            raise ValueError("attack_z must be > 0")
 
     @property
     def active(self) -> bool:
@@ -106,6 +128,8 @@ class FaultConfig:
             parts.append(f"scale:{self.corrupt_scale:g}")
         if self.bitflip_frac != d.bitflip_frac:
             parts.append(f"bitflip:{self.bitflip_frac:g}")
+        if self.attack_z != d.attack_z:
+            parts.append(f"z:{self.attack_z:g}")
         if self.deadline != d.deadline:
             parts.append(f"deadline:{self.deadline:g}")
         if self.clip_norm != d.clip_norm:
@@ -117,7 +141,10 @@ def make_faults(spec: Optional[str], clip_norm: float = 0.0
                 ) -> Optional[FaultConfig]:
     """Parse a ``--faults`` spec ('drop:0.2,corrupt:0.05,mode:nan,
     deadline:3.5,...') into a FaultConfig; 'none'/''/None with no
-    clip_norm -> None (the engine's fault-free fast path)."""
+    clip_norm -> None (the engine's fault-free fast path).
+
+    Stealth sugar: ``collude:F`` == ``corrupt:F,mode:collude`` (same for
+    ``alie:F`` / ``ipflip:F``); ``z:VAL`` sets the attack strength."""
     kw: Dict[str, Any] = {}
     if spec and spec != "none":
         for tok in spec.split(","):
@@ -125,9 +152,16 @@ def make_faults(spec: Optional[str], clip_norm: float = 0.0
             if not tok:
                 continue
             if ":" not in tok:
-                raise ValueError(f"--faults token {tok!r}: want key:value")
+                raise ValueError(
+                    f"--faults token {tok!r}: want key:value (mode M in "
+                    f"{'|'.join(CORRUPT_MODES)})")
             k, v = tok.split(":", 1)
             k = k.strip()
+            if k in STEALTH_MODES:
+                # collude:0.2 == corrupt:0.2,mode:collude
+                kw["corrupt"] = float(v.strip())
+                kw["corrupt_mode"] = k
+                continue
             try:
                 key, cast = {
                     "drop": ("drop", float),
@@ -135,11 +169,16 @@ def make_faults(spec: Optional[str], clip_norm: float = 0.0
                     "mode": ("corrupt_mode", str),
                     "scale": ("corrupt_scale", float),
                     "bitflip": ("bitflip_frac", float),
+                    "z": ("attack_z", float),
                     "deadline": ("deadline", float),
                     "clip": ("clip_norm", float),
                 }[k]
             except KeyError:
-                raise ValueError(f"--faults: unknown key {k!r}") from None
+                raise ValueError(
+                    f"--faults: unknown key {k!r} (want drop|corrupt|mode"
+                    f"|scale|bitflip|z|deadline|clip or a stealth-mode "
+                    f"shorthand {'|'.join(STEALTH_MODES)}; mode M in "
+                    f"{'|'.join(CORRUPT_MODES)})") from None
             kw[key] = cast(v.strip())
     if clip_norm:
         kw["clip_norm"] = float(clip_norm)
@@ -156,6 +195,24 @@ def fault_round_keys(k_batch, m: int) -> jax.Array:
     round's batch key -- one definition for every placement and block
     size, so the fault schedule is a pure function of (seed, round)."""
     return jax.random.split(jax.random.fold_in(k_batch, _FAULT_SALT), m)
+
+
+def attack_round_key(k_batch) -> jax.Array:
+    """The round's SHARED stealth-attack key: every colluding lane
+    receives the same key (broadcast operand, zero collectives), so
+    their perturbations coordinate without cross-lane traffic.  Derived
+    INSIDE the 0xFA017 stream -- ``fold_in(fold_in(k_batch, 0xFA017),
+    0xA11E)`` -- while ``fault_round_keys`` SPLITS the same base key, so
+    the per-lane and shared streams cannot collide."""
+    return jax.random.fold_in(
+        jax.random.fold_in(k_batch, _FAULT_SALT), _ATTACK_TAG)
+
+
+def needs_attack_key(cfg: Optional[FaultConfig]) -> bool:
+    """True when the engine must thread the shared attack key into the
+    per-client lane (stealth corrupt modes only: the non-stealth traces
+    stay byte-identical to pre-stealth builds)."""
+    return cfg is not None and cfg.corrupt_mode in STEALTH_MODES
 
 
 def fault_draws(cfg: FaultConfig, fkey) -> Tuple[jax.Array, jax.Array,
@@ -190,12 +247,59 @@ def _bitflip_array(t: jax.Array, key, frac: float, gate) -> jax.Array:
 
 
 def corrupt_payload(cfg: FaultConfig, upload: Pytree, corrupted,
-                    key) -> Pytree:
+                    key, akey=None) -> Pytree:
     """Apply the configured non-wire corruption to one lane's (dense,
     decompressed) upload when ``corrupted`` is true.  'bitflip' here is
     the no-compressor fallback (with a compressor the flip targets the
-    wire buffer via ``wire_corruptor``)."""
+    wire buffer via ``wire_corruptor``).  The stealth modes take the
+    round's SHARED ``akey`` (``attack_round_key``): all colluding lanes
+    perturb coherently, which is what makes the plain mean crater while
+    per-lane noise would average out."""
     mode = cfg.corrupt_mode
+    if mode in STEALTH_MODES and akey is None:
+        raise ValueError(
+            f"stealth corrupt_mode {mode!r} needs the round's shared "
+            "attack key: pass akey=attack_round_key(k_batch) (a silent "
+            "per-lane fallback would de-coordinate the collusion)")
+    if mode == "alie":
+        # small-sigma collusion (a-little-is-enough): shift the upload
+        # z local-stds along ONE shared Rademacher direction.  Finite,
+        # norm-comparable to honest uploads -> passes screening; the
+        # coherent shift survives the mean but not a trim/Krum.
+        leaves, treedef = jax.tree_util.tree_flatten(upload)
+        out = []
+        for i, t in enumerate(leaves):
+            k_dir = jax.random.fold_in(akey, i)
+            d = jnp.where(jax.random.bernoulli(k_dir, 0.5, t.shape),
+                          1.0, -1.0)
+            tf = t.astype(jnp.float32)
+            pert = (tf + cfg.attack_z * jnp.std(tf) * d).astype(t.dtype)
+            out.append(jnp.where(corrupted, pert, t))
+        return jax.tree_util.tree_unflatten(treedef, out)
+    if mode == "collude":
+        # coordinated sign-flip: exactly -upload (norm-preserving, so
+        # norm screening is blind to it).  When the server clips, the
+        # colluders ADAPT: they rescale to ride exactly at the clip
+        # boundary -- the maximum admissible poisoned mass.
+        if cfg.clip_norm > 0:
+            leaves = jax.tree.leaves(upload)
+            sq = sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
+                     for t in leaves)
+            s = cfg.clip_norm * jax.lax.rsqrt(jnp.maximum(sq, 1e-30))
+        else:
+            s = jnp.asarray(1.0, jnp.float32)
+        return jax.tree.map(
+            lambda t: jnp.where(
+                corrupted, (-s * t.astype(jnp.float32)).astype(t.dtype),
+                t), upload)
+    if mode == "ipflip":
+        # inner-product flip (IPM-style, per-lane proxy): -z * upload
+        # reverses the aggregate's direction with z-fold weight
+        return jax.tree.map(
+            lambda t: jnp.where(
+                corrupted,
+                (-cfg.attack_z * t.astype(jnp.float32)).astype(t.dtype),
+                t), upload)
     if mode in ("nan", "inf"):
         v = float("nan") if mode == "nan" else float("inf")
         return jax.tree.map(
@@ -257,8 +361,13 @@ def screen_upload(cfg: FaultConfig, upload: Pytree, dropped
     if cfg.clip_norm > 0:
         sq = sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
                  for t in leaves)
-        # NaN norms are gated by ok=False below; the max keeps the rsqrt
-        # finite for all-zero uploads
+        # NaN norms are gated by ok=False below.  Zero-norm edge: an
+        # exactly-zero upload hits sq=0, the max floors it at 1e-30, and
+        # rsqrt(1e-30) ~ 3.2e13 * clip_norm blows past 1 -- the OUTER
+        # min is what pins its scale to exactly 1.0 (full weight, values
+        # untouched).  Both clauses are load-bearing; dropping either
+        # turns a zero upload into inf*0 inside the psum.  Pinned by
+        # test_screen_upload_zero_norm_scale_is_one.
         scale = jnp.minimum(
             1.0, cfg.clip_norm * jax.lax.rsqrt(jnp.maximum(sq, 1e-30)))
     else:

@@ -65,12 +65,25 @@ boundary rolls back to the last good state and retries with a reseeded
 schedule (``--max-retries`` bounds it).  ``--regime async`` instead
 takes ``--faults deadline:T``: dispatches finishing after T simulated
 time units never deliver.  Resumed runs re-validate the checkpoint's
-``compress``/``faults`` metadata against the CLI and fail fast on
-mismatch:
+``compress``/``faults``/``robust`` metadata against the CLI and fail
+fast on mismatch:
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
       --reduced --placement vmap --clients 4 --tau 2 --rounds 12 \
       --batch 2 --seq 64 --faults drop:0.2,corrupt:0.05 --clip-norm 10
+
+``--robust {none,trimmed:F,median,krum:F,bucket:B}`` (engine
+placements) swaps the aggregate's plain mean for a Byzantine-robust
+reducer (repro/robust, DESIGN.md §12): screening weights feed the trim,
+``robust=none`` traces the identical program, and the mesh lowering
+stays within a declared collective budget (trimmed/krum: one all-gather
++ one psum; bucket: the round's single psum).  Pair with the stealth
+fault modes to run the attack-defense matrix:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --placement mesh --clients 8 --sampled 4 --tau 2 \
+      --rounds 24 --batch 2 --seq 64 --faults collude:0.2 \
+      --robust trimmed:0.25
 
 ``--store virtual[:host|:recon|:shard[:DIR]]`` (engine placements and
 the async regime) swaps the dense ``(n_clients, ...)`` client/pms/EF
@@ -104,7 +117,8 @@ from repro.core import (AsyncSimConfig, RollbackGuard, STRATEGIES,
                         make_async_round_fn, make_block_fn,
                         make_global_eval, make_layout, make_placement,
                         make_round_fn, make_round_step, run_blocks)
-from repro.faults import make_faults
+from repro.faults import CORRUPT_MODES, make_faults
+from repro.robust import ROBUST_MODES, make_robust
 from repro.core.federated import make_lm_grad_fn
 from repro.data import lm_client_batch, make_federated_lm
 from repro.models import init_model, transformer
@@ -299,6 +313,7 @@ def run_engine(cfg, strategy, args):
     compressor = make_compressor(args.compress)
     layout = make_layout(args.store)
     faults = make_faults(args.faults, clip_norm=args.clip_norm)
+    robust = make_robust(args.robust)
     if faults is not None and not faults.active:
         raise SystemExit("--faults deadline:T is the async regime's "
                          "straggler model: pass --regime async (the "
@@ -319,11 +334,14 @@ def run_engine(cfg, strategy, args):
                       compressor, strategy, x, m)}
     if faults is not None:
         comm_extra["faults"] = faults.spec
+    if robust is not None:
+        comm_extra["robust"] = robust.spec
     if layout.virtual:
         comm_extra["store"] = layout.spec
     cfg_meta = {"compress": compressor.name if compressor else "none",
                 "faults": faults.spec if faults else "none",
-                "store": layout.spec}
+                "store": layout.spec,
+                "robust": robust.spec if robust else "none"}
 
     start, _ = _restore_state(state, args, expect=cfg_meta)
     if start:
@@ -365,7 +383,7 @@ def run_engine(cfg, strategy, args):
             state, lambda size: make_block_fn(
                 sim, strategy, grad_fn, data, block_size=size,
                 placement=placement, compressor=compressor,
-                faults=faults, layout=layout),
+                faults=faults, layout=layout, robust=robust),
             args.rounds - start, args.block_rounds, eval_fn=eval_fn,
             log=log, on_block=on_block, first_round=start, guard=guard)
         if args.ckpt_dir:
@@ -375,7 +393,7 @@ def run_engine(cfg, strategy, args):
 
     round_fn = make_round_fn(sim, strategy, grad_fn, data,
                              placement=placement, compressor=compressor,
-                             faults=faults, layout=layout)
+                             faults=faults, layout=layout, robust=robust)
     return _drive_rounds(state, round_fn, args, start,
                          rec_extra={"placement": placement.name,
                                     **comm_extra},
@@ -463,12 +481,25 @@ def main(argv=None):
     # deadline-only faults on the async regime
     ap.add_argument("--faults", default="none",
                     help="fault spec: none | drop:P,corrupt:P[,mode:M,"
-                         "scale:S,bitflip:F,deadline:T] -- per-client "
-                         "per-round dropouts / corrupted uploads "
-                         "(M in nan|inf|signflip|scale|bitflip), all "
-                         "derived deterministically from the round rng; "
-                         "deadline:T is async-only (dispatches finishing "
-                         "after T sim-time units never deliver)")
+                         "scale:S,bitflip:F,z:Z,deadline:T] -- "
+                         "per-client per-round dropouts / corrupted "
+                         f"uploads (M in {'|'.join(CORRUPT_MODES)}; the "
+                         "stealth modes alie/collude/ipflip also take "
+                         "the shorthand alie:P etc. and strength z:Z), "
+                         "all derived deterministically from the round "
+                         "rng; deadline:T is async-only (dispatches "
+                         "finishing after T sim-time units never "
+                         "deliver)")
+    ap.add_argument("--robust", default="none",
+                    help="Byzantine-robust aggregation (repro.robust): "
+                         f"none | {' | '.join(ROBUST_MODES)} -- "
+                         "trimmed:F per-coordinate trimmed mean (trim "
+                         "fraction F per tail), median, krum:F "
+                         "keep-closest-to-the-pack filtering, "
+                         "bucket:B[,inner:median|trimmed] bucketed "
+                         "robust mean (B buckets ride the round's "
+                         "single psum); 'none' is trace-identical to "
+                         "the plain mean (engine placements only)")
     ap.add_argument("--clip-norm", type=float, default=0.0,
                     help="server-side upload-norm clip: uploads with "
                          "l2 norm above C are scaled down inside the "
@@ -518,6 +549,16 @@ def main(argv=None):
                          "paths: pass --placement {vmap,mesh} or "
                          "--regime async (the legacy fixed-cohort "
                          "datacenter step has no screening seam)")
+    if args.robust != "none" and args.regime == "async":
+        raise SystemExit("--robust reduces one synchronous cohort's "
+                         "upload stack: the async regime's staleness-"
+                         "discounted buffer aggregates incrementally and "
+                         "has no robust seam (run --regime datacenter)")
+    if args.robust != "none" and not args.placement:
+        raise SystemExit("--robust rides the cohort engine's aggregate "
+                         "seam: pass --placement {vmap,mesh} (the legacy "
+                         "fixed-cohort datacenter step has no mean_fn "
+                         "seam)")
     if args.clip_norm and args.regime == "async":
         raise SystemExit("--clip-norm screens synchronous cohort uploads "
                          "inside the weighted mean: the async regime's "

@@ -1,0 +1,23 @@
+"""Byzantine-robust aggregation: pluggable robust reducers between the
+per-client uploads and the global mean (DESIGN.md §12)."""
+from repro.robust.reducers import (GATHER_MODES, ROBUST_MODES,
+                                   RobustConfig, bucket_finish,
+                                   bucket_partials, krum_weights,
+                                   make_robust, masked_mean, pack_cohort,
+                                   robust_reduce, trim_count,
+                                   trimmed_reduce)
+
+__all__ = [
+    "GATHER_MODES",
+    "ROBUST_MODES",
+    "RobustConfig",
+    "bucket_finish",
+    "bucket_partials",
+    "krum_weights",
+    "make_robust",
+    "masked_mean",
+    "pack_cohort",
+    "robust_reduce",
+    "trim_count",
+    "trimmed_reduce",
+]

@@ -1,0 +1,333 @@
+"""Byzantine-robust aggregation reducers over the cohort upload stack.
+
+The round engine's aggregate is a weighted mean over the (m, ...) upload
+stack (strategies.resolve_mean); a finite-valued adversarial upload --
+sign-flips, coordinated collusion, small-sigma perturbations -- passes
+PR 7's screening (which only rejects non-finite values and oversized
+norms) and poisons that mean.  This module supplies drop-in ROBUST
+replacements for the mean, pure functions of ``(tree, w)`` where every
+leaf has a leading cohort axis of size m and ``w`` is the (m,) screening
+weight vector (1.0 for unscreened lanes):
+
+  * ``trimmed`` -- per-COORDINATE sort; drop the f lowest and f highest
+    values (f = round(frac * m)); weighted mean of the kept band.
+  * ``median``  -- trimmed with f = (m-1)//2: the per-coordinate
+    (weighted mid-)median.
+  * ``krum``    -- Krum-lite geometric filtering: score each lane by its
+    weighted squared distance to the whole cohort (one Gram matrix over
+    the flattened uploads); keep the m-f closest-to-the-pack lanes and
+    take their weighted mean.  Coordinate-wise attacks that hide inside
+    per-coordinate order statistics still move the lane away from the
+    pack in l2.
+  * ``bucket``  -- bucketed robust mean: lanes pre-aggregate into B
+    buckets (global lane g -> bucket g % B) by WEIGHTED partial sums,
+    then a cheap robust reduce (median/trimmed) runs over the B bucket
+    means.  The partial sums are linear, so under the mesh placement
+    they ride the round's existing single psum -- O(1) cross-client
+    data movement, no all-gather (engine._psum_mean_fn).
+
+Screening composes: a screened lane enters with w=0 AND zero values
+(faults.screen_upload), so it is massless in every weighted band/mask
+here.  Zero-weight lanes do sit at value 0 inside the coordinate sorts
+(they occupy trim-band slots without mass); under heavy drop rates
+widen ``frac`` accordingly -- documented in DESIGN.md §12.
+
+All reducer math is f32 regardless of the upload dtype (low-precision
+``upload_dtype`` uploads are upcast exactly like the weighted-mean
+path); reduced leaves come back f32, matching what the mesh psum path
+has always handed the strategy's _axpy.
+
+Collective budget per mode under the mesh placement (jaxpr-counted,
+DESIGN.md §12):
+
+    none              1 psum             (the bitwise default path)
+    trimmed | median  1 all_gather + 1 psum
+    krum              1 all_gather + 1 psum
+    bucket            1 psum             (partials ride THE psum)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+ROBUST_MODES = ("trimmed", "median", "krum", "bucket")
+# modes that need cross-client ORDER information: under the mesh
+# placement they gather the full packed upload stack (one all_gather)
+# and reduce it replicated-identically on every shard
+GATHER_MODES = ("trimmed", "median", "krum")
+_INNER_MODES = ("median", "trimmed")
+
+
+@dataclass(frozen=True)
+class RobustConfig:
+    """One robust-aggregation spec.  ``frac`` is the per-tail trim
+    fraction (trimmed / bucket-inner trimmed) or the filtered fraction
+    (krum: keep m - round(frac*m) lanes); ``buckets``/``inner`` only
+    apply to bucket mode."""
+
+    mode: str
+    frac: float = 0.25
+    buckets: int = 4
+    inner: str = "median"
+
+    def __post_init__(self):
+        if self.mode not in ROBUST_MODES:
+            raise ValueError(
+                f"robust mode {self.mode!r} not in {ROBUST_MODES}")
+        if not 0.0 <= self.frac < 0.5:
+            raise ValueError(
+                f"robust frac must be in [0, 0.5), got {self.frac}")
+        if self.buckets < 2:
+            raise ValueError(
+                f"robust buckets must be >= 2, got {self.buckets}")
+        if self.inner not in _INNER_MODES:
+            raise ValueError(
+                f"robust inner mode {self.inner!r} not in {_INNER_MODES}")
+
+    @property
+    def gathers(self) -> bool:
+        """True when the mesh lowering needs the one all_gather."""
+        return self.mode in GATHER_MODES
+
+    @property
+    def spec(self) -> str:
+        """Canonical spec string (parse . spec == identity): what goes
+        into checkpoint meta and bench config rows."""
+        d = RobustConfig("median")
+        if self.mode == "median":
+            return "median"
+        if self.mode in ("trimmed", "krum"):
+            return f"{self.mode}:{self.frac:g}"
+        s = f"bucket:{self.buckets}"
+        if self.inner != d.inner:
+            s += f",inner:{self.inner}"
+        if self.inner == "trimmed" and self.frac != d.frac:
+            s += f",frac:{self.frac:g}"
+        return s
+
+    def check_cohort(self, m: int) -> None:
+        """Static feasibility vs the cohort size (mirrors
+        MeshPlacement.check): the trim band / kept set must be
+        non-empty."""
+        if self.mode == "trimmed" and 2 * trim_count(self.frac, m) >= m:
+            raise ValueError(
+                f"robust trimmed:{self.frac:g} trims "
+                f"{2 * trim_count(self.frac, m)} of m={m} lanes; "
+                "lower frac or enlarge the cohort")
+        if self.mode == "krum" and m - trim_count(self.frac, m) < 1:
+            raise ValueError(
+                f"robust krum:{self.frac:g} keeps no lanes at m={m}")
+        if self.mode == "bucket" and self.buckets > m:
+            raise ValueError(
+                f"robust bucket:{self.buckets} exceeds the cohort size "
+                f"m={m}: empty buckets would dilute the inner reduce")
+
+
+def make_robust(spec) -> RobustConfig | None:
+    """Parse a ``--robust`` spec string into a RobustConfig.
+
+    Grammar: ``none`` | ``median`` | ``trimmed[:F]`` | ``krum[:F]`` |
+    ``bucket[:B][,inner:median|trimmed][,frac:F]``.  None/''/'none'
+    return None -- the engine's bitwise no-robust fast path (mirrors
+    ``make_faults`` normalizing inactive configs).  A RobustConfig
+    passes through unchanged."""
+    if spec is None or isinstance(spec, RobustConfig):
+        return spec
+    spec = spec.strip()
+    if spec in ("", "none"):
+        return None
+    toks = spec.split(",")
+    mode, _, val = toks[0].partition(":")
+    if mode not in ROBUST_MODES:
+        raise ValueError(
+            f"--robust: unknown mode {mode!r} "
+            f"(want none|{'|'.join(ROBUST_MODES)})")
+    kw = {}
+    if val:
+        if mode in ("trimmed", "krum"):
+            kw["frac"] = float(val)
+        elif mode == "bucket":
+            kw["buckets"] = int(val)
+        else:
+            raise ValueError(
+                f"--robust: {mode} takes no parameter, got {val!r}")
+    for tok in toks[1:]:
+        k, _, v = tok.partition(":")
+        if mode != "bucket" or k not in ("inner", "frac"):
+            raise ValueError(
+                f"--robust: unknown key {k!r} in {spec!r} "
+                "(only bucket mode takes inner:MODE and frac:F)")
+        kw[k] = v if k == "inner" else float(v)
+    return RobustConfig(mode, **kw)
+
+
+def trim_count(frac: float, m: int) -> int:
+    """Lanes trimmed per tail (trimmed) / filtered in total (krum)."""
+    return int(round(frac * m))
+
+
+# ---------------------------------------------------------------------------
+# the reducers: pure (tree, w) -> tree functions
+# ---------------------------------------------------------------------------
+
+def _trimmed_leaf(t: jax.Array, w: jax.Array, f_lo: int,
+                  f_hi: int) -> jax.Array:
+    """Weighted trimmed mean of one (m, ...) leaf: per-coordinate value
+    sort, the weights permuted INTO value order alongside, keep the band
+    [f_lo : m - f_hi], weighted mean over the band.  Zero band mass
+    (every kept lane screened) falls back to the band's uniform mean --
+    the kept values are then all zero-valued screened lanes, so the
+    fallback matches the psum path's zero-delta degradation."""
+    m = t.shape[0]
+    v = t.astype(jnp.float32).reshape(m, -1)  # (m, d)
+    order = jnp.argsort(v, axis=0)
+    vs = jnp.take_along_axis(v, order, axis=0)
+    ws = jnp.take_along_axis(
+        jnp.broadcast_to(w.astype(jnp.float32)[:, None], v.shape),
+        order, axis=0)
+    vk, wk = vs[f_lo:m - f_hi], ws[f_lo:m - f_hi]
+    tot = wk.sum(axis=0)  # (d,) -- band mass varies per coordinate
+    num = (wk * vk).sum(axis=0)
+    out = jnp.where(tot > 0, num / jnp.where(tot > 0, tot, 1.0),
+                    vk.mean(axis=0))
+    return out.reshape(t.shape[1:])
+
+
+def _tail_counts(cfg: RobustConfig, m: int, inner: bool = False) -> int:
+    mode = cfg.inner if inner else cfg.mode
+    if mode == "median":
+        return (m - 1) // 2
+    return trim_count(cfg.frac, m)
+
+
+def trimmed_reduce(cfg: RobustConfig, tree: Pytree,
+                   w: jax.Array) -> Pytree:
+    """trimmed / median over the full (m, ...) stack."""
+    m = w.shape[0]
+    f = _tail_counts(cfg, m)
+    return jax.tree.map(lambda t: _trimmed_leaf(t, w, f, f), tree)
+
+
+def krum_weights(cfg: RobustConfig, tree: Pytree,
+                 w: jax.Array) -> jax.Array:
+    """Krum-lite lane mask * screening weights: one (m, m) Gram matrix
+    over the flattened uploads gives every pairwise squared distance;
+    lane i's score is its WEIGHTED distance to the whole cohort
+    (screened lanes exert no pull and score +inf so they are never
+    kept); the m - f smallest scores survive."""
+    m = w.shape[0]
+    keep = max(m - trim_count(cfg.frac, m), 1)
+    g = jnp.zeros((m, m), jnp.float32)
+    for t in jax.tree.leaves(tree):
+        v = t.astype(jnp.float32).reshape(m, -1)
+        g = g + v @ v.T
+    sq = jnp.diagonal(g)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * g
+    wf = w.astype(jnp.float32)
+    score = (d2 * wf[None, :]).sum(axis=1)
+    score = jnp.where(wf > 0, score, jnp.inf)
+    _, idx = jax.lax.top_k(-score, keep)
+    mask = jnp.zeros((m,), jnp.float32).at[idx].set(1.0)
+    return mask * wf
+
+
+def masked_mean(tree: Pytree, wm: jax.Array) -> Pytree:
+    """Weighted mean over the stack under combined weights ``wm``; zero
+    total mass falls back to the uniform mean (all-screened cohorts are
+    all-zero-valued, so this degrades to the psum path's zero delta)."""
+    tot = wm.sum()
+    safe = jnp.where(tot > 0, tot, 1.0)
+    return jax.tree.map(
+        lambda t: jnp.where(
+            tot > 0,
+            jnp.tensordot(wm, t.astype(jnp.float32), axes=(0, 0)) / safe,
+            t.astype(jnp.float32).mean(axis=0)),
+        tree)
+
+
+def bucket_partials(cfg: RobustConfig, tree: Pytree, w: jax.Array,
+                    lane0) -> Tuple[Pytree, jax.Array]:
+    """Per-bucket WEIGHTED partial sums over the local lanes: global
+    lane g = lane0 + local index lands in bucket g % B.  Returns
+    ``(sums, wsum)`` with a leading (B,) axis -- both LINEAR in the
+    lanes, which is exactly why the mesh lowering can psum them inside
+    the round's one collective (``lane0 = axis_index * m_local`` keeps
+    the global bucket assignment identical to the vmap path)."""
+    m_local = w.shape[0]
+    b = jnp.mod(lane0 + jnp.arange(m_local), cfg.buckets)
+    wf = w.astype(jnp.float32)
+    wsum = jnp.zeros((cfg.buckets,), jnp.float32).at[b].add(wf)
+    sums = jax.tree.map(
+        lambda t: jnp.zeros((cfg.buckets,) + t.shape[1:], jnp.float32)
+        .at[b].add(wf.reshape((m_local,) + (1,) * (t.ndim - 1))
+                   * t.astype(jnp.float32)),
+        tree)
+    return sums, wsum
+
+
+def bucket_finish(cfg: RobustConfig, sums: Pytree,
+                  wsum: jax.Array) -> Pytree:
+    """Bucket means + the inner robust reduce over the B (replicated)
+    buckets, with the bucket masses as the inner weights: an empty
+    bucket is a zero-valued zero-mass row, exactly a screened lane one
+    level up."""
+    f = _tail_counts(cfg, cfg.buckets, inner=True)
+    safe = jnp.where(wsum > 0, wsum, 1.0)
+    return jax.tree.map(
+        lambda s: _trimmed_leaf(
+            s / safe.reshape((cfg.buckets,) + (1,) * (s.ndim - 1)),
+            wsum, f, f),
+        sums)
+
+
+def robust_reduce(cfg: RobustConfig, tree: Pytree,
+                  w: jax.Array) -> Pytree:
+    """The full-stack robust reduce: dispatch on mode.  ``tree`` leaves
+    carry the (m, ...) cohort axis, ``w`` is the (m,) screening weight
+    vector (ones when nothing screens).  Single-device semantics; the
+    mesh placement reassembles the same full stack from its shards
+    first (engine._psum_mean_fn), so both placements run THIS math."""
+    if cfg.mode in ("trimmed", "median"):
+        return trimmed_reduce(cfg, tree, w)
+    if cfg.mode == "krum":
+        return masked_mean(tree, krum_weights(cfg, tree, w))
+    sums, wsum = bucket_partials(cfg, tree, w, 0)
+    return bucket_finish(cfg, sums, wsum)
+
+
+# ---------------------------------------------------------------------------
+# mesh packing: ONE all_gather for the whole upload stack
+# ---------------------------------------------------------------------------
+
+def pack_cohort(tree: Pytree, w: jax.Array) -> Tuple[jax.Array, Callable]:
+    """Flatten the (m_local, ...) upload stack + per-lane weights into
+    ONE f32 (m_local, D+1) buffer.  ``jax.lax.all_gather`` emits one
+    primitive PER LEAF when handed a pytree; packing first keeps the
+    mesh gather modes at exactly one all_gather in the jaxpr -- the
+    declared collective budget -- mirroring how the psum path bundles
+    its operands into one collective.  Returns ``(buf, unpack)`` where
+    ``unpack(full)`` splits a gathered (m, D+1) buffer back into the
+    full-cohort (tree, w)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    m = w.shape[0]
+    shapes = [t.shape[1:] for t in leaves]
+    buf = jnp.concatenate(
+        [t.astype(jnp.float32).reshape(m, -1) for t in leaves]
+        + [w.astype(jnp.float32)[:, None]], axis=1)
+
+    def unpack(full: jax.Array):
+        out, o = [], 0
+        for s in shapes:
+            d = 1
+            for n in s:
+                d *= n
+            out.append(full[:, o:o + d].reshape((full.shape[0],) + s))
+            o += d
+        return jax.tree.unflatten(treedef, out), full[:, o]
+
+    return buf, unpack

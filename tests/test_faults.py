@@ -124,6 +124,32 @@ def test_make_faults_rejects_bad_specs():
         make_faults("drop:1.5")
     for mode in CORRUPT_MODES:
         assert make_faults(f"corrupt:0.1,mode:{mode}") is not None
+    # unknown-key errors enumerate every corrupt mode (stealth included):
+    # the CLI user sees the full vocabulary, not just the legal keys
+    with pytest.raises(ValueError) as ei:
+        make_faults("bogus:1")
+    for mode in CORRUPT_MODES:
+        assert mode in str(ei.value)
+
+
+def test_make_faults_stealth_shorthand():
+    """Stealth sugar: 'alie:P' == 'corrupt:P,mode:alie' (ditto collude /
+    ipflip), with z:Z feeding attack_z; the canonical spec survives a
+    roundtrip."""
+    from repro.faults import STEALTH_MODES, needs_attack_key
+    for mode in STEALTH_MODES:
+        cfg = make_faults(f"{mode}:0.2")
+        assert cfg.corrupt == 0.2 and cfg.corrupt_mode == mode
+        assert needs_attack_key(cfg)
+        assert make_faults(cfg.spec).spec == cfg.spec
+    cfg = make_faults("alie:0.25,z:2.5,clip:4.0")
+    assert cfg.attack_z == 2.5 and cfg.clip_norm == 4.0
+    assert make_faults(cfg.spec).spec == cfg.spec
+    # non-stealth modes need no attack key (the engine's broadcast
+    # operand only appears for stealth configs)
+    assert not needs_attack_key(make_faults("corrupt:0.2,mode:signflip"))
+    with pytest.raises(ValueError, match="attack_z must be > 0"):
+        make_faults("alie:0.2,z:-1")
 
 
 # --------------------------------------------------------- screening units
@@ -157,15 +183,55 @@ def test_screen_upload_norm_clip():
     assert float(w1) == 1.0
 
 
+def test_screen_upload_zero_norm_scale_is_one():
+    """The zero-norm edge the clip guard comment pins: an exactly-zero
+    upload has sq=0; the 1e-30 floor keeps rsqrt finite and the outer
+    min pins the scale to EXACTLY 1.0 -- full weight, values untouched,
+    nothing screened.  Dropping either clause of the guard turns this
+    lane into inf*0 inside the psum."""
+    cfg = FaultConfig(clip_norm=5.0)
+    up = {"a": jnp.zeros(4), "b": jnp.zeros((2, 3))}
+    clean, w, fm = screen_upload(cfg, up, jnp.asarray(False))
+    assert float(w) == 1.0  # exact, not approximately
+    assert float(fm["screened"]) == 0.0
+    for leaf in jax.tree.leaves(clean):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+def test_screen_upload_clip_composes_with_signflip():
+    """clip o signflip: a sign-flipped over-norm upload is CLIPPED
+    (weight in (0, 1), values preserved, screened=0), not zeroed -- the
+    finite-value gate and the norm clip are independent clauses."""
+    cfg = FaultConfig(corrupt=1.0, corrupt_mode="signflip", clip_norm=5.0)
+    up = {"a": jnp.full((4,), 5.0)}  # l2 norm 10 -> scale 0.5
+    flipped = corrupt_payload(cfg, up, jnp.asarray(True),
+                              jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(flipped["a"]), -5.0)
+    clean, w, fm = screen_upload(cfg, flipped, jnp.asarray(False))
+    np.testing.assert_allclose(float(w), 0.5, rtol=1e-6)
+    assert float(fm["screened"]) == 0.0
+    # values pass through un-rescaled: the WEIGHT carries the clip
+    np.testing.assert_array_equal(np.asarray(clean["a"]),
+                                  np.asarray(flipped["a"]))
+
+
 def test_corrupt_payload_modes():
+    from repro.faults import STEALTH_MODES, attack_round_key
     key = jax.random.PRNGKey(0)
+    akey = attack_round_key(key)
     up = {"a": jnp.arange(4, dtype=jnp.float32) + 1.0}
     on, off = jnp.asarray(True), jnp.asarray(False)
     for mode in CORRUPT_MODES:
         cfg = FaultConfig(corrupt=1.0, corrupt_mode=mode)
-        out_off = corrupt_payload(cfg, up, off, key)
+        out_off = corrupt_payload(cfg, up, off, key, akey=akey)
         np.testing.assert_array_equal(np.asarray(out_off["a"]),
                                       np.asarray(up["a"]), err_msg=mode)
+    # a stealth mode without the shared key fails loudly, not deep in
+    # jax.random with a cryptic NoneType error
+    for mode in STEALTH_MODES:
+        with pytest.raises(ValueError, match="shared\\s+attack key"):
+            corrupt_payload(FaultConfig(corrupt=1.0, corrupt_mode=mode),
+                            up, on, key)
     nan = corrupt_payload(FaultConfig(corrupt=1.0), up, on, key)
     assert np.all(np.isnan(np.asarray(nan["a"])))
     sf = corrupt_payload(

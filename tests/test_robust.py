@@ -1,0 +1,648 @@
+"""Byzantine-robust aggregation: reducers, stealth attacks, screening
+composition (ISSUE 9).
+
+Contract under test: ``robust=none`` is normalized out of the trace --
+the round program is BITWISE the plain engine's on both placements (one
+psum, jaxpr-counted) for FedDeper AND Scaffold, across the host loop,
+scan blocks, and EF compression.  The gather modes (trimmed / median /
+krum) cost exactly ONE all_gather + ONE psum on the mesh; bucket mode
+rides the round's single psum.  Both placements run the same reducer
+math over the same full stack, so mesh == vmap bitwise for every mode.
+Stealth attacks (alie / collude / ipflip) are finite-valued -- they pass
+PR 7's screening by construction -- and the acceptance run pins that
+Krum recovers what the plain mean loses under clip-riding collusion.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+from repro.comm import make_compressor
+from repro.configs.paper_models import MLP_MNIST
+from repro.core import (FedDeper, MeshPlacement, Scaffold, SimConfig,
+                        RobustConfig, init_sim_state, make_block_fn,
+                        make_global_eval, make_layout, make_robust,
+                        make_round_fn, run_blocks, run_rounds,
+                        state_is_finite)
+from repro.core.store import make_virtual_round_fn
+from repro.data import make_federated_classification
+from repro.faults import (FaultConfig, STEALTH_MODES, attack_round_key,
+                          corrupt_payload, make_faults, needs_attack_key)
+from repro.launch.mesh import make_client_mesh
+from repro.models import classifier_loss, init_classifier
+from repro.robust import (ROBUST_MODES, bucket_finish, bucket_partials,
+                          krum_weights, masked_mean, pack_cohort,
+                          robust_reduce, trim_count, trimmed_reduce)
+
+CFG = MLP_MNIST
+
+DEPER = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+
+
+def apply_loss(p, b):
+    return classifier_loss(CFG, p, b)
+
+
+def grad_fn(p, mb):
+    (l, _), g = jax.value_and_grad(apply_loss, has_aux=True)(p, mb)
+    return l, g
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_classification(n_clients=6, per_client=64,
+                                         split="shards", seed=2)
+
+
+@pytest.fixture(scope="module")
+def data(ds):
+    return {k: jnp.asarray(v) for k, v in ds.train.items()}
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return init_classifier(CFG, jax.random.PRNGKey(11))
+
+
+SIM = SimConfig(n_clients=6, m_sampled=4, tau=2, batch_size=16, seed=5)
+
+# every reducer mode at a parameterization feasible for m=4
+MODE_SPECS = ("trimmed:0.25", "median", "krum:0.25", "bucket:4")
+
+COLLECTIVES = {"psum", "psum2", "all_gather", "all_to_all", "ppermute",
+               "pmax", "pmin"}
+
+
+def count_collectives(jaxpr, names=COLLECTIVES):
+    counts = {}
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in names:
+            counts[eqn.primitive.name] = \
+                counts.get(eqn.primitive.name, 0) + 1
+        for v in eqn.params.values():
+            sub = None
+            if hasattr(v, "eqns"):
+                sub = v
+            elif hasattr(v, "jaxpr"):
+                sub = v.jaxpr
+            if sub is not None:
+                for k, n in count_collectives(sub, names).items():
+                    counts[k] = counts.get(k, 0) + n
+    return counts
+
+
+def _leaves_equal(a, b, keys=("x", "clients", "pms"), atol=0.0, msg=""):
+    for key in keys:
+        for la, lb in zip(jax.tree.leaves(a[key]), jax.tree.leaves(b[key])):
+            if atol:
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=0, atol=atol,
+                                           err_msg=f"{msg}{key}")
+            else:
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb),
+                                              err_msg=f"{msg}{key}")
+
+
+# ----------------------------------------------------------- config/parsing
+
+def test_make_robust_parsing_roundtrip():
+    for spec in ("median", "trimmed:0.25", "trimmed:0.1", "krum:0.2",
+                 "bucket:4", "bucket:3,inner:trimmed",
+                 "bucket:4,inner:trimmed,frac:0.3"):
+        cfg = make_robust(spec)
+        assert make_robust(cfg.spec).spec == cfg.spec, spec
+    assert make_robust(None) is None
+    assert make_robust("none") is None
+    assert make_robust("") is None
+    cfg = make_robust("trimmed:0.25")
+    assert make_robust(cfg) is cfg  # RobustConfig passes through
+    assert make_robust("trimmed").frac == 0.25  # default frac
+    assert make_robust("krum:0.3").gathers
+    assert not make_robust("bucket:4").gathers
+
+
+def test_make_robust_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown mode"):
+        make_robust("garbage")
+    # the error enumerates every mode (the --robust help contract)
+    with pytest.raises(ValueError, match="|".join(ROBUST_MODES)):
+        make_robust("garbage")
+    with pytest.raises(ValueError, match="takes no parameter"):
+        make_robust("median:0.3")
+    with pytest.raises(ValueError, match="unknown key"):
+        make_robust("trimmed:0.2,inner:median")
+    with pytest.raises(ValueError, match="frac must be in"):
+        make_robust("trimmed:0.5")
+    with pytest.raises(ValueError, match="buckets must be"):
+        make_robust("bucket:1")
+    with pytest.raises(ValueError, match="inner mode"):
+        make_robust("bucket:4,inner:krum")
+
+
+def test_check_cohort_feasibility():
+    make_robust("trimmed:0.25").check_cohort(4)  # f=1, band of 2: fine
+    with pytest.raises(ValueError, match="trims"):
+        make_robust("trimmed:0.4").check_cohort(4)  # f=2, empty band
+    make_robust("krum:0.25").check_cohort(2)  # keep >= 1 always holds
+    with pytest.raises(ValueError, match="exceeds the cohort"):
+        make_robust("bucket:8").check_cohort(4)
+    assert trim_count(0.25, 4) == 1 and trim_count(0.2, 10) == 2
+
+
+# ------------------------------------------------------------ reducer units
+
+def _stack(honest=3.0, outlier=100.0, m=5, d=7, seed=0):
+    """(m, d) stack: m-1 honest lanes near ``honest``, lane 0 a planted
+    outlier at ``outlier``."""
+    v = honest + 0.1 * jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    return {"a": v.at[0].set(outlier), "b": v[:, :3].at[0].set(-outlier)}
+
+
+@pytest.mark.parametrize("spec", MODE_SPECS)
+def test_reducers_reject_planted_outlier(spec):
+    """One lane at +-100 against honest lanes near 3: every robust mode
+    lands near the honest value; the plain mean is dragged ~20x off."""
+    tree = _stack()
+    w = jnp.ones(5)
+    cfg = make_robust(spec if "bucket" not in spec else "bucket:5")
+    out = robust_reduce(cfg, tree, w)
+    for leaf in jax.tree.leaves(out):
+        assert np.all(np.abs(np.abs(np.asarray(leaf)) - 3.0) < 1.0), spec
+    mean = np.asarray(tree["a"]).mean(axis=0)
+    assert np.all(np.abs(mean) > 20.0)  # what the outlier does unrobust
+
+
+def test_trimmed_reduce_drops_exact_tails():
+    """Deterministic band check: values 0..4 per coordinate, f=1 -> mean
+    of {1, 2, 3} = 2 exactly."""
+    t = {"a": jnp.arange(5.0)[:, None] * jnp.ones((5, 3))}
+    out = trimmed_reduce(make_robust("trimmed:0.2"), t, jnp.ones(5))
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0, rtol=1e-6)
+    med = trimmed_reduce(make_robust("median"), t, jnp.ones(5))
+    np.testing.assert_allclose(np.asarray(med["a"]), 2.0, rtol=1e-6)
+
+
+def test_reducers_ignore_zero_weight_lanes():
+    """A screened lane (w=0, zero values -- faults.screen_upload's
+    invariant) is massless: krum never keeps it, trimmed's band mean
+    excludes it, and masked_mean matches the honest-only mean."""
+    v = jnp.stack([jnp.full((4,), 2.0), jnp.full((4,), 4.0),
+                   jnp.zeros(4)])  # lane 2 screened
+    tree, w = {"a": v}, jnp.array([1.0, 1.0, 0.0])
+    kw = krum_weights(RobustConfig("krum", frac=0.3), tree, w)
+    assert float(kw[2]) == 0.0
+    out = masked_mean(tree, kw)
+    np.testing.assert_allclose(np.asarray(out["a"]), 3.0, rtol=1e-6)
+    # trimmed with f=0: pure weighted mean, the zero lane carries none
+    out = trimmed_reduce(RobustConfig("trimmed", frac=0.0), tree, w)
+    np.testing.assert_allclose(np.asarray(out["a"]), 3.0, rtol=1e-6)
+
+
+def test_masked_mean_zero_mass_falls_back_to_uniform():
+    """All-screened cohort: zero total mass degrades to the uniform mean
+    of the (all-zero) values -- the psum path's zero-delta behavior."""
+    tree = {"a": jnp.zeros((3, 2))}
+    out = masked_mean(tree, jnp.zeros(3))
+    np.testing.assert_array_equal(np.asarray(out["a"]), 0.0)
+
+
+def test_bucket_partials_linear_and_finish_matches_full():
+    """The mesh contract behind bucket mode: partial sums computed on
+    two disjoint lane shards (with the correct global lane0 offsets) ADD
+    to the single-shard partials -- they are linear, so the psum can
+    carry them -- and bucket_finish over the summed partials equals the
+    single-device robust_reduce."""
+    cfg = make_robust("bucket:3")
+    tree = _stack(m=6, d=4)
+    w = jnp.ones(6).at[4].set(0.0)
+    ref_sums, ref_wsum = bucket_partials(cfg, tree, w, 0)
+    lo = jax.tree.map(lambda t: t[:3], tree)
+    hi = jax.tree.map(lambda t: t[3:], tree)
+    s0, w0 = bucket_partials(cfg, lo, w[:3], 0)
+    s1, w1 = bucket_partials(cfg, hi, w[3:], 3)
+    summed = jax.tree.map(jnp.add, s0, s1)
+    _leaves_equal({"x": ref_sums}, {"x": summed}, keys=("x",),
+                  atol=1e-6, msg="partials:")
+    np.testing.assert_allclose(np.asarray(w0 + w1), np.asarray(ref_wsum),
+                               rtol=1e-6)
+    full = robust_reduce(cfg, tree, w)
+    fin = bucket_finish(cfg, summed, w0 + w1)
+    _leaves_equal({"x": full}, {"x": fin}, keys=("x",), atol=1e-6,
+                  msg="finish:")
+
+
+def test_pack_cohort_roundtrips_tree_and_weights():
+    """The one-all_gather packing is lossless: unpack(pack) returns the
+    f32 tree and weights bitwise (gather order == lane order is what
+    makes the mesh reduce bitwise-equal to vmap's)."""
+    tree = {"a": jnp.ones((4, 2, 3)) * jnp.arange(4.0)[:, None, None],
+            "b": {"c": jnp.arange(8.0).reshape(4, 2)}}
+    w = jnp.array([1.0, 0.5, 0.0, 1.0])
+    buf, unpack = pack_cohort(tree, w)
+    assert buf.ndim == 2 and buf.shape[0] == 4
+    got_tree, got_w = unpack(buf)
+    _leaves_equal({"x": tree}, {"x": got_tree}, keys=("x",), msg="pack:")
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(w))
+
+
+# ------------------------------------------------------------ stealth units
+
+def _upload():
+    return {"a": jnp.arange(1.0, 5.0), "b": jnp.array([[2.0, -3.0]])}
+
+
+def test_collude_negates_and_rides_clip_boundary():
+    """collude without a clip negates the upload; with clip_norm > 0 it
+    rescales the negated upload to EXACTLY the clip boundary -- the
+    largest payload screening will pass at full weight."""
+    up, on = _upload(), jnp.asarray(True)
+    key = jax.random.PRNGKey(0)
+    akey = attack_round_key(jax.random.PRNGKey(3))
+    cfg = FaultConfig(corrupt=1.0, corrupt_mode="collude")
+    out = corrupt_payload(cfg, up, on, key, akey=akey)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(up)):
+        np.testing.assert_allclose(np.asarray(a), -np.asarray(b),
+                                   rtol=1e-6)
+    cfg = FaultConfig(corrupt=1.0, corrupt_mode="collude", clip_norm=7.0)
+    out = corrupt_payload(cfg, up, on, key, akey=akey)
+    norm = np.sqrt(sum(float(jnp.sum(jnp.square(t)))
+                       for t in jax.tree.leaves(out)))
+    np.testing.assert_allclose(norm, 7.0, rtol=1e-5)
+    # direction is exactly -upload (colinear, negative)
+    dot = sum(float(jnp.sum(a * b)) for a, b in
+              zip(jax.tree.leaves(out), jax.tree.leaves(up)))
+    assert dot < 0
+
+
+def test_ipflip_scales_by_attack_z():
+    cfg = FaultConfig(corrupt=1.0, corrupt_mode="ipflip", attack_z=2.5)
+    up, on = _upload(), jnp.asarray(True)
+    out = corrupt_payload(cfg, up, on, jax.random.PRNGKey(0),
+                          akey=attack_round_key(jax.random.PRNGKey(3)))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(up)):
+        np.testing.assert_allclose(np.asarray(a), -2.5 * np.asarray(b),
+                                   rtol=1e-6)
+
+
+def test_alie_perturbs_finite_with_shared_direction():
+    """alie: finite small-sigma perturbation whose per-coordinate SIGN
+    pattern comes from the shared attack key -- two colluding lanes with
+    the same akey perturb in the same direction (that coordination is
+    what lets them shift a plain mean without tripping any screen)."""
+    akey = attack_round_key(jax.random.PRNGKey(7))
+    on = jnp.asarray(False), jnp.asarray(True)
+    up1 = {"a": jnp.arange(8.0), "b": jnp.ones((2, 3))}
+    up2 = {"a": jnp.arange(8.0) * 2.0 + 1.0, "b": -jnp.ones((2, 3))}
+    cfg = FaultConfig(corrupt=1.0, corrupt_mode="alie", attack_z=1.5)
+    o1 = corrupt_payload(cfg, up1, on[1], jax.random.PRNGKey(0), akey=akey)
+    o2 = corrupt_payload(cfg, up2, on[1], jax.random.PRNGKey(1), akey=akey)
+    d1 = np.sign(np.asarray(o1["a"]) - np.asarray(up1["a"]))
+    d2 = np.sign(np.asarray(o2["a"]) - np.asarray(up2["a"]))
+    assert np.all(np.isfinite(np.asarray(o1["a"])))
+    np.testing.assert_array_equal(d1, d2)  # shared attack direction
+    assert set(np.unique(d1)) == {-1.0, 1.0}  # genuinely two-sided
+    # the off lane is untouched regardless of the attack key
+    off = corrupt_payload(cfg, up1, on[0], jax.random.PRNGKey(0),
+                          akey=akey)
+    _leaves_equal({"x": off}, {"x": up1}, keys=("x",), msg="off:")
+
+
+def test_stealth_attacks_pass_screening():
+    """The point of stealth: every stealth payload is finite and (with
+    collude riding the boundary) at or under the clip norm, so screening
+    keeps it at full weight -- only the robust reducer can reject it."""
+    from repro.faults import screen_upload
+    up, on = _upload(), jnp.asarray(True)
+    akey = attack_round_key(jax.random.PRNGKey(1))
+    for mode in STEALTH_MODES:
+        cfg = FaultConfig(corrupt=1.0, corrupt_mode=mode, clip_norm=50.0)
+        assert needs_attack_key(cfg)
+        out = corrupt_payload(cfg, up, on, jax.random.PRNGKey(0),
+                              akey=akey)
+        _, w, fm = screen_upload(cfg, out, jnp.asarray(False))
+        assert float(w) == 1.0, mode
+        assert float(fm["screened"]) == 0.0, mode
+
+
+# ------------------------------------------- robust=none bitwise (satellite)
+
+@pytest.mark.parametrize("strategy", [DEPER, Scaffold(eta=0.05)],
+                         ids=["feddeper", "scaffold"])
+@pytest.mark.parametrize("compress", [None, "topk:0.25"],
+                         ids=["dense", "ef"])
+def test_robust_none_bitwise_both_placements(strategy, compress, data, x0):
+    """robust='none' is normalized out of the trace: host-loop AND K=3
+    scan-block trajectories are bitwise the plain engine's, on vmap and
+    on the mesh placement, dense and through the TopK(EF) compressor,
+    for FedDeper and Scaffold."""
+    comp = make_compressor(compress) if compress else None
+    for pl in (None, MeshPlacement(make_client_mesh())):
+        tag = f"{strategy.name}:{pl and 'mesh' or 'vmap'}:"
+        ref, _ = run_rounds(
+            init_sim_state(SIM, strategy, x0, placement=pl,
+                           compressor=comp),
+            make_round_fn(SIM, strategy, grad_fn, data, placement=pl,
+                          compressor=comp), 3)
+        got, _ = run_rounds(
+            init_sim_state(SIM, strategy, x0, placement=pl,
+                           compressor=comp),
+            make_round_fn(SIM, strategy, grad_fn, data, placement=pl,
+                          compressor=comp, robust="none"), 3)
+        _leaves_equal(ref, got, msg=tag)
+        gotb, _ = run_blocks(
+            init_sim_state(SIM, strategy, x0, placement=pl,
+                           compressor=comp),
+            lambda size: make_block_fn(SIM, strategy, grad_fn, data,
+                                       block_size=size, placement=pl,
+                                       compressor=comp, robust="none"),
+            3, 3)
+        _leaves_equal(ref, gotb, msg=f"{tag}K=3:")
+
+
+@pytest.mark.parametrize("strategy", [DEPER, Scaffold(eta=0.05)],
+                         ids=["feddeper", "scaffold"])
+def test_robust_none_mesh_program_identical(strategy, data, x0):
+    """Stronger than trajectory equality: the robust='none' mesh round
+    PROGRAM is the plain round's -- same jaxpr, one collective."""
+    pl = MeshPlacement(make_client_mesh())
+    state = init_sim_state(SIM, strategy, x0, placement=pl)
+    ref = make_round_fn(SIM, strategy, grad_fn, data, placement=pl,
+                        donate=False)
+    got = make_round_fn(SIM, strategy, grad_fn, data, placement=pl,
+                        donate=False, robust="none")
+    jref = jax.make_jaxpr(ref)(state)
+    jgot = jax.make_jaxpr(got)(state)
+    # jaxpr text embeds callable object addresses (pjit/custom_jvp
+    # params); normalize them -- the PROGRAM must match, not the ids
+    import re
+    norm = lambda j: re.sub(r"0x[0-9a-f]+", "0x", str(j))  # noqa: E731
+    assert norm(jref) == norm(jgot)
+    assert sum(count_collectives(jgot.jaxpr).values()) == 1
+
+
+# --------------------------------------------------- mesh collective budget
+
+@pytest.mark.parametrize("strategy", [DEPER, Scaffold(eta=0.05)],
+                         ids=["feddeper", "scaffold"])
+@pytest.mark.parametrize("spec", MODE_SPECS)
+def test_mesh_collective_budget_per_mode(strategy, spec, data, x0):
+    """The declared budget, jaxpr-counted: gather modes cost exactly one
+    all_gather + one psum; bucket rides the round's single psum (its
+    partials join the existing multi-operand collective)."""
+    pl = MeshPlacement(make_client_mesh())
+    faults = make_faults("collude:0.25,clip:5.0")
+    rf = make_round_fn(SIM, strategy, grad_fn, data, placement=pl,
+                       faults=faults, robust=spec, donate=False)
+    state = init_sim_state(SIM, strategy, x0, placement=pl)
+    counts = count_collectives(jax.make_jaxpr(rf)(state).jaxpr)
+    cfg = make_robust(spec)
+    gathers = counts.pop("all_gather", 0)
+    psums = sum(counts.values())
+    if cfg.gathers:
+        assert (gathers, psums) == (1, 1), (spec, strategy.name, counts)
+    else:
+        assert (gathers, psums) == (0, 1), (spec, strategy.name, counts)
+
+
+@pytest.mark.parametrize("spec", MODE_SPECS)
+def test_mesh_matches_vmap_bitwise_per_mode(spec, data, x0):
+    """Both placements run the identical reducer over the identical full
+    stack (pack/gather/unpack preserves lane order and values exactly),
+    so the trajectories agree BITWISE -- stronger than the 1e-6 the
+    plain weighted mean manages, because the robust reduce does not
+    reassociate across shards."""
+    faults = make_faults("collude:0.25,clip:5.0")
+    pl = MeshPlacement(make_client_mesh())
+    sv, hv = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data, faults=faults,
+                      robust=spec), 3)
+    sm, hm = run_rounds(
+        init_sim_state(SIM, DEPER, x0, placement=pl),
+        make_round_fn(SIM, DEPER, grad_fn, data, placement=pl,
+                      faults=faults, robust=spec), 3)
+    _leaves_equal(sv, sm, msg=f"{spec}:")
+    for a, b in zip(hv, hm):
+        assert a["screened"] == b["screened"]
+
+
+def test_check_cohort_enforced_at_build_time(data, x0):
+    with pytest.raises(ValueError, match="trims"):
+        make_round_fn(SIM, DEPER, grad_fn, data, robust="trimmed:0.45")
+    with pytest.raises(ValueError, match="exceeds the cohort"):
+        make_round_fn(SIM, DEPER, grad_fn, data, robust="bucket:8")
+
+
+# ------------------------------------------------- drivers/store/compression
+
+def test_robust_block_matches_host_loop(data, x0):
+    """K=3 scan blocks under trimmed robust + collusion reproduce the
+    host loop bitwise (the attack key is a pure function of the round
+    rng, so the schedule is driver-independent)."""
+    faults = make_faults("collude:0.25,clip:5.0")
+    ref, _ = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data, faults=faults,
+                      robust="trimmed:0.25"), 3)
+    got, _ = run_blocks(
+        init_sim_state(SIM, DEPER, x0),
+        lambda size: make_block_fn(SIM, DEPER, grad_fn, data,
+                                   block_size=size, faults=faults,
+                                   robust="trimmed:0.25"), 3, 3)
+    _leaves_equal(ref, got, msg="K=3:")
+
+
+def test_robust_threads_through_virtual_store(data, x0):
+    """The virtual-store round fn accepts the same robust spec and
+    reproduces the dense engine bitwise (same cohort, same reducer)."""
+    layout = make_layout("virtual:host")
+    faults = make_faults("collude:0.25,clip:5.0")
+    ref, _ = run_rounds(
+        init_sim_state(SIM, DEPER, x0),
+        make_round_fn(SIM, DEPER, grad_fn, data, faults=faults,
+                      robust="trimmed:0.25", donate=False), 3)
+    vrf = make_virtual_round_fn(SIM, DEPER, grad_fn, data, layout=layout,
+                                faults=faults, robust="trimmed:0.25",
+                                donate=False)
+    state = init_sim_state(SIM, DEPER, x0, layout=layout)
+    for _ in range(3):
+        state, _ = vrf(state)
+    _leaves_equal(ref, state, keys=("x",), msg="virtual:")
+
+
+def test_robust_composes_with_ef_compression(data, x0):
+    """EF-compressed uploads are robust-reduced POST-decompress: the run
+    stays finite, the EF store stays finite, and the reducer sees the
+    decompressed stack (trajectory differs from dense -- that is the
+    compressor, not the reducer)."""
+    comp = make_compressor("topk:0.25")
+    faults = make_faults("collude:0.25,clip:5.0")
+    state, hist = run_rounds(
+        init_sim_state(SIM, DEPER, x0, compressor=comp),
+        make_round_fn(SIM, DEPER, grad_fn, data, compressor=comp,
+                      faults=faults, robust="trimmed:0.25"), 4)
+    assert state_is_finite(state)
+    for leaf in jax.tree.leaves(state["ef"]):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+# ---------------------------------------------------------- acceptance run
+
+def test_krum_recovers_clip_riding_collusion(x0):
+    """THE acceptance run (bench row's robust_matrix, test-pinned):
+    20% colluding lanes riding a 2.0 clip boundary over 24 rounds at the
+    paper's cross-silo operating point.  The plain mean craters; Krum
+    (keep 7 of 10) finishes within 2% of the clean run."""
+    ds10 = make_federated_classification(n_clients=10, per_client=64,
+                                         split="shards", seed=2)
+    data10 = {k: jnp.asarray(v) for k, v in ds10.train.items()}
+    test10 = {k: jnp.asarray(v) for k, v in ds10.test.items()}
+    eval_fn = make_global_eval(apply_loss, test10)
+    sim = SimConfig(n_clients=10, m_sampled=10, tau=5, batch_size=32,
+                    seed=0)
+    faults = make_faults("collude:0.2,clip:2.0")
+
+    def run(faults_, robust_):
+        s, _ = run_rounds(
+            init_sim_state(sim, DEPER, x0),
+            make_round_fn(sim, DEPER, grad_fn, data10, faults=faults_,
+                          robust=robust_), 24)
+        assert state_is_finite(s)
+        return float(eval_fn(s)["test_acc"])
+
+    clean = run(None, None)
+    attacked = run(faults, None)
+    defended = run(faults, "krum:0.3")
+    # the attack is real: the plain mean measurably craters
+    assert attacked <= clean - 0.10, (clean, attacked)
+    # the defense is real: Krum recovers to within 2% of clean
+    assert defended >= clean - 0.02, (clean, defended)
+
+
+# ----------------------------------------------------- 4-device emulation
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.paper_models import MLP_MNIST
+    from repro.core import (FedDeper, Scaffold, SimConfig, MeshPlacement,
+                            init_sim_state, make_robust, make_round_fn,
+                            run_rounds)
+    from repro.data import make_federated_classification
+    from repro.faults import make_faults
+    from repro.launch.mesh import make_client_mesh
+    from repro.models import classifier_loss, init_classifier
+
+    assert jax.local_device_count() == 4
+
+    def grad_fn(p, mb):
+        (l, _), g = jax.value_and_grad(
+            lambda p, b: classifier_loss(MLP_MNIST, p, b),
+            has_aux=True)(p, mb)
+        return l, g
+
+    ds = make_federated_classification(n_clients=8, per_client=64,
+                                       split="shards", seed=2)
+    data = {k: jnp.asarray(v) for k, v in ds.train.items()}
+    x0 = init_classifier(MLP_MNIST, jax.random.PRNGKey(11))
+    sim = SimConfig(n_clients=8, m_sampled=4, tau=2, batch_size=16,
+                    seed=5)
+    pl = MeshPlacement(make_client_mesh())
+    faults = make_faults("collude:0.25,clip:5.0")
+
+    def count(jx, names):
+        n = {}
+        for eqn in jx.eqns:
+            if eqn.primitive.name in names:
+                n[eqn.primitive.name] = n.get(eqn.primitive.name, 0) + 1
+            for v in eqn.params.values():
+                sub = v if hasattr(v, "eqns") else getattr(v, "jaxpr",
+                                                           None)
+                if sub is not None:
+                    for k, c in count(sub, names).items():
+                        n[k] = n.get(k, 0) + c
+        return n
+    names = {"psum", "psum2", "all_gather", "all_to_all", "ppermute"}
+
+    strat = FedDeper(eta=0.05, rho=0.03, lam=0.5)
+    for spec in ("trimmed:0.25", "krum:0.25", "bucket:4"):
+        sv, _ = run_rounds(
+            init_sim_state(sim, strat, x0),
+            make_round_fn(sim, strat, grad_fn, data, faults=faults,
+                          robust=spec), 3)
+        sm, _ = run_rounds(
+            init_sim_state(sim, strat, x0, placement=pl),
+            make_round_fn(sim, strat, grad_fn, data, placement=pl,
+                          faults=faults, robust=spec), 3)
+        # a REAL 4-way gather: lane order must equal shard order for the
+        # reducers to agree -- bitwise, no reassociation tolerance
+        for key in ("x", "clients", "pms"):
+            for a, b in zip(jax.tree.leaves(sv[key]),
+                            jax.tree.leaves(sm[key])):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b),
+                                              err_msg=f"{spec}:{key}")
+
+    # budget on a real axis, both strategies: gather modes one
+    # all_gather + one psum; bucket and none exactly one collective
+    for s in (strat, Scaffold(eta=0.05)):
+        st = init_sim_state(sim, s, x0, placement=pl)
+        for spec, want in (("none", None), ("krum:0.25", True),
+                           ("trimmed:0.25", True), ("bucket:4", False)):
+            rf = make_round_fn(sim, s, grad_fn, data, placement=pl,
+                               faults=faults, robust=spec, donate=False)
+            c = count(jax.make_jaxpr(rf)(st).jaxpr, names)
+            g = c.pop("all_gather", 0)
+            p = sum(c.values())
+            if want:
+                assert (g, p) == (1, 1), (s.name, spec, c)
+            else:
+                assert (g, p) == (0, 1), (s.name, spec, c)
+
+    print("ROBUST_4DEV_OK")
+""")
+
+
+def test_robust_4device_emulation():
+    """4-way client axis: every gather/bucket mode matches vmap bitwise
+    across a real multi-shard gather, and the per-mode collective budget
+    holds for FedDeper and Scaffold."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True,
+                         env=_SUBPROC_ENV, timeout=560)
+    assert "ROBUST_4DEV_OK" in out.stdout, (out.stdout[-1000:],
+                                            out.stderr[-3000:])
+
+
+# --------------------------------------------------- ckpt config validation
+
+def test_restore_rejects_mismatched_robust_config(tmp_path):
+    """A checkpoint stamped robust='krum:0.3' refuses to resume a run
+    requesting a different reducer (silently switching defenses
+    mid-attack invalidates the trajectory); legacy checkpoints without
+    the key restore unchecked."""
+    import argparse
+    from repro.checkpoint import save_checkpoint
+    from repro.launch.train import _ckpt_tree, _restore_state
+
+    state = {"x": {"w": jnp.ones(2)}, "clients": {}, "pms": {},
+             "server": {}, "rng": jax.random.PRNGKey(0)}
+    args = argparse.Namespace(ckpt_dir=str(tmp_path))
+    save_checkpoint(str(tmp_path), 3, _ckpt_tree(state),
+                    metadata={"robust": "krum:0.3"})
+    with pytest.raises(SystemExit, match="robust='krum:0.3'"):
+        _restore_state(state, args, expect={"robust": "trimmed:0.25"})
+    start, _ = _restore_state(state, args, expect={"robust": "krum:0.3"})
+    assert start == 3
+    for f in tmp_path.iterdir():
+        f.unlink()
+    save_checkpoint(str(tmp_path), 5, _ckpt_tree(state))
+    start, _ = _restore_state(state, args, expect={"robust": "median"})
+    assert start == 5
