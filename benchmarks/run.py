@@ -19,10 +19,11 @@ def main(argv=None) -> None:
     quick = not args.full
 
     from benchmarks import (async_bench, kernel_bench, paper_figs,
-                            roofline, round_engine)
+                            roofline, round_engine, serve_bench)
     benches = {
         "async": lambda: async_bench.async_vs_sync(quick),
         "round_engine": lambda: round_engine.round_engine_rows(quick),
+        "serve": lambda: serve_bench.serve_rows(quick),
         "fig1": lambda: paper_figs.fig1_heterogeneity(quick),
         "fig3": lambda: paper_figs.fig3_hyperparams(quick),
         "fig4_6": lambda: paper_figs.fig4_6_convergence(quick),

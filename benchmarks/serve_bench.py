@@ -1,0 +1,323 @@
+"""Serving-tier benchmark: the tracked ``BENCH_serve.json`` numbers.
+
+Companion to ``round_engine.py``'s training bench: every run rewrites
+``BENCH_serve.json`` at the repo root so each PR leaves a serving perf
+trajectory next to the training one.  Schema (validated by
+``validate_serve_bench``; CI runs a smoke subset through it and through
+``round_engine.check_speedups`` -- the gate is generic over
+``config.speedup_vs_*`` ratios and ``peak_bytes`` ceilings):
+
+    { bench_name: {
+        "tokens_per_s": float,     # decoded tokens / wall second
+        "p50_ms": float,           # latency p50 (block rows: per decode
+        "p99_ms": float,           #   block; simulate: per request)
+        "peak_bytes": int,         # decode-block executable's static
+                                   #   temp+output allocation plan
+        "config": { ... } } }
+
+Rows:
+
+  * ``block`` -- the ServeEngine's jitted ``lax.scan`` decode block
+    (one dispatch + one host sync per ``block_tokens`` steps).  Carries
+    ``config.speedup_vs_loop``, measured INTERLEAVED with the loop row
+    so machine-speed drift cancels out of the tracked ratio.
+  * ``loop``  -- the pre-serve-tier baseline: the same engine math with
+    ``block_tokens=1``, i.e. one dispatch and one device->host token
+    fetch per decoded token (what ``launch/serve.py`` did before the
+    redesign).
+  * ``simulate`` -- the continuous-batching request simulator: mixed
+    prompt lengths, slot reuse, burst arrivals; p50/p99 are REQUEST
+    latencies.
+  * ``q8`` -- the block row on int8-served weights
+    (``serve.make_weight_source("q8")``): tracks that the quantized
+    source keeps the same decode throughput shape and records its
+    resident footprint.
+
+``peak_bytes`` reuses ``round_engine._compiled_peak`` on the engine's
+block step -- THE one definition of peak, shared with the training
+bench.  AOT-lowering the block also seeds nothing: the engine's
+compile-once contract (``block_compile_count() == 1``) still holds over
+the timed windows, which the bench asserts.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.round_engine import _compiled_peak, _sds
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+ARCH = "llama3.2-3b"
+
+# the quick operating point: CPU-sized reduced config, small windows
+QUICK = dict(slots=4, max_len=128, block_tokens=16, prompt_len=8,
+             window_blocks=2, reps=3, requests=8, gen_tokens=24)
+FULL = dict(slots=8, max_len=256, block_tokens=32, prompt_len=16,
+            window_blocks=4, reps=5, requests=16, gen_tokens=64)
+
+_ENTRY_KEYS = {"tokens_per_s", "p50_ms", "p99_ms", "peak_bytes", "config"}
+_CONFIG_REQUIRED = {"arch", "slots", "max_len", "block_tokens"}
+
+
+def validate_serve_bench(obj) -> None:
+    """Raise ValueError unless ``obj`` matches the BENCH_serve schema.
+    Unknown entry keys are rejected; rows served from a quantized
+    weight source (``config.weights`` head q8/fp8) must also record
+    ``config.resident_bytes`` -- the footprint claim is the row's
+    point."""
+    if not isinstance(obj, dict) or not obj:
+        raise ValueError("serve bench json must be a non-empty dict")
+    for name, entry in obj.items():
+        if not isinstance(name, str):
+            raise ValueError(f"bench name {name!r} is not a string")
+        if not isinstance(entry, dict):
+            raise ValueError(f"{name}: entry must be a dict")
+        missing = _ENTRY_KEYS - set(entry)
+        if missing:
+            raise ValueError(f"{name}: missing keys {sorted(missing)}")
+        unknown = set(entry) - _ENTRY_KEYS
+        if unknown:
+            raise ValueError(f"{name}: unknown keys {sorted(unknown)} "
+                             f"(schema allows {sorted(_ENTRY_KEYS)})")
+        tps = entry["tokens_per_s"]
+        if not isinstance(tps, (int, float)) or isinstance(tps, bool) \
+                or tps <= 0:
+            raise ValueError(f"{name}: tokens_per_s must be positive")
+        for key in ("p50_ms", "p99_ms"):
+            v = entry[key]
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v < 0:
+                raise ValueError(f"{name}: {key} must be a non-negative "
+                                 f"number (got {v!r})")
+        if entry["p99_ms"] < entry["p50_ms"]:
+            raise ValueError(f"{name}: p99_ms < p50_ms "
+                             f"({entry['p99_ms']} < {entry['p50_ms']})")
+        pb = entry["peak_bytes"]
+        if not isinstance(pb, int) or isinstance(pb, bool) or pb <= 0:
+            raise ValueError(f"{name}: peak_bytes must be a positive int "
+                             f"(got {pb!r})")
+        cfg = entry["config"]
+        if not isinstance(cfg, dict):
+            raise ValueError(f"{name}: config must be a dict")
+        miss = _CONFIG_REQUIRED - set(cfg)
+        if miss:
+            raise ValueError(f"{name}: config missing {sorted(miss)}")
+        head = str(cfg.get("weights", "")).split(":", 1)[0]
+        if head in ("q8", "fp8"):
+            rb = cfg.get("resident_bytes")
+            if not isinstance(rb, int) or isinstance(rb, bool) or rb <= 0:
+                raise ValueError(
+                    f"{name}: quantized-weight rows must record "
+                    f"config.resident_bytes as a positive int (got "
+                    f"{rb!r})")
+
+
+def _build_engine(cfg, params, scale, block_tokens):
+    from repro.serve import ServeEngine
+    return ServeEngine(cfg, params, slots=scale["slots"],
+                       max_len=scale["max_len"],
+                       block_tokens=block_tokens)
+
+
+def _prompts(cfg, scale, seed=0):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xB37C]))
+    return [rng.integers(0, cfg.vocab_size, scale["prompt_len"],
+                         dtype=np.int64).astype(np.int32)
+            for _ in range(scale["slots"])]
+
+
+def _readmit(engine, prompts):
+    """Reset every slot to post-prefill state (re-admission overwrites
+    the full slot state, so timed windows always start from the same
+    lens)."""
+    for i, p in enumerate(prompts):
+        engine.admit(i, p)
+
+
+def _window(engine, n_blocks):
+    """Time ``n_blocks`` decode blocks; returns (total_s, [block_s])."""
+    lat = []
+    t0 = time.perf_counter()
+    for _ in range(n_blocks):
+        tb = time.perf_counter()
+        engine.run_block()
+        lat.append(time.perf_counter() - tb)
+    return time.perf_counter() - t0, lat
+
+
+def _block_peak(engine):
+    """peak_bytes of the engine's decode-block executable (same
+    ``_compiled_peak`` definition as the training bench)."""
+    s = engine.slots
+    args = (_sds(engine.params), _sds(engine.cache),
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.bool_))
+    _, peak = _compiled_peak(engine._block, *args)
+    return peak
+
+
+def _timed_entry(scale, block_tokens, best_s, lats, n_blocks, peak,
+                 extra_cfg=None):
+    tokens = n_blocks * block_tokens * scale["slots"]
+    lat_ms = np.asarray(lats) * 1e3
+    cfg = {"arch": ARCH, "slots": scale["slots"],
+           "max_len": scale["max_len"], "block_tokens": block_tokens,
+           "prompt_len": scale["prompt_len"],
+           "window_blocks": n_blocks}
+    cfg.update(extra_cfg or {})
+    return {
+        "tokens_per_s": round(tokens / max(best_s, 1e-9), 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 4),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 4),
+        "peak_bytes": peak,
+        "config": cfg,
+    }
+
+
+def serve_rows(quick: bool = True, *,
+               include: Optional[Iterable[str]] = None,
+               reps: Optional[int] = None,
+               out_path: Optional[Path] = BENCH_PATH) -> List[str]:
+    """Run the serving benches, rewrite BENCH_serve.json (unless
+    ``out_path=None``), return CSV rows.  ``include`` limits to a subset
+    (CI smoke refreshes its rows in place)."""
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import SimConfig, make_weight_source, simulate
+
+    scale = QUICK if quick else FULL
+    reps = reps if reps is not None else scale["reps"]
+    names = set(include) if include is not None else \
+        {"block", "loop", "simulate", "q8"}
+    # the ratio needs both sides: a smoke asking for the block row
+    # implicitly prices the loop baseline too
+    if "block" in names:
+        names.add("loop")
+
+    cfg = get_config(ARCH).reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, scale)
+    nb = scale["window_blocks"]
+    results: Dict[str, Dict] = {}
+
+    block_eng = loop_eng = None
+    if "block" in names or "loop" in names:
+        block_eng = _build_engine(cfg, params, scale,
+                                  scale["block_tokens"])
+        loop_eng = _build_engine(cfg, params, scale, 1)
+        # warm every compile the timed windows hit (prefill bucket,
+        # admit, block step), then interleave the two sides' rep
+        # windows so machine-speed drift cancels out of the ratio
+        for eng in (block_eng, loop_eng):
+            _readmit(eng, prompts)
+            eng.run_block()
+        best_b = best_l = float("inf")
+        lats_b: List[float] = []
+        lats_l: List[float] = []
+        nb_loop = nb * scale["block_tokens"]  # same token budget
+        for _ in range(reps):
+            _readmit(block_eng, prompts)
+            dt, lat = _window(block_eng, nb)
+            best_b = min(best_b, dt)
+            lats_b.extend(lat)
+            _readmit(loop_eng, prompts)
+            dt, lat = _window(loop_eng, nb_loop)
+            best_l = min(best_l, dt)
+            lats_l.extend(lat)
+        assert block_eng.block_compile_count() == 1, \
+            "decode block retraced during the timed windows"
+        speedup = round(best_l / max(best_b, 1e-9), 3)
+        if "block" in names:
+            results["block"] = _timed_entry(
+                scale, scale["block_tokens"], best_b, lats_b, nb,
+                _block_peak(block_eng),
+                {"weights": "init:0", "speedup_vs_loop": speedup})
+        if "loop" in names:
+            results["loop"] = _timed_entry(
+                scale, 1, best_l, lats_l, nb_loop,
+                _block_peak(loop_eng), {"weights": "init:0"})
+
+    if "simulate" in names:
+        eng = block_eng or _build_engine(cfg, params, scale,
+                                         scale["block_tokens"])
+        for i in range(eng.slots):  # timed windows left slots admitted
+            eng.release(i)
+        sim = SimConfig(requests=scale["requests"],
+                        prompt_lens=(4, 8, 12, 16),
+                        gen_tokens=scale["gen_tokens"], delay=0.0,
+                        seed=0)
+        m = simulate(eng, sim)
+        results["simulate"] = {
+            "tokens_per_s": round(m["tokens_per_s"], 1),
+            "p50_ms": round(m["p50_ms"], 4),
+            "p99_ms": round(m["p99_ms"], 4),
+            "peak_bytes": _block_peak(eng),
+            "config": {"arch": ARCH, "slots": eng.slots,
+                       "max_len": eng.max_len,
+                       "block_tokens": eng.block_tokens,
+                       "weights": "init:0",
+                       "requests": scale["requests"],
+                       "gen_tokens": scale["gen_tokens"],
+                       "prompt_lens": "4,8,12,16"},
+        }
+
+    if "q8" in names:
+        source = make_weight_source("q8")
+        q_eng = _build_engine(cfg, source.load(cfg), scale,
+                              scale["block_tokens"])
+        _readmit(q_eng, prompts)
+        q_eng.run_block()  # warm
+        best_q = float("inf")
+        lats_q: List[float] = []
+        for _ in range(reps):
+            _readmit(q_eng, prompts)
+            dt, lat = _window(q_eng, nb)
+            best_q = min(best_q, dt)
+            lats_q.extend(lat)
+        results["q8"] = _timed_entry(
+            scale, scale["block_tokens"], best_q, lats_q, nb,
+            _block_peak(q_eng),
+            {"weights": source.name,
+             "resident_bytes": source.resident_bytes(cfg)})
+
+    rows = []
+    for name, entry in results.items():
+        tokens = entry["tokens_per_s"]
+        us_per_token = 1e6 / max(tokens, 1e-9)
+        derived = {"tokens_per_s": tokens, "p50_ms": entry["p50_ms"],
+                   "p99_ms": entry["p99_ms"]}
+        if "speedup_vs_loop" in entry["config"]:
+            derived["speedup_vs_loop"] = \
+                entry["config"]["speedup_vs_loop"]
+        if "resident_bytes" in entry["config"]:
+            derived["resident_bytes"] = \
+                entry["config"]["resident_bytes"]
+        rows.append(csv_row(f"serve/{name}", us_per_token, derived))
+
+    if out_path is not None and results:
+        written = results
+        if include is not None and out_path.exists():
+            # subset runs (CI smoke) refresh their rows in place
+            try:
+                written = json.loads(out_path.read_text())
+            except json.JSONDecodeError:
+                written = {}
+            written.update(results)
+        validate_serve_bench(written)
+        out_path.write_text(json.dumps(written, indent=2, sort_keys=True)
+                            + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in serve_rows():
+        print(row)

@@ -1,58 +1,75 @@
-"""Serve a small model with batched requests: prefill + KV-cache decode.
+"""Quickstart for the serving tier (repro.serve, DESIGN.md §13).
 
-    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-9b
+Train, then serve the checkpoint through the slot-cache engine:
 
-Runs the reduced variant of any assigned arch (sliding-window ring
-buffers, MLA latent caches, Mamba/xLSTM states all exercised by the same
-serve_step the dry-run lowers at 32k/500k scale).
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \\
+        --reduced --rounds 3 --ckpt-dir /tmp/run1
+    PYTHONPATH=src python examples/serve_decode.py --ckpt-dir /tmp/run1
+
+Without --ckpt-dir it serves fresh init weights (pure smoke).  The
+example drives the library API directly -- weight source, ServeEngine,
+request simulator; `python -m repro.launch.serve` is the full CLI with
+the same knobs (and `--weights q8:ckpt:DIR` for int8 serving).
 """
 import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import ALL_ARCHS, get_config
-from repro.core import make_decode_step, make_prefill_step
-from repro.models import init_cache, init_model
+from repro.configs import get_config
+from repro.serve import ServeEngine, SimConfig, make_weight_source, simulate
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-9b", choices=ALL_ARCHS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    help="decoder-only LM arch (reduced variant)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="launch/train.py checkpoint dir; default: init")
+    ap.add_argument("--weights", default=None,
+                    help="explicit source spec, e.g. q8:ckpt:/tmp/run1 "
+                         "(overrides --ckpt-dir)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-tokens", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
     args = ap.parse_args()
 
+    spec = args.weights or (
+        f"ckpt:{args.ckpt_dir}" if args.ckpt_dir else "init")
     cfg = get_config(args.arch).reduced()
-    rng = jax.random.PRNGKey(0)
-    params = init_model(cfg, rng)
-    B, P, G = args.batch, args.prompt_len, args.gen
-    batch = {"tokens": jax.random.randint(rng, (B, P), 0, cfg.vocab_size)}
-    if cfg.frontend is not None:
-        batch["frontend"] = 0.02 * jax.random.normal(
-            rng, (B, cfg.frontend_tokens, cfg.d_model))
-    cache = init_cache(cfg, B, P + G)
+    source = make_weight_source(spec)
+    engine = ServeEngine(cfg, source.load(cfg), slots=args.slots,
+                         max_len=args.max_len,
+                         block_tokens=args.block_tokens)
 
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
-    logits, cache = prefill(params, batch, cache)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    toks = [tok]
+    # one uniform batch: every slot decodes in jitted lax.scan blocks,
+    # one host sync per block_tokens tokens
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(args.slots)]
+    engine.generate(prompts, 2)  # compile (prefill bucket + block)
     t0 = time.time()
-    pos0 = P + (cfg.frontend_tokens if (cfg.frontend and not cfg.is_encdec)
-                else 0)
-    for i in range(G - 1):
-        tok, _, cache = decode(params, cache, tok, jnp.int32(pos0 + i))
-        toks.append(tok)
+    gen = engine.generate(prompts, args.gen)
     dt = time.time() - t0
-    gen = jnp.concatenate(toks, axis=1)
+
+    # continuous batching: 2x oversubscribed requests, mixed prompt
+    # lengths, staggered arrivals; finishing requests free slots for
+    # the queue mid-flight
+    metrics = simulate(engine, SimConfig(
+        requests=2 * args.slots, prompt_lens=(4, 8, 12, 16),
+        gen_tokens=args.gen, delay=0.01, seed=0))
+
     print(json.dumps({
-        "arch": args.arch, "reduced_layers": cfg.num_layers,
-        "batch": B, "decode_tok_s": round(B * (G - 1) / dt, 1),
-        "first_request_tokens": gen[0].tolist()}))
+        "arch": args.arch, "weights": source.name,
+        "resident_mb": round(source.resident_bytes(cfg) / 2 ** 20, 2),
+        "batch_decode_tok_s": round(gen.size / dt, 1),
+        "block_compiles": engine.block_compile_count(),
+        "sim_tokens_per_s": round(metrics["tokens_per_s"], 1),
+        "sim_p50_ms": round(metrics["p50_ms"], 1),
+        "sim_p99_ms": round(metrics["p99_ms"], 1),
+        "first_request_tokens": gen[0, :8].tolist()}))
 
 
 if __name__ == "__main__":

@@ -19,6 +19,10 @@
 #               the bigmem n=100k cohort-footprint smoke) plus the n=1k
 #               virtual bench row, schema-validated and gated on
 #               peak_bytes against the tracked baseline (MEM_TOL);
+#   serve    -- the serving tier lane: flash-decode / engine / config-
+#               API tests plus a BENCH_serve smoke, schema-validated
+#               and gated (speedup_vs_loop + peak_bytes) against the
+#               tracked BENCH_serve.json;
 #   all      -- everything above (the no-argument default).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -145,11 +149,59 @@ finally:
 PY
 }
 
+run_serve() {
+    # Serving-tier lane: the kernel/engine/config test files, then a
+    # quick BENCH_serve smoke.  Same scratch-file discipline as
+    # run_bench: an existing tracked baseline is never clobbered by the
+    # reps=1 smoke; it is schema-validated and gated against the
+    # checked-in one (check_speedups is generic over speedup_vs_* and
+    # peak_bytes).  A full baseline refresh is `python -m
+    # benchmarks.run --only serve`.
+    python -m pytest -x -q tests/test_serve.py tests/test_runspec.py
+    python - <<'PY'
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+from benchmarks.round_engine import check_speedups
+from benchmarks.serve_bench import (BENCH_PATH, serve_rows,
+                                    validate_serve_bench)
+
+scratch = None if not BENCH_PATH.exists() else \
+    Path(tempfile.NamedTemporaryFile(suffix=".json", delete=False).name)
+try:
+    rows = serve_rows(quick=True, reps=1,
+                      out_path=scratch or BENCH_PATH,
+                      include=("block", "simulate"))
+    for r in rows:
+        print(r)
+    tracked = json.loads(BENCH_PATH.read_text())
+    validate_serve_bench(tracked)
+    if scratch is not None:
+        smoke = json.loads(scratch.read_text())
+        validate_serve_bench(smoke)
+        fails = check_speedups(smoke, tracked)
+        if fails:
+            print("ci.sh: serve bench gate FAILED:", file=sys.stderr)
+            for f in fails:
+                print(f"  {f}", file=sys.stderr)
+            sys.exit(1)
+        print("ci.sh: serve bench gate OK "
+              f"({len(smoke)} smoke rows vs tracked baseline)")
+finally:
+    if scratch is not None:
+        scratch.unlink(missing_ok=True)
+print(f"ci.sh: serve bench smoke OK ({BENCH_PATH} schema valid)")
+PY
+}
+
 case "$SHARD" in
 unit)     run_unit "$@" ;;
 multidev) run_multidev ;;
 bench)    run_bench ;;
 virtual)  run_virtual ;;
+serve)    run_serve ;;
 all)
     run_unit "$@"
     # The unfiltered run above already executes the multidev files, so
@@ -169,10 +221,11 @@ all)
     fi
     run_bench
     run_virtual
+    run_serve
     ;;
 *)
     echo "ci.sh: unknown shard '$SHARD' (want unit|multidev|bench|" \
-         "virtual|all)" >&2
+         "virtual|serve|all)" >&2
     exit 2
     ;;
 esac

@@ -1,5 +1,6 @@
 from repro.checkpoint.npz import (  # noqa: F401
     latest_checkpoint,
     restore_checkpoint,
+    restore_subtree,
     save_checkpoint,
 )

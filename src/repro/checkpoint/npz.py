@@ -157,6 +157,41 @@ def restore_checkpoint(path: str, template: Pytree) -> tuple:
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
 
+def restore_subtree(path: str, template: Pytree, index: int = 0) -> tuple:
+    """Restore ONE top-level member of a checkpointed tuple-tree into
+    ``template``.  Returns (subtree, meta).
+
+    Training checkpoints store ``_ckpt_tree`` tuples whose member 0 is
+    the dense global model -- the serve tier restores just that slice
+    against a freshly-inited parameter template, without reconstructing
+    client state (which may live in virtual-store sidecars; the global
+    model is always dense, so this works for every ``--store`` layout)."""
+    prefix = f"{index}/"
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"]).decode()) \
+            if "__meta__" in data else {}
+        flat = {k[len(prefix):]: data[k] for k in data.files
+                if k.startswith(prefix)}
+    if not flat:
+        raise KeyError(f"checkpoint {path} has no leaves under {prefix!r}")
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_flatten(template)[1]
+    leaves = []
+    for path_keys, leaf_t in paths:
+        key = _path_key(path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint member {index} missing leaf "
+                           f"{key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf_t.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                f"template {leaf_t.shape} -- was the checkpoint written "
+                "with a different --arch/--reduced?")
+        leaves.append(jnp.asarray(arr).astype(leaf_t.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
 def latest_checkpoint(directory: str) -> Optional[str]:
     if not os.path.isdir(directory):
         return None

@@ -332,19 +332,24 @@ def make_compressor(spec: Optional[str]) -> Optional[Compressor]:
     """CLI spec -> compressor.  ``None``/``'none'``/``''`` -> None (the
     engine's no-comm path, trace-identical to the pre-comm engine);
     ``identity`` | ``q8`` | ``fp8`` | ``topk:R`` (R = keep ratio in
-    [0, 1], e.g. ``topk:0.1``)."""
+    [0, 1], e.g. ``topk:0.1``).  Lexing/errors via the shared
+    ``configs.specs.parse_spec`` mini-language helper."""
     if spec is None or spec in ("", "none"):
         return None
-    if spec == "identity":
+    from repro.configs.specs import cast_value, parse_spec
+    p = parse_spec(spec, flag="--compress",
+                   heads=("none", "identity", "q8", "fp8", "topk"),
+                   arity={"topk": (1, 1)}, head_label="compressor")
+    if p.head == "none":
+        return None
+    if p.head == "identity":
         return Identity()
-    if spec == "q8":
+    if p.head == "q8":
         return Quantize("int8")
-    if spec == "fp8":
+    if p.head == "fp8":
         return Quantize("fp8")
-    if spec.startswith("topk:"):
-        return TopK(float(spec.split(":", 1)[1]))
-    raise ValueError(f"unknown compressor spec {spec!r} "
-                     "(want none | identity | q8 | fp8 | topk:R)")
+    ratio = cast_value("--compress", "topk ratio", p.args[0], float)
+    return TopK(ratio)
 
 
 def payload_bytes(compressor: Optional[Compressor], template: Pytree) -> int:

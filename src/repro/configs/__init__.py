@@ -25,3 +25,12 @@ from repro.configs import (  # noqa: F401
 )
 
 ALL_ARCHS = tuple(sorted(list_configs()))
+
+# typed run configs (imported late: run.py defers its repro.core imports
+# to method bodies, so this adds no import-time weight or cycles)
+from repro.configs.run import RunSpec, ServeSpec  # noqa: E402,F401
+from repro.configs.specs import (  # noqa: E402,F401
+    ParsedSpec,
+    SpecError,
+    parse_spec,
+)

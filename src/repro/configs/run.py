@@ -1,0 +1,522 @@
+"""Typed, validated run configs for the two entry points.
+
+``RunSpec`` covers the FULL training surface of ``launch/train.py`` --
+every CLI flag is a field with the same name and default -- and
+``ServeSpec`` is its serving-tier sibling for ``launch/serve.py``.
+Both share one idiom:
+
+  * ``from_args(argv)``  -- parse the CLI.  ``--config run.json`` loads
+    a JSON spec first and explicit flags override it field by field
+    (``argparse.SUPPRESS`` keeps untyped flags from clobbering the
+    file's values with defaults).
+  * ``from_json(path)`` / ``to_json()`` -- the same fields as a JSON
+    object; unknown keys fail fast.
+  * ``validate()``       -- cross-field constraints.  For RunSpec these
+    are the historical ``launch/train.py`` guard rails (``--robust``
+    needs a placement, ``--bandwidth`` needs the async regime, ...),
+    raised as ``SystemExit`` with the same messages so CLI behaviour is
+    unchanged.
+  * ``to_meta()``        -- the canonical config metadata stamped into
+    checkpoints and re-validated on resume.  Canonicalization goes
+    through the real factories (``make_compressor`` /`` make_faults`` /
+    ``make_layout`` / ``make_robust``), so two specs match iff the
+    factories would build the same thing -- the ad-hoc per-key dicts
+    the drivers used to assemble are gone.
+
+The argparse surface lives HERE (``RunSpec.parser()``), single-sourced:
+``launch/train.py`` just calls ``RunSpec.from_args``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from dataclasses import dataclass, fields
+from typing import Any, Dict, Optional, Tuple
+
+
+def _coerce(f: dataclasses.Field, v: Any) -> Any:
+    """JSON -> field coercion: ints may stand in for floats, everything
+    else must already be the right shape (bools/ints/strings/None)."""
+    if v is None:
+        return None
+    if f.type in ("float", "Optional[float]") and isinstance(v, int) \
+            and not isinstance(v, bool):
+        return float(v)
+    return v
+
+
+class _SpecBase:
+    """Shared from_args/from_json/to_json plumbing.  Subclasses supply
+    ``parser(suppress)`` returning an argparse parser whose dests match
+    the dataclass fields (plus the ``--config`` meta-flag)."""
+
+    @classmethod
+    def from_json(cls, path: str) -> "_SpecBase":
+        with open(path) as f:
+            data = json.load(f)
+        return cls.from_dict(data, where=path)
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any],
+                  where: str = "<dict>") -> "_SpecBase":
+        names = {f.name: f for f in fields(cls)}
+        unknown = sorted(set(data) - set(names))
+        if unknown:
+            raise SystemExit(
+                f"{cls.__name__} {where}: unknown field(s) "
+                f"{', '.join(unknown)} (want a subset of "
+                f"{', '.join(sorted(names))})")
+        return cls(**{k: _coerce(names[k], v) for k, v in data.items()})
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.to_dict(), indent=2, sort_keys=True)
+        if path:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+    @classmethod
+    def from_args(cls, argv=None) -> "_SpecBase":
+        ns = cls.parser(suppress=True).parse_args(argv)
+        over = dict(vars(ns))
+        config = over.pop("config", None)
+        base = cls.from_json(config) if config else cls()
+        return dataclasses.replace(base, **over)
+
+    def replace(self, **kw) -> "_SpecBase":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunSpec(_SpecBase):
+    """The full training surface: one field per ``launch/train.py``
+    flag, same names, same defaults."""
+
+    arch: str = "llama3.2-3b"
+    reduced: bool = False
+    strategy: str = "feddeper"
+    clients: int = 2
+    tau: int = 4
+    rounds: int = 10
+    batch: int = 2
+    seq: int = 128
+    eta: float = 0.05
+    rho: float = 0.01
+    lam: float = 0.5
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    regime: str = "datacenter"
+    placement: Optional[str] = None
+    sampled: Optional[int] = None
+    block_rounds: Optional[int] = None
+    concurrent: int = 4
+    buffer: int = 2
+    alpha: float = 0.5
+    delay: float = 5.0
+    delay_dist: str = "lognormal"
+    delay_sigma: float = 1.0
+    per_client: int = 64
+    store: str = "dense"
+    compress: str = "none"
+    bandwidth: float = 0.0
+    faults: str = "none"
+    robust: str = "none"
+    clip_norm: float = 0.0
+    max_retries: int = 3
+
+    # -- construction -------------------------------------------------
+
+    @classmethod
+    def parser(cls, suppress: bool = False) -> argparse.ArgumentParser:
+        from repro.core import STRATEGIES
+        from repro.faults import CORRUPT_MODES
+        from repro.robust import ROBUST_MODES
+        d = cls()
+
+        def dflt(v):
+            # argparse ignores argument_default once an explicit
+            # default= is given, so every argument routes through this:
+            # suppress mode leaves unpassed flags OUT of the namespace
+            # (a --config JSON base must not be clobbered by defaults)
+            return argparse.SUPPRESS if suppress else v
+
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--config", default=dflt(None),
+                        help="JSON RunSpec to start from; explicit "
+                             "flags override its fields")
+        ap.add_argument("--arch", default=dflt(d.arch))
+        ap.add_argument("--reduced", action="store_true",
+                        default=dflt(False),
+                        help="2-layer smoke variant (CPU)")
+        ap.add_argument("--strategy", default=dflt(d.strategy),
+                        choices=sorted(STRATEGIES))
+        ap.add_argument("--clients", type=int, default=dflt(d.clients))
+        ap.add_argument("--tau", type=int, default=dflt(d.tau))
+        ap.add_argument("--rounds", type=int, default=dflt(d.rounds))
+        ap.add_argument("--batch", type=int, default=dflt(d.batch),
+                        help="per-client b")
+        ap.add_argument("--seq", type=int, default=dflt(d.seq))
+        ap.add_argument("--eta", type=float, default=dflt(d.eta))
+        ap.add_argument("--rho", type=float, default=dflt(d.rho))
+        ap.add_argument("--lam", type=float, default=dflt(d.lam))
+        ap.add_argument("--seed", type=int, default=dflt(d.seed))
+        ap.add_argument("--ckpt-dir", default=dflt(d.ckpt_dir))
+        ap.add_argument("--ckpt-every", type=int, default=dflt(d.ckpt_every))
+        # buffered-async regime (core/async_rounds.py)
+        ap.add_argument("--regime", default=dflt(d.regime),
+                        choices=("datacenter", "async"))
+        # cohort-engine placement (core/engine.py); None = legacy
+        # fixed-cohort datacenter step
+        ap.add_argument("--placement", default=dflt(d.placement),
+                        choices=("vmap", "mesh"),
+                        help="cohort placement (core/engine.py): 'vmap' "
+                             "single-device, 'mesh' cohort + stores over "
+                             "the client axis of all local devices.  "
+                             "Sync regime: routes through the cohort "
+                             "engine instead of the legacy fixed-cohort "
+                             "step.  --regime async: 'mesh' pads "
+                             "dispatch cohorts onto the client axis and "
+                             "lowers the staleness-weighted aggregate "
+                             "to one psum")
+        ap.add_argument("--sampled", type=int, default=dflt(d.sampled),
+                        help="engine placement: clients sampled per "
+                             "round (default: all; mesh needs it "
+                             "divisible by the client-axis size)")
+        ap.add_argument("--block-rounds", type=int,
+                        default=dflt(d.block_rounds),
+                        help="engine placement: rounds per scan-compiled "
+                             "block (one jitted lax.scan, one host sync "
+                             "and one donation handoff per block); eval "
+                             "and checkpoints fire at block boundaries")
+        ap.add_argument("--concurrent", type=int, default=dflt(d.concurrent),
+                        help="async: clients training simultaneously")
+        ap.add_argument("--buffer", type=int, default=dflt(d.buffer),
+                        help="async: uploads per aggregation")
+        ap.add_argument("--alpha", type=float, default=dflt(d.alpha),
+                        help="async: staleness discount exponent")
+        ap.add_argument("--delay", type=float, default=dflt(d.delay),
+                        help="async: mean client delay (0 = no "
+                             "stragglers)")
+        ap.add_argument("--delay-dist", default=dflt(d.delay_dist),
+                        choices=("constant", "uniform", "lognormal"))
+        ap.add_argument("--delay-sigma", type=float,
+                        default=dflt(d.delay_sigma),
+                        help="async: lognormal delay shape (straggler "
+                             "heaviness); only used with "
+                             "--delay-dist lognormal")
+        ap.add_argument("--per-client", type=int, default=dflt(d.per_client),
+                        help="async/--placement: LM sequences "
+                             "materialized per client")
+        # client-store layout (repro.core.store)
+        ap.add_argument("--store", default=dflt(d.store),
+                        help="client-store layout: dense | virtual[:host|"
+                             ":recon|:shard[:DIR]] -- 'dense' keeps full "
+                             "(n_clients, ...) stores on device; "
+                             "'virtual' keeps only the sampled cohort's "
+                             "rows on device against a host / "
+                             "reconstructible / checkpoint-shard backing "
+                             "tier (O(cohort) device memory, "
+                             "bitwise-identical trajectory)")
+        # uplink compression (repro.comm)
+        ap.add_argument("--compress", default=dflt(d.compress),
+                        help="uplink compressor: none | identity | q8 | "
+                             "fp8 | topk:R (keep-ratio R in [0,1], e.g. "
+                             "topk:0.1); 'none' is trace-identical to "
+                             "the pre-comm engine")
+        ap.add_argument("--bandwidth", type=float, default=dflt(d.bandwidth),
+                        help="async: uplink bytes per simulated-time "
+                             "unit; deliveries pay payload_bytes/"
+                             "bandwidth extra (0 = no bandwidth model)")
+        # fault injection + screening (repro.faults)
+        ap.add_argument("--faults", default=dflt(d.faults),
+                        help="fault spec: none | drop:P,corrupt:P[,"
+                             "mode:M,scale:S,bitflip:F,z:Z,deadline:T] "
+                             "-- per-client per-round dropouts / "
+                             "corrupted uploads (M in "
+                             f"{'|'.join(CORRUPT_MODES)}; the stealth "
+                             "modes alie/collude/ipflip also take the "
+                             "shorthand alie:P etc. and strength z:Z), "
+                             "all derived deterministically from the "
+                             "round rng; deadline:T is async-only "
+                             "(dispatches finishing after T sim-time "
+                             "units never deliver)")
+        ap.add_argument("--robust", default=dflt(d.robust),
+                        help="Byzantine-robust aggregation "
+                             "(repro.robust): none | "
+                             f"{' | '.join(ROBUST_MODES)} -- trimmed:F "
+                             "per-coordinate trimmed mean (trim "
+                             "fraction F per tail), median, krum:F "
+                             "keep-closest-to-the-pack filtering, "
+                             "bucket:B[,inner:median|trimmed] bucketed "
+                             "robust mean (B buckets ride the round's "
+                             "single psum); 'none' is trace-identical "
+                             "to the plain mean (engine placements "
+                             "only)")
+        ap.add_argument("--clip-norm", type=float, default=dflt(d.clip_norm),
+                        help="server-side upload-norm clip: uploads "
+                             "with l2 norm above C are scaled down "
+                             "inside the aggregation weights (0 = off; "
+                             "engine placements only)")
+        ap.add_argument("--max-retries", type=int, default=dflt(d.max_retries),
+                        help="crash-safe recovery: consecutive rollback+"
+                             "reseed retries of a round/block that left "
+                             "the global model non-finite before giving "
+                             "up")
+        return ap
+
+    # -- validation ---------------------------------------------------
+
+    def validate(self) -> "RunSpec":
+        """Cross-field guard rails, verbatim from the historical
+        ``launch/train.py`` main(); ``SystemExit`` keeps CLI behaviour
+        (message on stderr, nonzero exit) identical.  Field-level
+        vocabulary is re-checked too so ``from_json`` specs get the
+        same errors argparse ``choices`` would give the CLI."""
+        from repro.core import STRATEGIES
+        if self.strategy not in STRATEGIES:
+            raise SystemExit(
+                f"unknown strategy {self.strategy!r} "
+                f"(want {'|'.join(sorted(STRATEGIES))})")
+        if self.regime not in ("datacenter", "async"):
+            raise SystemExit(
+                f"unknown regime {self.regime!r} (want datacenter|async)")
+        if self.placement not in (None, "vmap", "mesh"):
+            raise SystemExit(
+                f"unknown placement {self.placement!r} (want vmap|mesh)")
+        if self.delay_dist not in ("constant", "uniform", "lognormal"):
+            raise SystemExit(
+                f"unknown delay_dist {self.delay_dist!r} "
+                "(want constant|uniform|lognormal)")
+        if self.block_rounds is not None and self.block_rounds < 1:
+            raise SystemExit("--block-rounds must be >= 1")
+        if self.block_rounds and not self.placement:
+            raise SystemExit(
+                "--block-rounds drives the cohort engine: pass "
+                "--placement {vmap,mesh} (the async regime's sim-time "
+                "advance is host-side and cannot be scanned)")
+        if self.compress != "none" and self.regime != "async" \
+                and not self.placement:
+            raise SystemExit(
+                "--compress rides the comm-aware paths: pass "
+                "--placement {vmap,mesh} or --regime async (the legacy "
+                "fixed-cohort datacenter step has no uplink seam)")
+        if self.store != "dense" and self.regime != "async" \
+                and not self.placement:
+            raise SystemExit(
+                "--store virtual rides the cohort-engine store seam: "
+                "pass --placement {vmap,mesh} or --regime async (the "
+                "legacy fixed-cohort datacenter step holds its client "
+                "store inline)")
+        if self.bandwidth and self.regime != "async":
+            raise SystemExit(
+                "--bandwidth prices the simulated async uplink queue: "
+                "pass --regime async (the synchronous regimes have no "
+                "simulated clock; previously the flag was silently "
+                "ignored)")
+        if (self.faults != "none" or self.clip_norm) \
+                and self.regime != "async" and not self.placement:
+            raise SystemExit(
+                "--faults/--clip-norm ride the fault-aware paths: pass "
+                "--placement {vmap,mesh} or --regime async (the legacy "
+                "fixed-cohort datacenter step has no screening seam)")
+        if self.robust != "none" and self.regime == "async":
+            raise SystemExit(
+                "--robust reduces one synchronous cohort's upload "
+                "stack: the async regime's staleness-discounted buffer "
+                "aggregates incrementally and has no robust seam (run "
+                "--regime datacenter)")
+        if self.robust != "none" and not self.placement:
+            raise SystemExit(
+                "--robust rides the cohort engine's aggregate seam: "
+                "pass --placement {vmap,mesh} (the legacy fixed-cohort "
+                "datacenter step has no mean_fn seam)")
+        if self.clip_norm and self.regime == "async":
+            raise SystemExit(
+                "--clip-norm screens synchronous cohort uploads inside "
+                "the weighted mean: the async regime's staleness-"
+                "discounted buffer has no per-lane weight vector (only "
+                "--faults deadline:T applies there)")
+        return self
+
+    # -- derived objects ----------------------------------------------
+
+    def make_strategy(self):
+        from repro.core import STRATEGIES
+        kw = dict(eta=self.eta)
+        if self.strategy == "feddeper":
+            kw.update(rho=self.rho, lam=self.lam)
+        return STRATEGIES[self.strategy](**kw)
+
+    def arch_config(self):
+        from repro.configs import get_config
+        cfg = get_config(self.arch)
+        return cfg.reduced() if self.reduced else cfg
+
+    def to_meta(self) -> Dict[str, str]:
+        """Canonical checkpoint metadata: resume re-validates these four
+        keys against the resuming run's spec.  Canonical form comes from
+        the factories themselves (``FaultConfig.spec`` etc.), so
+        ``faults='drop:0.2,corrupt:0'`` and ``faults='drop:0.2'`` agree."""
+        from repro.comm import make_compressor
+        from repro.core import make_layout
+        from repro.faults import make_faults
+        from repro.robust import make_robust
+        comp = make_compressor(self.compress)
+        flt = make_faults(self.faults, clip_norm=self.clip_norm)
+        robust = make_robust(self.robust)
+        return {"compress": comp.name if comp else "none",
+                "faults": flt.spec if flt else "none",
+                "store": make_layout(self.store).spec,
+                "robust": robust.spec if robust else "none"}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServeSpec(_SpecBase):
+    """The serving-tier surface (``launch/serve.py`` / ``repro.serve``).
+
+    ``weights`` is a WeightSource spec (serve/weights.py):
+    ``init[:SEED]`` | ``ckpt:DIR`` | ``q8[:SRC]`` | ``fp8[:SRC]``;
+    ``ckpt_dir`` is CLI sugar that rewrites ``init`` -> ``ckpt:DIR``
+    so ``--ckpt-dir`` from a training run drops straight in."""
+
+    arch: str = "llama3.2-3b"
+    reduced: bool = False
+    weights: str = "init"
+    ckpt_dir: Optional[str] = None
+    slots: int = 4                 # concurrent decode slots (batch rows)
+    max_len: int = 128             # KV-cache capacity per slot
+    block_tokens: int = 16         # tokens per jitted decode block
+    prompt_len: int = 16           # batch mode: uniform prompt length
+    gen_tokens: int = 32           # tokens generated per request
+    seed: int = 0
+    # request simulator (serve/simulator.py)
+    simulate: bool = False
+    requests: int = 8
+    prompt_lens: str = "4,8,12,16"  # simulator: mixed prompt lengths
+    delay: float = 0.0             # mean inter-arrival time (sim units)
+    delay_dist: str = "lognormal"
+    delay_sigma: float = 1.0
+    time_unit: float = 0.0         # wall seconds per sim-time unit
+
+    @classmethod
+    def parser(cls, suppress: bool = False) -> argparse.ArgumentParser:
+        d = cls()
+
+        def dflt(v):
+            # argparse ignores argument_default once an explicit
+            # default= is given, so every argument routes through this:
+            # suppress mode leaves unpassed flags OUT of the namespace
+            # (a --config JSON base must not be clobbered by defaults)
+            return argparse.SUPPRESS if suppress else v
+
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--config", default=dflt(None),
+                        help="JSON ServeSpec to start from; explicit "
+                             "flags override its fields")
+        ap.add_argument("--arch", default=dflt(d.arch))
+        ap.add_argument("--reduced", action="store_true",
+                        default=dflt(False))
+        ap.add_argument("--weights", default=dflt(d.weights),
+                        help="weight source: init[:SEED] | ckpt:DIR | "
+                             "q8[:SRC] | fp8[:SRC] (SRC defaults to "
+                             "init; q8:ckpt:DIR serves an int8-packed "
+                             "checkpoint)")
+        ap.add_argument("--ckpt-dir", default=dflt(d.ckpt_dir),
+                        help="sugar for --weights ckpt:DIR: load the "
+                             "global model from a launch/train.py "
+                             "checkpoint directory")
+        ap.add_argument("--slots", type=int, default=dflt(d.slots),
+                        help="concurrent decode slots (the batch)")
+        ap.add_argument("--max-len", type=int, default=dflt(d.max_len),
+                        help="KV-cache rows per slot")
+        ap.add_argument("--block-tokens", type=int,
+                        default=dflt(d.block_tokens),
+                        help="tokens per jitted lax.scan decode block "
+                             "(one host sync per block)")
+        ap.add_argument("--prompt-len", type=int, default=dflt(d.prompt_len))
+        ap.add_argument("--gen-tokens", type=int, default=dflt(d.gen_tokens))
+        ap.add_argument("--seed", type=int, default=dflt(d.seed))
+        ap.add_argument("--simulate", action="store_true",
+                        default=dflt(False),
+                        help="run the continuous-batching request "
+                             "simulator instead of one uniform batch")
+        ap.add_argument("--requests", type=int, default=dflt(d.requests))
+        ap.add_argument("--prompt-lens", default=dflt(d.prompt_lens),
+                        help="simulator: comma list of prompt lengths "
+                             "cycled over the requests")
+        ap.add_argument("--delay", type=float, default=dflt(d.delay),
+                        help="simulator: mean request inter-arrival "
+                             "time in sim units (0 = all at t0)")
+        ap.add_argument("--delay-dist", default=dflt(d.delay_dist),
+                        choices=("constant", "uniform", "lognormal"))
+        ap.add_argument("--delay-sigma", type=float,
+                        default=dflt(d.delay_sigma))
+        ap.add_argument("--time-unit", type=float, default=dflt(d.time_unit),
+                        help="wall seconds per sim-time unit (0 = "
+                             "arrivals only order the queue)")
+        return ap
+
+    def resolve_weights(self) -> str:
+        """Apply the ``--ckpt-dir`` sugar: an explicit ``--weights``
+        wins; with the default ``init`` a checkpoint dir rewrites the
+        source (quantized sugar composes: ``q8`` + ckpt_dir =
+        ``q8:ckpt:DIR``)."""
+        if not self.ckpt_dir:
+            return self.weights
+        if self.weights == "init":
+            return f"ckpt:{self.ckpt_dir}"
+        if self.weights in ("q8", "fp8"):
+            return f"{self.weights}:ckpt:{self.ckpt_dir}"
+        return self.weights
+
+    def parsed_prompt_lens(self) -> Tuple[int, ...]:
+        try:
+            lens = tuple(int(t) for t in
+                         str(self.prompt_lens).split(",") if t.strip())
+        except ValueError:
+            raise SystemExit(
+                f"--prompt-lens {self.prompt_lens!r}: want a comma "
+                "list of ints, e.g. 4,8,12") from None
+        if not lens:
+            raise SystemExit("--prompt-lens must name at least one "
+                             "prompt length")
+        return lens
+
+    def validate(self) -> "ServeSpec":
+        if self.slots < 1:
+            raise SystemExit("--slots must be >= 1")
+        if self.block_tokens < 1:
+            raise SystemExit("--block-tokens must be >= 1")
+        if self.gen_tokens < 1:
+            raise SystemExit("--gen-tokens must be >= 1")
+        if self.delay_dist not in ("constant", "uniform", "lognormal"):
+            raise SystemExit(
+                f"unknown delay_dist {self.delay_dist!r} "
+                "(want constant|uniform|lognormal)")
+        lens = self.parsed_prompt_lens() if self.simulate \
+            else (self.prompt_len,)
+        worst = max(lens)
+        if worst < 1:
+            raise SystemExit("prompt lengths must be >= 1")
+        if worst + self.gen_tokens > self.max_len:
+            raise SystemExit(
+                f"--max-len {self.max_len} cannot hold a "
+                f"{worst}-token prompt plus {self.gen_tokens} generated "
+                f"tokens: raise --max-len to >= "
+                f"{worst + self.gen_tokens}")
+        if self.requests < 1 and self.simulate:
+            raise SystemExit("--requests must be >= 1")
+        return self

@@ -1,0 +1,143 @@
+"""One tokenizer for the CLI string mini-languages.
+
+Four flags grew four hand-rolled colon/comma parsers with four error
+styles: ``--store virtual:shard:DIR`` (core/store.py), ``--compress
+topk:0.25`` (comm/compressors.py), ``--faults drop:P,mode:M,...``
+(faults/inject.py) and ``--robust bucket:4,inner:trimmed``
+(robust/reducers.py).  The *grammars* are deliberately different -- each
+factory owns its vocabulary and value types -- but the lexical shape is
+shared: a comma-separated token list where the first token may be a
+``head[:arg[:arg]]`` form and the rest are ``key:value`` pairs.
+
+``parse_spec`` is that shared shape.  It splits, validates head / arity /
+key vocabulary, and raises uniform errors:
+
+  * unknown head  -> ``--flag: unknown MODE 'tok' (want a|b|c)``
+  * bad arity     -> ``--flag: HEAD takes no parameter`` /
+                     ``takes at most N parameters``
+  * not key:value -> ``--flag: token 'tok': want key:value``
+  * unknown key   -> ``--flag: unknown key 'k' (want a|b|c)``
+
+Values come back as strings; casting and range checks stay in the
+factories (FaultConfig / RobustConfig / TopK post-inits), which is where
+the domain errors ("frac must be in [0, 0.5)") already live and are
+tested.  ``head_label`` keeps each flag's historical vocabulary word in
+the message ("mode" for --robust, "compressor" for --compress) so the
+pinned error-message tests keep matching.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+
+
+class SpecError(ValueError):
+    """A malformed CLI spec string (subclass of ValueError so existing
+    ``pytest.raises(ValueError)`` pins keep holding)."""
+
+
+@dataclass(frozen=True)
+class ParsedSpec:
+    """Lexed spec: ``head`` (None for headless grammars), the head's
+    positional ``args``, and the remaining ``key:value`` tokens in
+    source order (duplicates preserved -- last-wins is a factory
+    policy, not a lexer one)."""
+
+    head: Optional[str]
+    args: Tuple[str, ...]
+    kv: Tuple[Tuple[str, str], ...]
+
+
+def _fmt_vocab(words: Sequence[str]) -> str:
+    return "|".join(words)
+
+
+def parse_spec(spec: str, *, flag: str,
+               heads: Optional[Sequence[str]] = None,
+               arity: Optional[Mapping[str, Tuple[int, int]]] = None,
+               greedy: Sequence[str] = (),
+               keys: Union[Sequence[str],
+                           Mapping[str, Sequence[str]], None] = None,
+               head_label: str = "token",
+               head_hint: str = "",
+               key_hint: str = "") -> ParsedSpec:
+    """Lex one CLI spec string.
+
+    ``heads``      -- allowed first-token heads; ``None`` = headless
+                      grammar (every comma token is ``key:value``).
+    ``arity``      -- per-head ``(min, max)`` positional-arg counts
+                      (missing head -> ``(0, 0)``).
+    ``greedy``     -- heads whose LAST positional swallows any further
+                      colons (``virtual:shard:/tmp/a:b`` keeps the dir
+                      intact).
+    ``keys``       -- allowed ``key:value`` vocabulary: one sequence for
+                      every head, or a per-head mapping; ``None`` = no
+                      kv tokens accepted.
+    ``head_label`` -- the flag's word for its head in errors ("mode",
+                      "compressor", ...).
+    ``head_hint`` / ``key_hint`` -- extra text appended to the unknown-
+                      head / unknown-key errors (the --faults error
+                      enumerates the corrupt modes through this).
+    """
+    toks = [t.strip() for t in spec.split(",")]
+    toks = [t for t in toks if t]
+    if not toks:
+        raise SpecError(f"{flag}: empty spec {spec!r}")
+
+    head = None
+    args: Tuple[str, ...] = ()
+    rest = toks
+    if heads is not None:
+        first = toks[0]
+        head = first.split(":", 1)[0].strip()
+        if head not in heads:
+            hint = f" {head_hint}" if head_hint else ""
+            raise SpecError(
+                f"{flag}: unknown {head_label} {head!r} "
+                f"(want {_fmt_vocab(heads)}){hint}")
+        lo, hi = (arity or {}).get(head, (0, 0))
+        parts = first.split(":", hi) if head in greedy \
+            else first.split(":")
+        args = tuple(p.strip() if head not in greedy else p
+                     for p in parts[1:])
+        if len(args) > hi:
+            what = "no parameter" if hi == 0 \
+                else f"at most {hi} parameter{'s' if hi > 1 else ''}"
+            raise SpecError(
+                f"{flag}: {head} takes {what}, "
+                f"got {':'.join(args)!r}")
+        if len(args) < lo:
+            raise SpecError(
+                f"{flag}: {head} needs at least {lo} "
+                f"parameter{'s' if lo > 1 else ''} in {spec!r}")
+        rest = toks[1:]
+
+    allowed = keys
+    if isinstance(keys, Mapping):
+        allowed = keys.get(head, ())
+    kv = []
+    for tok in rest:
+        if ":" not in tok:
+            hint = f" ({key_hint})" if key_hint else ""
+            raise SpecError(
+                f"{flag}: token {tok!r}: want key:value{hint}")
+        k, v = tok.split(":", 1)
+        k = k.strip()
+        if allowed is None or k not in allowed:
+            hint = f"; {key_hint}" if key_hint else ""
+            want = _fmt_vocab(allowed) if allowed else "no keys here"
+            raise SpecError(
+                f"{flag}: unknown key {k!r} (want {want}{hint})")
+        kv.append((k, v.strip()))
+    return ParsedSpec(head=head, args=args, kv=tuple(kv))
+
+
+def cast_value(flag: str, key: str, value: str, cast) -> object:
+    """Cast one spec value, rewriting the bare ``float('x')`` error into
+    the uniform spec-error shape."""
+    try:
+        return cast(value)
+    except (TypeError, ValueError):
+        raise SpecError(
+            f"{flag}: {key} value {value!r} is not a valid "
+            f"{cast.__name__}") from None

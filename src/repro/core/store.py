@@ -428,24 +428,28 @@ def make_layout(spec=None) -> StoreLayout:
       ``"virtual:recon"``         -> VirtualLayout(recon)
       ``"virtual:shard[:<dir>]"`` -> VirtualLayout(shard), optional dir
 
-    An already-constructed StoreLayout passes through."""
+    An already-constructed StoreLayout passes through.  Lexing/errors
+    via the shared ``configs.specs.parse_spec`` mini-language helper;
+    the tier directory (``shard`` only) may itself contain colons."""
     if spec is None or isinstance(spec, StoreLayout):
         return spec or StoreLayout()
-    if spec == "dense":
+    from repro.configs.specs import SpecError, parse_spec
+    p = parse_spec(spec, flag="--store", heads=("dense", "virtual"),
+                   arity={"virtual": (0, 2)}, greedy=("virtual",),
+                   head_label="layout",
+                   head_hint="(grammar: dense | "
+                             "virtual[:host|:recon|:shard[:dir]])")
+    if p.head == "dense":
         return StoreLayout()
-    if spec == "virtual":
+    if not p.args:
         return VirtualLayout()
-    if spec.startswith("virtual:"):
-        rest = spec.split(":", 2)[1:]
-        tier = rest[0]
-        if tier not in _TIERS:
-            raise ValueError(f"unknown store spec {spec!r} (tier must be "
-                             f"{'|'.join(_TIERS)})")
-        if tier == "shard" and len(rest) > 1:
-            return VirtualLayout(tier="shard", shard_dir=rest[1])
-        return VirtualLayout(tier=tier)
-    raise ValueError(f"unknown store spec {spec!r} (want 'dense' | "
-                     "'virtual[:host|:recon|:shard[:dir]]')")
+    tier = p.args[0].strip()
+    if tier not in _TIERS:
+        raise SpecError(f"unknown store spec {spec!r} (tier must be "
+                        f"{'|'.join(_TIERS)})")
+    if tier == "shard" and len(p.args) > 1:
+        return VirtualLayout(tier="shard", shard_dir=p.args[1])
+    return VirtualLayout(tier=tier)
 
 
 def resolve_layout(layout) -> StoreLayout:

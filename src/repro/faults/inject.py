@@ -145,41 +145,34 @@ def make_faults(spec: Optional[str], clip_norm: float = 0.0
 
     Stealth sugar: ``collude:F`` == ``corrupt:F,mode:collude`` (same for
     ``alie:F`` / ``ipflip:F``); ``z:VAL`` sets the attack strength."""
+    _KEYS = {
+        "drop": ("drop", float),
+        "corrupt": ("corrupt", float),
+        "mode": ("corrupt_mode", str),
+        "scale": ("corrupt_scale", float),
+        "bitflip": ("bitflip_frac", float),
+        "z": ("attack_z", float),
+        "deadline": ("deadline", float),
+        "clip": ("clip_norm", float),
+    }
     kw: Dict[str, Any] = {}
     if spec and spec != "none":
-        for tok in spec.split(","):
-            tok = tok.strip()
-            if not tok:
-                continue
-            if ":" not in tok:
-                raise ValueError(
-                    f"--faults token {tok!r}: want key:value (mode M in "
-                    f"{'|'.join(CORRUPT_MODES)})")
-            k, v = tok.split(":", 1)
-            k = k.strip()
+        from repro.configs.specs import cast_value, parse_spec
+        p = parse_spec(
+            spec, flag="--faults",
+            keys=tuple(_KEYS) + STEALTH_MODES,
+            key_hint=f"stealth-mode shorthands "
+                     f"{'|'.join(STEALTH_MODES)} take alie:P etc.; "
+                     f"mode M in {'|'.join(CORRUPT_MODES)}")
+        for k, v in p.kv:
             if k in STEALTH_MODES:
                 # collude:0.2 == corrupt:0.2,mode:collude
-                kw["corrupt"] = float(v.strip())
+                kw["corrupt"] = cast_value("--faults", k, v, float)
                 kw["corrupt_mode"] = k
                 continue
-            try:
-                key, cast = {
-                    "drop": ("drop", float),
-                    "corrupt": ("corrupt", float),
-                    "mode": ("corrupt_mode", str),
-                    "scale": ("corrupt_scale", float),
-                    "bitflip": ("bitflip_frac", float),
-                    "z": ("attack_z", float),
-                    "deadline": ("deadline", float),
-                    "clip": ("clip_norm", float),
-                }[k]
-            except KeyError:
-                raise ValueError(
-                    f"--faults: unknown key {k!r} (want drop|corrupt|mode"
-                    f"|scale|bitflip|z|deadline|clip or a stealth-mode "
-                    f"shorthand {'|'.join(STEALTH_MODES)}; mode M in "
-                    f"{'|'.join(CORRUPT_MODES)})") from None
-            kw[key] = cast(v.strip())
+            key, cast = _KEYS[k]
+            kw[key] = cast_value("--faults", k, v, cast) \
+                if cast is float else cast(v)
     if clip_norm:
         kw["clip_norm"] = float(clip_norm)
     if not kw:

@@ -80,6 +80,138 @@ def _kernel(scale, causal, window, cap, block_q, block_kv, nk,
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# flash decode: one-token queries against a KV cache with per-row live lens
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(scale, cap, block_kv, nk,
+                   q_ref, k_ref, v_ref, len_ref, o_ref,
+                   m_scr, l_scr, acc_scr):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = len_ref[0, 0]
+    k_start = j * block_kv
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)  # (G, Dq)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, Dq)
+        v = v_ref[0].astype(jnp.float32)  # (bkv, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_kv), 1)
+        mask = kpos < valid
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+
+    # a block entirely past the row's live length is a bitwise no-op
+    # (mask zeroes p exactly; corr == exp(0) == 1), so skipping it only
+    # saves FLOPs -- short rows in a mixed batch pay for their own length
+    pl.when(k_start < valid)(compute)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_bhsd(q, k, v, lens, *, cap: Optional[float] = None,
+                      block_kv: int = 128, interpret: bool = False):
+    """q: (B*K, G, Dq) one-token queries, k: (B*K, L, Dq),
+    v: (B*K, L, Dv), lens: (B*K,) int32 live lengths -- head-major.
+
+    The wrapper in ops.py handles (B,1,H,D) <-> head-major reshapes,
+    head-dim / group / length padding, and the off-TPU oracle bypass."""
+    BK, G, Dq = q.shape
+    _, L, Dv = v.shape
+    assert L % block_kv == 0
+    nk = L // block_kv
+    scale = Dq ** -0.5
+    lens2 = lens.astype(jnp.int32).reshape(BK, 1)
+
+    kernel = functools.partial(_decode_kernel, scale, cap, block_kv, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BK, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, Dq), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, Dq), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, Dv), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dv), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BK, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max
+            pltpu.VMEM((G, 1), jnp.float32),   # running sum
+            pltpu.VMEM((G, Dv), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, lens2)
+
+
+def flash_decode_ref(q, k, v, lens, *, cap: Optional[float] = None,
+                     block_kv: int = 128):
+    """Pure-jnp oracle running the SAME blocked online-softmax math as
+    ``_decode_kernel`` on the same head-major operands (scan over KV
+    blocks, vmapped over rows).  Bitwise-identical to the interpret-mode
+    kernel, which makes it both the correctness pin and the off-TPU fast
+    path in ops.flash_decode (interpret-mode grid emulation copies full
+    buffers per grid step)."""
+    BK, G, Dq = q.shape
+    _, L, Dv = v.shape
+    assert L % block_kv == 0
+    nk = L // block_kv
+    scale = Dq ** -0.5
+
+    def one_row(qr, kr, vr, valid):
+        kb = kr.reshape(nk, block_kv, Dq)
+        vb = vr.reshape(nk, block_kv, Dv)
+        starts = jnp.arange(nk, dtype=jnp.int32) * block_kv
+
+        def step(carry, blk):
+            m_prev, l_prev, acc = carry
+            kj, vj, k_start = blk
+            s = jax.lax.dot_general(qr, kj, (((1,), (1,)), ((), ()))) * scale
+            if cap is not None:
+                s = cap * jnp.tanh(s / cap)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (G, block_kv), 1)
+            mask = kpos < valid
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            p = jnp.exp(s - m_new) * mask
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+            acc = acc * corr + jax.lax.dot(p, vj)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((G, 1), NEG_INF, jnp.float32),
+                jnp.zeros((G, 1), jnp.float32),
+                jnp.zeros((G, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(step, init, (kb, vb, starts))
+        return acc / jnp.maximum(l, 1e-30)
+
+    out = jax.vmap(one_row)(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), lens.astype(jnp.int32))
+    return out.astype(q.dtype)
+
+
 def flash_attention_bhsd(q, k, v, *, causal=True,
                          window: Optional[int] = None,
                          cap: Optional[float] = None,

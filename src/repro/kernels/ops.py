@@ -166,6 +166,53 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return out[..., :D]
 
 
+@functools.partial(jax.jit, static_argnames=("cap", "block_kv"))
+def flash_decode(q, k_cache, v_cache, *, lens, cap: Optional[float] = None,
+                 block_kv: int = 128):
+    """Single-token GQA decode against a KV cache.
+
+    q: (B,1,H,Dq), caches: (B,L,K,D*), ``lens``: scalar or (B,) live
+    lengths per batch row -> (B,1,H,Dv), the drop-in flash counterpart
+    of ``models.attention.decode_attention`` (global softmax there,
+    blocked online softmax here; equal up to float reassociation).
+
+    One Pallas launch on TPU; off-TPU the bitwise-identical blocked jnp
+    oracle runs on the same padded head-major operands (interpret-mode
+    grid emulation copies full buffers per grid step)."""
+    B, _, H, Dq = q.shape
+    _, L, K, Dv = v_cache.shape
+    G = H // K
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+
+    # head-major rows: one grid row per (batch, kv-head) pair
+    qh = q.reshape(B, K, G, Dq).reshape(B * K, G, Dq)
+    kh = k_cache.transpose(0, 2, 1, 3).reshape(B * K, L, Dq)
+    vh = v_cache.transpose(0, 2, 1, 3).reshape(B * K, L, Dv)
+    lh = jnp.repeat(lens, K)
+
+    # pad: head dims to the MXU lane width, query groups to a sublane
+    # multiple, cache length to a whole number of KV blocks
+    Dqp = -(-Dq // 128) * 128
+    Dvp = -(-Dv // 128) * 128
+    Gp = -(-G // 8) * 8
+    bkv = min(block_kv, -(-L // 8) * 8)
+    Lp = -(-L // bkv) * bkv
+    qh = jnp.pad(qh, ((0, 0), (0, Gp - G), (0, Dqp - Dq)))
+    kh = jnp.pad(kh, ((0, 0), (0, Lp - L), (0, Dqp - Dq)))
+    vh = jnp.pad(vh, ((0, 0), (0, Lp - L), (0, Dvp - Dv)))
+    # kernel scales by Dqp^-0.5; correct to Dq^-0.5 (padded tail is zero)
+    qh = qh * (Dqp / Dq) ** 0.5
+
+    if _interpret():
+        out = _flash.flash_decode_ref(qh, kh, vh, lh, cap=cap,
+                                      block_kv=bkv)
+    else:
+        out = _flash.flash_decode_bhsd(qh, kh, vh, lh, cap=cap,
+                                       block_kv=bkv)
+    out = out[:, :G, :Dv].reshape(B, 1, H, Dv)
+    return out.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # grouped matmul
 # ---------------------------------------------------------------------------

@@ -1,67 +1,95 @@
-"""Serving driver: batched prefill + greedy decode with KV caches.
+"""Serving driver on the repro.serve tier (DESIGN.md §13).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
-      --batch 2 --prompt-len 32 --gen 16
+Batch mode (default): one cohort of uniform prompts, greedy decode in
+jitted blocks, JSON summary.  ``--simulate`` runs the continuous
+-batching request simulator instead: mixed prompt lengths, staggered
+arrivals, slot reuse.
+
+  # train, then serve the checkpoint:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \\
+      --rounds 3 --ckpt-dir /tmp/run1
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \\
+      --ckpt-dir /tmp/run1 --gen-tokens 32
+
+  # int8-packed weights + request simulator:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \\
+      --ckpt-dir /tmp/run1 --weights q8 --simulate --requests 8
 """
 from __future__ import annotations
 
-import argparse
 import json
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.core import make_decode_step, make_prefill_step
-from repro.models import init_cache, init_model
+from repro.configs import ServeSpec, get_config
+from repro.serve import ServeEngine, SimConfig, make_weight_source, simulate
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
+def _build(args: ServeSpec):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    rng = jax.random.PRNGKey(args.seed)
-    params = init_model(cfg, rng)
-    B, P = args.batch, args.prompt_len
-    max_len = P + args.gen
+    source = make_weight_source(args.resolve_weights())
+    params = source.load(cfg)
+    engine = ServeEngine(cfg, params, slots=args.slots,
+                         max_len=args.max_len,
+                         block_tokens=args.block_tokens)
+    return cfg, source, engine
 
-    batch = {"tokens": jax.random.randint(rng, (B, P), 0, cfg.vocab_size)}
-    if cfg.frontend is not None:
-        batch["frontend"] = 0.02 * jax.random.normal(
-            rng, (B, cfg.frontend_tokens, cfg.d_model))
-    cache = init_cache(cfg, B, max_len)
 
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
-
-    t0 = time.time()
-    logits, cache = prefill(params, batch, cache)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        tok, logits, cache = decode(params, cache, tok, jnp.int32(P + i))
-        out.append(tok)
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(json.dumps({
-        "arch": cfg.name, "batch": B, "prompt_len": P, "generated": args.gen,
-        "prefill_s": round(t_prefill, 3),
-        "decode_tok_per_s": round((args.gen - 1) * B / max(t_decode, 1e-9),
-                                  1),
+def _run_batch(cfg, source, engine, args: ServeSpec) -> dict:
+    rng = np.random.default_rng(np.random.SeedSequence([args.seed, 0xBA7C]))
+    prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len,
+                            dtype=np.int64).astype(np.int32)
+               for _ in range(args.slots)]
+    t0 = time.perf_counter()
+    # warm every compile cache the timed run hits (prefill bucket,
+    # admit, decode block); re-admission fully overwrites slot state
+    engine.generate(prompts, min(args.gen_tokens,
+                                 engine.block_tokens + 1))
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    gen = engine.generate(prompts, args.gen_tokens)
+    dt = time.perf_counter() - t0
+    return {
+        "mode": "batch",
+        "generated": int(gen.size),
+        "tokens_per_s": round(gen.size / max(dt, 1e-9), 1),
+        "compile_s": round(compile_s, 3),
+        "decode_s": round(dt, 3),
         "sample_tokens": gen[0, :8].tolist(),
-    }))
+    }
+
+
+def _run_simulate(cfg, source, engine, args: ServeSpec) -> dict:
+    sim = SimConfig(requests=args.requests,
+                    prompt_lens=args.parsed_prompt_lens(),
+                    gen_tokens=args.gen_tokens, delay=args.delay,
+                    delay_dist=args.delay_dist,
+                    delay_sigma=args.delay_sigma, seed=args.seed,
+                    time_unit=args.time_unit)
+    m = simulate(engine, sim)
+    m["mode"] = "simulate"
+    return m
+
+
+def main(argv=None):
+    args = ServeSpec.from_args(argv).validate()
+    cfg, source, engine = _build(args)
+    out = _run_simulate(cfg, source, engine, args) if args.simulate \
+        else _run_batch(cfg, source, engine, args)
+    out.update({
+        "arch": cfg.name,
+        "weights": source.name,
+        "resident_mb": round(source.resident_bytes(cfg) / 2 ** 20, 2),
+        "slots": args.slots, "max_len": args.max_len,
+        "block_tokens": args.block_tokens,
+        "block_compiles": engine.block_compile_count(),
+        "backend": jax.default_backend(),
+    })
+    print(json.dumps(out))
     return 0
 
 

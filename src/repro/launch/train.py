@@ -100,7 +100,6 @@ densifying, and resume re-validates the store layout against the CLI:
 """
 from __future__ import annotations
 
-import argparse
 import json
 import time
 
@@ -111,14 +110,14 @@ import numpy as np
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
 from repro.comm import make_compressor, uplink_bytes_per_round
-from repro.configs import get_config, list_configs
-from repro.core import (AsyncSimConfig, RollbackGuard, STRATEGIES,
+from repro.configs import RunSpec, get_config, list_configs
+from repro.core import (AsyncSimConfig, RollbackGuard,
                         SimConfig, init_async_state, init_sim_state,
                         make_async_round_fn, make_block_fn,
                         make_global_eval, make_layout, make_placement,
                         make_round_fn, make_round_step, run_blocks)
-from repro.faults import CORRUPT_MODES, make_faults
-from repro.robust import ROBUST_MODES, make_robust
+from repro.faults import make_faults
+from repro.robust import make_robust
 from repro.core.federated import make_lm_grad_fn
 from repro.data import lm_client_batch, make_federated_lm
 from repro.models import init_model, transformer
@@ -260,9 +259,7 @@ def run_async(cfg, strategy, args):
     # the staleness reference never jump backward across restarts.  The
     # canonical compress/faults specs are stamped into every save and
     # re-validated on restore (fail fast over silent config mixing).
-    cfg_meta = {"compress": compressor.name if compressor else "none",
-                "faults": faults.spec if faults else "none",
-                "store": layout.spec}
+    cfg_meta = args.to_meta()
     start, meta = _restore_state(state, args, expect=cfg_meta)
     state["round"] = start
     state["version"] = int(meta.get("version", start))
@@ -338,10 +335,7 @@ def run_engine(cfg, strategy, args):
         comm_extra["robust"] = robust.spec
     if layout.virtual:
         comm_extra["store"] = layout.spec
-    cfg_meta = {"compress": compressor.name if compressor else "none",
-                "faults": faults.spec if faults else "none",
-                "store": layout.spec,
-                "robust": robust.spec if robust else "none"}
+    cfg_meta = args.to_meta()
 
     start, _ = _restore_state(state, args, expect=cfg_meta)
     if start:
@@ -401,170 +395,15 @@ def run_engine(cfg, strategy, args):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--reduced", action="store_true",
-                    help="2-layer smoke variant (CPU)")
-    ap.add_argument("--strategy", default="feddeper",
-                    choices=sorted(STRATEGIES))
-    ap.add_argument("--clients", type=int, default=2)
-    ap.add_argument("--tau", type=int, default=4)
-    ap.add_argument("--rounds", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=2, help="per-client b")
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--eta", type=float, default=0.05)
-    ap.add_argument("--rho", type=float, default=0.01)
-    ap.add_argument("--lam", type=float, default=0.5)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    # buffered-async regime (core/async_rounds.py)
-    ap.add_argument("--regime", default="datacenter",
-                    choices=("datacenter", "async"))
-    # cohort-engine placement (core/engine.py); None = legacy fixed-cohort
-    # datacenter step
-    ap.add_argument("--placement", default=None, choices=("vmap", "mesh"),
-                    help="cohort placement (core/engine.py): 'vmap' "
-                         "single-device, 'mesh' cohort + stores over the "
-                         "client axis of all local devices.  Sync regime: "
-                         "routes through the cohort engine instead of the "
-                         "legacy fixed-cohort step.  --regime async: "
-                         "'mesh' pads dispatch cohorts onto the client "
-                         "axis and lowers the staleness-weighted "
-                         "aggregate to one psum")
-    ap.add_argument("--sampled", type=int, default=None,
-                    help="engine placement: clients sampled per round "
-                         "(default: all; mesh needs it divisible by the "
-                         "client-axis size)")
-    ap.add_argument("--block-rounds", type=int, default=None,
-                    help="engine placement: rounds per scan-compiled "
-                         "block (one jitted lax.scan, one host sync and "
-                         "one donation handoff per block); eval and "
-                         "checkpoints fire at block boundaries")
-    ap.add_argument("--concurrent", type=int, default=4,
-                    help="async: clients training simultaneously")
-    ap.add_argument("--buffer", type=int, default=2,
-                    help="async: uploads per aggregation")
-    ap.add_argument("--alpha", type=float, default=0.5,
-                    help="async: staleness discount exponent")
-    ap.add_argument("--delay", type=float, default=5.0,
-                    help="async: mean client delay (0 = no stragglers)")
-    ap.add_argument("--delay-dist", default="lognormal",
-                    choices=("constant", "uniform", "lognormal"))
-    ap.add_argument("--delay-sigma", type=float, default=1.0,
-                    help="async: lognormal delay shape (straggler "
-                         "heaviness); only used with "
-                         "--delay-dist lognormal")
-    ap.add_argument("--per-client", type=int, default=64,
-                    help="async/--placement: LM sequences materialized "
-                         "per client")
-    # client-store layout (repro.core.store); engine placements + async
-    ap.add_argument("--store", default="dense",
-                    help="client-store layout: dense | virtual[:host|"
-                         ":recon|:shard[:DIR]] -- 'dense' keeps full "
-                         "(n_clients, ...) stores on device; 'virtual' "
-                         "keeps only the sampled cohort's rows on device "
-                         "against a host / reconstructible / "
-                         "checkpoint-shard backing tier (O(cohort) "
-                         "device memory, bitwise-identical trajectory)")
-    # uplink compression (repro.comm); engine placements + async regime
-    ap.add_argument("--compress", default="none",
-                    help="uplink compressor: none | identity | q8 | fp8 "
-                         "| topk:R (keep-ratio R in [0,1], e.g. "
-                         "topk:0.1); 'none' is trace-identical to the "
-                         "pre-comm engine")
-    ap.add_argument("--bandwidth", type=float, default=0.0,
-                    help="async: uplink bytes per simulated-time unit; "
-                         "deliveries pay payload_bytes/bandwidth extra "
-                         "(0 = no bandwidth model)")
-    # fault injection + screening (repro.faults); engine placements, and
-    # deadline-only faults on the async regime
-    ap.add_argument("--faults", default="none",
-                    help="fault spec: none | drop:P,corrupt:P[,mode:M,"
-                         "scale:S,bitflip:F,z:Z,deadline:T] -- "
-                         "per-client per-round dropouts / corrupted "
-                         f"uploads (M in {'|'.join(CORRUPT_MODES)}; the "
-                         "stealth modes alie/collude/ipflip also take "
-                         "the shorthand alie:P etc. and strength z:Z), "
-                         "all derived deterministically from the round "
-                         "rng; deadline:T is async-only (dispatches "
-                         "finishing after T sim-time units never "
-                         "deliver)")
-    ap.add_argument("--robust", default="none",
-                    help="Byzantine-robust aggregation (repro.robust): "
-                         f"none | {' | '.join(ROBUST_MODES)} -- "
-                         "trimmed:F per-coordinate trimmed mean (trim "
-                         "fraction F per tail), median, krum:F "
-                         "keep-closest-to-the-pack filtering, "
-                         "bucket:B[,inner:median|trimmed] bucketed "
-                         "robust mean (B buckets ride the round's "
-                         "single psum); 'none' is trace-identical to "
-                         "the plain mean (engine placements only)")
-    ap.add_argument("--clip-norm", type=float, default=0.0,
-                    help="server-side upload-norm clip: uploads with "
-                         "l2 norm above C are scaled down inside the "
-                         "aggregation weights (0 = off; engine "
-                         "placements only)")
-    ap.add_argument("--max-retries", type=int, default=3,
-                    help="crash-safe recovery: consecutive rollback+"
-                         "reseed retries of a round/block that left the "
-                         "global model non-finite before giving up")
-    args = ap.parse_args(argv)
+    """CLI entry: the full flag surface is ``configs.run.RunSpec`` --
+    one field per flag, ``--config run.json`` accepted alongside flags
+    (explicit flags override the file), cross-flag guard rails in
+    ``RunSpec.validate``."""
+    args = RunSpec.from_args(argv).validate()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    kw = dict(eta=args.eta)
-    if args.strategy == "feddeper":
-        kw.update(rho=args.rho, lam=args.lam)
-    strategy = STRATEGIES[args.strategy](**kw)
+    cfg = args.arch_config()
+    strategy = args.make_strategy()
 
-    if args.block_rounds is not None and args.block_rounds < 1:
-        raise SystemExit("--block-rounds must be >= 1")
-    if args.block_rounds and not args.placement:
-        raise SystemExit("--block-rounds drives the cohort engine: pass "
-                         "--placement {vmap,mesh} (the async regime's "
-                         "sim-time advance is host-side and cannot be "
-                         "scanned)")
-    if args.compress != "none" and args.regime != "async" \
-            and not args.placement:
-        raise SystemExit("--compress rides the comm-aware paths: pass "
-                         "--placement {vmap,mesh} or --regime async "
-                         "(the legacy fixed-cohort datacenter step has "
-                         "no uplink seam)")
-    if args.store != "dense" and args.regime != "async" \
-            and not args.placement:
-        raise SystemExit("--store virtual rides the cohort-engine store "
-                         "seam: pass --placement {vmap,mesh} or --regime "
-                         "async (the legacy fixed-cohort datacenter step "
-                         "holds its client store inline)")
-    if args.bandwidth and args.regime != "async":
-        raise SystemExit("--bandwidth prices the simulated async uplink "
-                         "queue: pass --regime async (the synchronous "
-                         "regimes have no simulated clock; previously "
-                         "the flag was silently ignored)")
-    if (args.faults != "none" or args.clip_norm) \
-            and args.regime != "async" and not args.placement:
-        raise SystemExit("--faults/--clip-norm ride the fault-aware "
-                         "paths: pass --placement {vmap,mesh} or "
-                         "--regime async (the legacy fixed-cohort "
-                         "datacenter step has no screening seam)")
-    if args.robust != "none" and args.regime == "async":
-        raise SystemExit("--robust reduces one synchronous cohort's "
-                         "upload stack: the async regime's staleness-"
-                         "discounted buffer aggregates incrementally and "
-                         "has no robust seam (run --regime datacenter)")
-    if args.robust != "none" and not args.placement:
-        raise SystemExit("--robust rides the cohort engine's aggregate "
-                         "seam: pass --placement {vmap,mesh} (the legacy "
-                         "fixed-cohort datacenter step has no mean_fn "
-                         "seam)")
-    if args.clip_norm and args.regime == "async":
-        raise SystemExit("--clip-norm screens synchronous cohort uploads "
-                         "inside the weighted mean: the async regime's "
-                         "staleness-discounted buffer has no per-lane "
-                         "weight vector (only --faults deadline:T "
-                         "applies there)")
     if args.regime == "async":
         return run_async(cfg, strategy, args)
     if args.placement:
@@ -618,6 +457,7 @@ def main(argv=None):
         save_checkpoint(args.ckpt_dir, args.rounds,
                         (x, client_state, server_state))
     return 0
+
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ TPU-native adaptation: tiny cache, MXU-heavy score computation.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -132,7 +133,8 @@ def decode_attention_seq_sharded(q, k_cache, v_cache, *, valid_len,
 
 def decode_attention(q, k_cache, v_cache, *, valid_len,
                      cap: Optional[float] = None):
-    """q: (B,1,H,Dq), caches (B,L,K,D*); ``valid_len`` scalar = #valid slots."""
+    """q: (B,1,H,Dq), caches (B,L,K,D*); ``valid_len`` = #valid slots --
+    a scalar, or a (B,) vector of per-row live lengths (mixed batch)."""
     B, _, H, Dq = q.shape
     _, L, K, Dv = v_cache.shape
     G = H // K
@@ -140,7 +142,10 @@ def decode_attention(q, k_cache, v_cache, *, valid_len,
     qh = q.reshape(B, K, G, Dq).astype(jnp.float32)
     s = jnp.einsum("bkgd,bjkd->bkgj", qh, k_cache.astype(jnp.float32)) * scale
     s = softcap(s, cap)
-    mask = jnp.arange(L)[None, None, None, :] < valid_len
+    valid = jnp.asarray(valid_len)
+    if valid.ndim == 1:
+        valid = valid.reshape(-1, 1, 1, 1)
+    mask = jnp.arange(L)[None, None, None, :] < valid
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
@@ -235,7 +240,7 @@ def gqa_cache_spec(cfg, spec, batch: int, max_len: int, dtype):
 
 
 def apply_gqa(cfg, spec, params, x, *, positions, mode, cache=None, pos=None,
-              causal=True, seq_shard=None):
+              causal=True, seq_shard=None, use_pallas=False):
     """Self-attention.  Returns (out, new_cache)."""
     B, S, _ = x.shape
     if mode in ("train", "prefill"):
@@ -260,10 +265,12 @@ def apply_gqa(cfg, spec, params, x, *, positions, mode, cache=None, pos=None,
                         cache.v, v.astype(cache.v.dtype), 0, axis=1))
         return x_out(cfg, params, out, B, S), new_cache
 
-    # decode: one token at global position ``pos`` (scalar int32)
+    # decode: one token at global position ``pos`` -- a scalar int32, or
+    # a (B,) vector of per-row positions (the serve engine's slot batch)
     q, k, v = _proj_qkv(cfg, params, x, x,
                         rope_q_pos=positions, rope_k_pos=positions)
     L = cache.k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
     slot = pos % L if spec.window else pos
     if seq_shard is not None and not spec.window:
         # cache update happens inside the shard_map (owner-local DUS);
@@ -281,13 +288,23 @@ def apply_gqa(cfg, spec, params, x, *, positions, mode, cache=None, pos=None,
         kc = jax.lax.with_sharding_constraint(kc, cspec)
         vc = jax.lax.with_sharding_constraint(vc, cspec)
         return x_out(cfg, params, out, B, 1), KVCache(kc, vc)
-    kc = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k.astype(cache.k.dtype), slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v.astype(cache.v.dtype), slot, axis=1)
+    if pos.ndim == 1:
+        dus = jax.vmap(functools.partial(
+            jax.lax.dynamic_update_slice_in_dim, axis=0))
+        kc = dus(cache.k, k.astype(cache.k.dtype), slot)
+        vc = dus(cache.v, v.astype(cache.v.dtype), slot)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), slot, axis=1)
     valid = jnp.minimum(pos + 1, L)
-    out = decode_attention(q, kc, vc, valid_len=valid,
-                           cap=cfg.attn_softcap)
+    if use_pallas:
+        from repro.kernels.ops import flash_decode
+        out = flash_decode(q, kc, vc, lens=valid, cap=cfg.attn_softcap)
+    else:
+        out = decode_attention(q, kc, vc, valid_len=valid,
+                               cap=cfg.attn_softcap)
     return x_out(cfg, params, out, B, 1), KVCache(kc, vc)
 
 
@@ -370,7 +387,7 @@ def mla_cache_spec(cfg, batch: int, max_len: int, dtype):
 
 
 def apply_mla(cfg, spec, params, x, *, positions, mode, cache=None, pos=None,
-              seq_shard=None):
+              seq_shard=None, use_pallas=False):
     B, S, _ = x.shape
     H = cfg.num_heads
     r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
@@ -398,13 +415,21 @@ def apply_mla(cfg, spec, params, x, *, positions, mode, cache=None, pos=None,
                     cache.krope, krope.astype(cache.krope.dtype), 0, axis=1))
         return x_out(cfg, params, out, B, S), new_cache
 
-    # decode: absorbed form, scores computed in latent space
+    # decode: absorbed form, scores computed in latent space.  ``pos`` is
+    # a scalar int32 or a (B,) vector of per-row positions.
     q_nope, q_rope = _mla_q(cfg, params, x, positions)  # (B,1,H,dn),(B,1,H,dr)
     ckv_t, krope_t = _mla_latent(cfg, params, x, positions)
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache.ckv, ckv_t.astype(cache.ckv.dtype), pos, axis=1)
-    krope = jax.lax.dynamic_update_slice_in_dim(
-        cache.krope, krope_t.astype(cache.krope.dtype), pos, axis=1)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        dus = jax.vmap(functools.partial(
+            jax.lax.dynamic_update_slice_in_dim, axis=0))
+        ckv = dus(cache.ckv, ckv_t.astype(cache.ckv.dtype), pos)
+        krope = dus(cache.krope, krope_t.astype(cache.krope.dtype), pos)
+    else:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache.ckv, ckv_t.astype(cache.ckv.dtype), pos, axis=1)
+        krope = jax.lax.dynamic_update_slice_in_dim(
+            cache.krope, krope_t.astype(cache.krope.dtype), pos, axis=1)
     wuk = params["wuk"].reshape(r, H, dn)
     # absorb W_uk into the query:  q_lat[h] = q_nope[h] @ W_uk[:,h,:]^T
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -414,6 +439,20 @@ def apply_mla(cfg, spec, params, x, *, positions, mode, cache=None, pos=None,
         o_lat = _mla_shard_map_decode(q_lat, q_rope, ckv, krope, pos + 1,
                                       scale=scale, cap=cfg.attn_softcap,
                                       seq_shard=seq_shard)
+    elif use_pallas:
+        # latent decode IS a GQA decode with one kv head: scores are
+        # [q_lat | q_rope] . [ckv | krope], values are ckv -- so the
+        # flash kernel applies after a concat.  Fold the latent-space
+        # scale into q (the kernel scales by head_dim^-0.5 itself).
+        from repro.kernels.ops import flash_decode
+        q_cat = jnp.concatenate(
+            [q_lat, q_rope.astype(jnp.float32)], axis=-1)
+        q_cat = q_cat * (scale * (r + dr) ** 0.5)
+        k_cat = jnp.concatenate(
+            [ckv, krope], axis=-1).astype(jnp.float32)[:, :, None, :]
+        o_lat = flash_decode(q_cat, k_cat,
+                             ckv.astype(jnp.float32)[:, :, None, :],
+                             lens=pos + 1, cap=cfg.attn_softcap)
     else:
         o_lat = _mla_decode_core(q_lat, q_rope, ckv, krope, pos + 1,
                                  scale=scale, cap=cfg.attn_softcap,
@@ -435,6 +474,9 @@ def _mla_decode_core(q_lat, q_rope, ckv, krope, valid, *, scale, cap,
     s = s * scale
     s = softcap(s, cap)
     offset = jax.lax.axis_index(axis) * L_loc if axis else 0
+    valid = jnp.asarray(valid)
+    if valid.ndim == 1:
+        valid = valid.reshape(-1, 1, 1, 1)
     mask = (offset + jnp.arange(L_loc))[None, None, None, :] < valid
     s = jnp.where(mask, s, NEG_INF)
     if axis is None:

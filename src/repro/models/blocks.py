@@ -96,12 +96,14 @@ def apply_layer(cfg, spec, params, x, *, positions, mode, cache=None,
             h, mc = attn.apply_mla(cfg, spec, params["mixer"], h,
                                    positions=positions, mode=mode,
                                    cache=mixer_cache, pos=pos,
-                                   seq_shard=seq_shard)
+                                   seq_shard=seq_shard,
+                                   use_pallas=use_pallas)
         else:
             h, mc = attn.apply_gqa(cfg, spec, params["mixer"], h,
                                    positions=positions, mode=mode,
                                    cache=mixer_cache, pos=pos, causal=causal,
-                                   seq_shard=seq_shard)
+                                   seq_shard=seq_shard,
+                                   use_pallas=use_pallas)
     elif spec.kind == "mamba":
         h, mc = ssm_mod.apply_mamba(cfg, params["mixer"], h, mode=mode,
                                     cache=mixer_cache)

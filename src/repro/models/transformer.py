@@ -314,8 +314,13 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32,
 
 
 def prefill(cfg, params, batch, cache, *, chunkwise=True, use_pallas=False,
-            unroll=1):
-    """Populate caches from a prompt.  Returns (last_logits, cache)."""
+            unroll=1, lens=None):
+    """Populate caches from a prompt.  Returns (last_logits, cache).
+
+    ``lens``: optional (B,) per-row prompt lengths for right-padded mixed
+    batches -- logits are gathered at each row's last *real* token (cache
+    rows past a row's length hold pad garbage, but decode masks them via
+    per-row valid lengths and overwrites them as the row generates)."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     x = _embed_tokens(cfg, params, tokens)
@@ -333,23 +338,30 @@ def prefill(cfg, params, batch, cache, *, chunkwise=True, use_pallas=False,
                                   mode="prefill", cache=cache, memory=memory,
                                   chunkwise=chunkwise, use_pallas=use_pallas,
                                   unroll=unroll)
-    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if lens is not None:
+        idx = jnp.asarray(lens, jnp.int32).reshape(-1, 1, 1) - 1 + n_front
+        x = jnp.take_along_axis(x, jnp.clip(idx, 0, x.shape[1] - 1), axis=1)
+    else:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = softcap(_lm_logits(cfg, params, x), cfg.logit_softcap)
     return logits, new_cache
 
 
 def decode_step(cfg, params, cache, tokens, pos, *, chunkwise=True,
-                unroll=1, seq_shard=None):
-    """tokens: (B,1) int32, pos: scalar int32 global position of the token.
+                unroll=1, seq_shard=None, use_pallas=False):
+    """tokens: (B,1) int32, pos: global position of each token -- a
+    scalar int32, or a (B,) vector for mixed-length slot batches.
 
     Returns (logits (B,1,V), new_cache)."""
     B = tokens.shape[0]
     x = _embed_tokens(cfg, params, tokens)
-    positions = jnp.broadcast_to(pos, (B, 1))
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     x, new_cache, _ = run_decoder(cfg, params, x, positions=positions,
                                   mode="decode", cache=cache, pos=pos,
                                   chunkwise=chunkwise, unroll=unroll,
-                                  seq_shard=seq_shard)
+                                  seq_shard=seq_shard, use_pallas=use_pallas)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = softcap(_lm_logits(cfg, params, x), cfg.logit_softcap)
     return logits, new_cache

@@ -141,29 +141,26 @@ def make_robust(spec) -> RobustConfig | None:
     spec = spec.strip()
     if spec in ("", "none"):
         return None
-    toks = spec.split(",")
-    mode, _, val = toks[0].partition(":")
-    if mode not in ROBUST_MODES:
-        raise ValueError(
-            f"--robust: unknown mode {mode!r} "
-            f"(want none|{'|'.join(ROBUST_MODES)})")
+    from repro.configs.specs import cast_value, parse_spec
+    p = parse_spec(
+        spec, flag="--robust",
+        heads=("none",) + ROBUST_MODES,
+        arity={"trimmed": (0, 1), "krum": (0, 1), "bucket": (0, 1)},
+        keys={"bucket": ("inner", "frac")},
+        head_label="mode",
+        key_hint="only bucket mode takes inner:MODE and frac:F")
+    if p.head == "none":
+        return None
     kw = {}
-    if val:
-        if mode in ("trimmed", "krum"):
-            kw["frac"] = float(val)
-        elif mode == "bucket":
-            kw["buckets"] = int(val)
-        else:
-            raise ValueError(
-                f"--robust: {mode} takes no parameter, got {val!r}")
-    for tok in toks[1:]:
-        k, _, v = tok.partition(":")
-        if mode != "bucket" or k not in ("inner", "frac"):
-            raise ValueError(
-                f"--robust: unknown key {k!r} in {spec!r} "
-                "(only bucket mode takes inner:MODE and frac:F)")
-        kw[k] = v if k == "inner" else float(v)
-    return RobustConfig(mode, **kw)
+    if p.args:
+        if p.head in ("trimmed", "krum"):
+            kw["frac"] = cast_value("--robust", p.head, p.args[0], float)
+        else:  # bucket
+            kw["buckets"] = cast_value("--robust", p.head, p.args[0], int)
+    for k, v in p.kv:
+        kw[k] = v if k == "inner" else \
+            cast_value("--robust", k, v, float)
+    return RobustConfig(p.head, **kw)
 
 
 def trim_count(frac: float, m: int) -> int:

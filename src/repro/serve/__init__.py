@@ -1,0 +1,11 @@
+"""Production serving tier: weight sources, slot KV caches, a continuous
+-batching engine on the Pallas flash-decode kernel, and a request
+simulator (DESIGN.md §13).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \\
+      --ckpt-dir runs/ckpt --gen-tokens 32
+"""
+from repro.serve.cache import init_slot_cache, read_slot, write_slot  # noqa: F401
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.simulator import SimConfig, simulate  # noqa: F401
+from repro.serve.weights import WeightSource, make_weight_source  # noqa: F401

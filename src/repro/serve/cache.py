@@ -1,0 +1,57 @@
+"""Slot KV caches: one resident batch cache, per-slot insert/extract.
+
+``models.init_cache`` trees have two top-level groups with different
+batch axes:
+
+  * ``prefix``  -- per-layer caches, leaves (B, L, K, D): batch axis 0;
+  * ``pattern`` -- lax.scan-stacked caches, leaves (R, B, L, K, D):
+    batch axis 1 (the repeat dim leads).
+
+The engine keeps ONE (slots, max_len, ...) cache alive across requests
+and splices a freshly-prefilled single-row cache into a slot when a new
+request is admitted (continuous batching: other slots keep decoding,
+their rows are untouched).  All three helpers are pure pytree ops, so
+they fuse into the callers' jitted steps.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def init_slot_cache(cfg, slots: int, max_len: int, dtype=jnp.float32):
+    from repro.models import init_cache
+    return init_cache(cfg, slots, max_len, dtype)
+
+
+def _splice(axis, dst, src, slot):
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, src.astype(dst.dtype), slot, axis=axis)
+
+
+def write_slot(cache: Pytree, row: Pytree, slot) -> Pytree:
+    """Insert a batch=1 cache ``row`` into batch position ``slot``."""
+    return {
+        "prefix": jax.tree.map(
+            lambda c, r: _splice(0, c, r, slot),
+            cache["prefix"], row["prefix"]),
+        "pattern": jax.tree.map(
+            lambda c, r: _splice(1, c, r, slot),
+            cache["pattern"], row["pattern"]),
+    }
+
+
+def read_slot(cache: Pytree, slot) -> Pytree:
+    """Extract batch position ``slot`` as a batch=1 cache row."""
+    return {
+        "prefix": jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=0),
+            cache["prefix"]),
+        "pattern": jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+            cache["pattern"]),
+    }

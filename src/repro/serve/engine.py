@@ -1,0 +1,139 @@
+"""Continuous-batching greedy-decode engine on the flash-decode kernel.
+
+One resident (slots, max_len) KV cache serves a rolling population of
+requests: admitting a request prefills its prompt into a batch=1 row
+cache and splices it into a free slot while the other slots keep their
+state; decoding runs in jitted ``lax.scan`` blocks of ``block_tokens``
+steps with ONE host sync per block (the emitted-token fetch), and the
+cache buffer is donated through both the admit and the block step, so
+the engine owns exactly one cache allocation for its whole life.
+
+Per-row positions do the mixed-batch work: every slot carries its own
+live length, the decode step writes each row's KV at its own ``lens[b]``
+and masks attention at ``lens[b]+1`` (``kernels.ops.flash_decode``).
+Inactive slots re-feed their last token with a frozen length; their
+output is discarded and their cache row is fully overwritten on the next
+admit, so they cost FLOPs but never correctness.
+
+Compilation contract (pinned by tests/test_serve.py): the block step
+compiles ONCE per engine regardless of how many blocks run, and admit
+compiles once per prompt bucket (prompts pad to power-of-two buckets).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.serve.cache import init_slot_cache, write_slot
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 128,
+                 block_tokens: int = 16, use_pallas: bool = True,
+                 chunkwise: bool = True, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.block_tokens = block_tokens
+        self.use_pallas = use_pallas
+        self.chunkwise = chunkwise
+        self.cache = init_slot_cache(cfg, slots, max_len, cache_dtype)
+        self.lens = jnp.zeros((slots,), jnp.int32)
+        self.tok = jnp.zeros((slots, 1), jnp.int32)
+        self.active = np.zeros((slots,), bool)
+        self._cache_dtype = cache_dtype
+        self._prefill = jax.jit(self._prefill_fn)
+        self._admit = jax.jit(self._admit_fn, donate_argnums=(0,))
+        self._block = jax.jit(self._block_fn, donate_argnums=(1,))
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _prefill_fn(self, params, tokens, lens):
+        """batch=1 prompt -> (first generated token (1,), row cache)."""
+        row = init_slot_cache(self.cfg, 1, self.max_len, self._cache_dtype)
+        logits, row = transformer.prefill(
+            self.cfg, params, {"tokens": tokens}, row,
+            chunkwise=self.chunkwise, use_pallas=self.use_pallas, lens=lens)
+        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), row
+
+    def _admit_fn(self, cache, row, slot, lens, tok, active, n, first):
+        cache = write_slot(cache, row, slot)
+        return (cache, lens.at[slot].set(n),
+                tok.at[slot, 0].set(first[0]), active.at[slot].set(True))
+
+    def _block_fn(self, params, cache, tok, lens, active):
+        def step(carry, _):
+            cache, tok, lens = carry
+            logits, cache = transformer.decode_step(
+                self.cfg, params, cache, tok, lens,
+                chunkwise=self.chunkwise, use_pallas=self.use_pallas)
+            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, tok[:, 0]).reshape(-1, 1)
+            lens = lens + active.astype(jnp.int32)
+            return (cache, nxt, lens), nxt[:, 0]
+
+        (cache, tok, lens), toks = jax.lax.scan(
+            step, (cache, tok, lens), None, length=self.block_tokens)
+        return cache, tok, lens, toks  # toks: (block_tokens, slots)
+
+    # -- host API -----------------------------------------------------------
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return max(8, 1 << (n - 1).bit_length())
+
+    def admit(self, slot: int, prompt) -> int:
+        """Prefill ``prompt`` (1-D int tokens) into ``slot``.  Returns
+        the first generated token (greedy, from the prefill logits) --
+        the ONLY per-admit host sync."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n = prompt.shape[0]
+        if not (0 < n <= self.max_len):
+            raise ValueError(f"prompt length {n} vs max_len {self.max_len}")
+        P = min(self._bucket(n), self.max_len)
+        toks = np.zeros((1, P), np.int32)
+        toks[0, :n] = prompt
+        first, row = self._prefill(self.params, jnp.asarray(toks),
+                                   jnp.full((1,), n, jnp.int32))
+        # device-side active mask mirrors the host one lazily: it is only
+        # read inside _block_fn, which receives it as an argument
+        act = jnp.asarray(self.active)
+        self.cache, self.lens, self.tok, act = self._admit(
+            self.cache, row, slot, self.lens, self.tok, act,
+            jnp.int32(n), first)
+        self.active[slot] = True
+        return int(first[0])
+
+    def release(self, slot: int) -> None:
+        self.active[slot] = False
+
+    def run_block(self) -> np.ndarray:
+        """Advance every slot ``block_tokens`` greedy steps.  Returns the
+        emitted tokens (block_tokens, slots) -- one host sync."""
+        self.cache, self.tok, self.lens, toks = self._block(
+            self.params, self.cache, self.tok, self.lens,
+            jnp.asarray(self.active))
+        return np.asarray(toks)
+
+    def block_compile_count(self) -> int:
+        return self._block._cache_size()
+
+    def generate(self, prompts, gen_tokens: int) -> np.ndarray:
+        """Batch convenience: greedy-decode ``gen_tokens`` tokens for each
+        prompt (len(prompts) <= slots).  Returns (B, gen_tokens) int32."""
+        B = len(prompts)
+        if B > self.slots:
+            raise ValueError(f"{B} prompts > {self.slots} slots")
+        firsts = [self.admit(i, prompts[i]) for i in range(B)]
+        cols = [np.asarray(firsts, np.int32).reshape(B, 1)]
+        need = gen_tokens - 1
+        while need > 0:
+            toks = self.run_block()  # (N, slots)
+            cols.append(toks[:min(need, toks.shape[0]), :B].T)
+            need -= toks.shape[0]
+        for i in range(B):
+            self.release(i)
+        return np.concatenate(cols, axis=1)[:, :gen_tokens]

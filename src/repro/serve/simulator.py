@@ -1,0 +1,143 @@
+"""Batched request simulator: concurrent users against a ServeEngine.
+
+Requests arrive on a Poisson-like schedule (the async tier's delay
+distributions: constant / uniform / mean-normalized lognormal, drawn
+once from a ``SeedSequence`` so runs are reproducible), carry mixed
+prompt lengths (cycled from ``prompt_lens``), and are admitted into free
+engine slots as they arrive -- continuous batching: a finishing request
+frees its slot mid-flight and the next arrival reuses it while the other
+slots keep decoding.
+
+The clock is hybrid wall/sim: by default each admit/block charges its
+MEASURED wall seconds (real latencies); with ``time_unit > 0`` every
+token instead costs exactly ``time_unit`` simulated seconds, making the
+whole trace deterministic (CI smoke).  When all slots idle the clock
+fast-forwards to the next arrival instead of sleeping.
+
+``simulate`` returns the per-request records plus the aggregate numbers
+``BENCH_serve.json`` tracks: tokens/s, p50/p99 latency, generated count.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    requests: int = 8
+    prompt_lens: Tuple[int, ...] = (4, 8, 12, 16)
+    gen_tokens: int = 32
+    delay: float = 0.0       # mean inter-arrival gap (seconds); 0 = burst
+    delay_dist: str = "lognormal"  # 'constant' | 'uniform' | 'lognormal'
+    delay_sigma: float = 1.0
+    seed: int = 0
+    time_unit: float = 0.0   # >0: seconds per token, deterministic clock
+
+    def arrivals(self) -> np.ndarray:
+        """Cumulative arrival times, one per request (seconds)."""
+        if self.delay <= 0:
+            return np.zeros(self.requests)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0x5E83]))
+        if self.delay_dist == "constant":
+            gaps = np.full(self.requests, float(self.delay))
+        elif self.delay_dist == "uniform":
+            gaps = rng.uniform(0.0, 2.0 * self.delay, self.requests)
+        elif self.delay_dist == "lognormal":
+            gaps = self.delay * rng.lognormal(
+                -0.5 * self.delay_sigma ** 2, self.delay_sigma,
+                self.requests)
+        else:
+            raise ValueError(f"unknown delay_dist {self.delay_dist!r}")
+        return np.cumsum(gaps) - gaps[0]  # first request at t=0
+
+
+@dataclass
+class _Request:
+    rid: int
+    arrival: float
+    prompt: np.ndarray
+    started: float = -1.0
+    finished: float = -1.0
+    emitted: int = 0
+    tokens: list = field(default_factory=list)
+
+
+def simulate(engine, sim: SimConfig, *, vocab: Optional[int] = None):
+    """Run ``sim.requests`` requests through ``engine``; returns metrics."""
+    vocab = vocab or engine.cfg.vocab_size
+    rng = np.random.default_rng(np.random.SeedSequence([sim.seed, 0x9E0]))
+    arrivals = sim.arrivals()
+    pending = deque(
+        _Request(i, float(arrivals[i]),
+                 rng.integers(0, vocab,
+                              sim.prompt_lens[i % len(sim.prompt_lens)],
+                              dtype=np.int64).astype(np.int32))
+        for i in range(sim.requests))
+    in_slot: dict = {}
+    free = list(range(engine.slots))
+    clock = 0.0
+    tokens_total = 0
+    done = []
+
+    def charge(wall_s: float, tokens: int) -> float:
+        return tokens * sim.time_unit if sim.time_unit > 0 else wall_s
+
+    while pending or in_slot:
+        # admit every arrived request that has a free slot
+        while free and pending and pending[0].arrival <= clock:
+            req = pending.popleft()
+            slot = free.pop(0)
+            t0 = time.perf_counter()
+            first = engine.admit(slot, req.prompt)
+            clock += charge(time.perf_counter() - t0, len(req.prompt) + 1)
+            req.started = clock
+            req.emitted = 1
+            req.tokens.append(first)
+            tokens_total += 1
+            in_slot[slot] = req
+            if req.emitted >= sim.gen_tokens:  # degenerate gen_tokens=1
+                req.finished = clock
+                engine.release(slot)
+                done.append(in_slot.pop(slot))
+                free.append(slot)
+        if not in_slot:
+            if pending:  # idle: fast-forward to the next arrival
+                clock = max(clock, pending[0].arrival)
+                continue
+            break
+        t0 = time.perf_counter()
+        toks = engine.run_block()  # (block_tokens, slots)
+        clock += charge(time.perf_counter() - t0, toks.shape[0])
+        for slot, req in list(in_slot.items()):
+            take = min(sim.gen_tokens - req.emitted, toks.shape[0])
+            req.tokens.extend(int(t) for t in toks[:take, slot])
+            req.emitted += take
+            tokens_total += take
+            if req.emitted >= sim.gen_tokens:
+                req.finished = clock
+                engine.release(slot)
+                done.append(in_slot.pop(slot))
+                free.append(slot)
+
+    lat = np.array([r.finished - r.arrival for r in done])
+    total_s = max(clock, 1e-9)
+    return {
+        "requests": len(done),
+        "generated": int(tokens_total),
+        "total_s": float(total_s),
+        "tokens_per_s": float(tokens_total / total_s),
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "per_request": [
+            {"rid": r.rid, "arrival_s": round(r.arrival, 6),
+             "latency_s": round(r.finished - r.arrival, 6),
+             "prompt_len": int(r.prompt.shape[0]),
+             "generated": r.emitted}
+            for r in sorted(done, key=lambda r: r.rid)],
+    }

@@ -1,0 +1,158 @@
+"""Weight sources: where the served model's parameters come from.
+
+``make_weight_source`` parses the ``--weights`` mini-language (same
+``configs.specs`` machinery as ``--store``/``--compress``):
+
+    init[:SEED]        fresh ``init_model`` weights (smoke tests)
+    ckpt:DIR           member 0 (the dense global model) of the latest
+                       training checkpoint in DIR -- the train->serve
+                       handoff; works for every ``--store`` layout
+                       because the global model is always dense
+    q8:<source>        int8-quantize the inner source's weights at load
+    fp8:<source>       float8_e4m3fn-quantize the inner source's weights
+
+Quantized sources reuse the comm tier's kernels (``kernels/quantize.py``
+via ``kernels.ops``): each leaf is normalized by its own ``amax/qmax``
+scale, packed into one ``(rows, LANES)`` buffer, and rounded with the
+SAME pack kernel the q8 compressor uses -- with the uniform draw pinned
+to 0.5, i.e. deterministic round-half-up, so serving is reproducible.
+The resident form is the int8 buffer + per-leaf f32 scales
+(``resident_bytes`` counts exactly that); ``load`` dequantizes back to
+the leaf dtypes for compute.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.specs import SpecError, cast_value, parse_spec
+
+Pytree = Any
+
+
+class WeightSource:
+    """A named recipe producing the served parameter tree."""
+
+    name: str = "?"
+
+    def load(self, cfg) -> Pytree:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def resident_bytes(self, cfg) -> int:
+        """Bytes the source keeps resident to be able to serve."""
+        shapes = _param_shapes(cfg)
+        return sum(math.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(shapes))
+
+
+def _param_shapes(cfg):
+    from repro.models.transformer import param_shapes
+    return param_shapes(cfg)
+
+
+@dataclass(frozen=True)
+class InitSource(WeightSource):
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"init:{self.seed}"
+
+    def load(self, cfg) -> Pytree:
+        from repro.models import init_model
+        return init_model(cfg, jax.random.PRNGKey(self.seed))
+
+
+@dataclass(frozen=True)
+class CheckpointSource(WeightSource):
+    directory: str
+
+    @property
+    def name(self) -> str:
+        return f"ckpt:{self.directory}"
+
+    def load(self, cfg) -> Pytree:
+        from repro.checkpoint import latest_checkpoint, restore_subtree
+        from repro.models.transformer import param_shapes
+        path = latest_checkpoint(self.directory)
+        if path is None:
+            raise SystemExit(
+                f"--weights {self.name}: no checkpoint found in "
+                f"{self.directory!r} (expected ckpt_XXXXXXXX.npz from "
+                "repro.launch.train --ckpt-dir)")
+        params, _ = restore_subtree(path, param_shapes(cfg), index=0)
+        return params
+
+
+@dataclass(frozen=True)
+class QuantizedSource(WeightSource):
+    """Serve the inner source's weights through the comm tier's
+    quantizer: per-leaf amax/qmax scales, one packed pack-kernel launch,
+    deterministic round-half-up (rand pinned to 0.5)."""
+
+    inner: WeightSource
+    mode: str = "int8"  # 'int8' | 'fp8'
+
+    @property
+    def name(self) -> str:
+        tag = "q8" if self.mode == "int8" else "fp8"
+        return f"{tag}:{self.inner.name}"
+
+    def _quantize(self, params):
+        from repro.kernels.ops import dequantize, quantize_stochastic
+        from repro.kernels.tiling import TreeFlattener
+        qmax = 127.0 if self.mode == "int8" else 448.0  # e4m3fn max
+        f32 = jax.tree.map(lambda t: t.astype(jnp.float32), params)
+        scales = jax.tree.map(
+            lambda t: jnp.maximum(jnp.max(jnp.abs(t)), 1e-30) / qmax, f32)
+        normed = jax.tree.map(jnp.divide, f32, scales)
+        fl = TreeFlattener(f32)
+        buf = fl.flatten(normed)
+        if self.mode == "int8":
+            packed = quantize_stochastic(buf, jnp.full_like(buf, 0.5))
+            deq = dequantize(packed)
+        else:
+            packed = buf.astype(jnp.float8_e4m3fn)
+            deq = packed.astype(jnp.float32)
+        return packed, scales, fl, deq
+
+    def load(self, cfg) -> Pytree:
+        params = self.inner.load(cfg)
+        _, scales, fl, deq = self._quantize(params)
+        dense = jax.tree.map(jnp.multiply, fl.unflatten(deq), scales)
+        return jax.tree.map(lambda d, p: d.astype(p.dtype), dense, params)
+
+    def resident_bytes(self, cfg) -> int:
+        shapes = _param_shapes(cfg)
+        leaves = jax.tree.leaves(shapes)
+        n = sum(math.prod(l.shape) for l in leaves)
+        return n * 1 + len(leaves) * 4  # 1 byte/elem + f32 scale per leaf
+
+
+def make_weight_source(spec: Optional[str]) -> WeightSource:
+    """``init[:SEED] | ckpt:DIR | q8:<source> | fp8:<source>``."""
+    if spec is None or spec == "":
+        return InitSource(0)
+    parsed = parse_spec(
+        spec, flag="--weights",
+        heads=("init", "ckpt", "q8", "fp8"),
+        arity={"init": (0, 1), "ckpt": (1, 1), "q8": (0, 1), "fp8": (0, 1)},
+        greedy=("ckpt", "q8", "fp8"),
+        head_label="source",
+        head_hint="(grammar: init[:SEED] | ckpt:DIR | q8[:SRC] | "
+                  "fp8[:SRC])")
+    if parsed.head == "init":
+        seed = cast_value("--weights", "seed", parsed.args[0], int) \
+            if parsed.args else 0
+        return InitSource(seed)
+    if parsed.head == "ckpt":
+        return CheckpointSource(parsed.args[0])
+    inner = make_weight_source(parsed.args[0] if parsed.args else "init")
+    if isinstance(inner, QuantizedSource):
+        raise SpecError(
+            f"--weights: nested quantization {spec!r} is not supported")
+    return QuantizedSource(inner, "int8" if parsed.head == "q8" else "fp8")

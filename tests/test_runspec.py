@@ -1,0 +1,195 @@
+"""RunSpec/ServeSpec config API: CLI parity pins, JSON overlay,
+checkpoint metadata canonicalization, and the unified spec-string
+parser's uniform errors."""
+import json
+
+import pytest
+
+from repro.configs import RunSpec, ServeSpec
+from repro.configs.specs import SpecError, parse_spec
+
+
+# ---------------------------------------------------------------------------
+# RunSpec.from_args: CLI parity
+# ---------------------------------------------------------------------------
+
+def test_from_args_empty_is_defaults():
+    assert RunSpec.from_args([]) == RunSpec()
+
+
+# the exact argvs the system tests drive launch/train.py with -- pinned
+# so the RunSpec surface can never drift from the CLI the tests exercise
+_PINNED_ARGVS = [
+    (["--arch", "llama3.2-3b", "--reduced", "--clients", "2", "--tau",
+      "2", "--rounds", "3", "--batch", "2", "--seq", "32"],
+     dict(arch="llama3.2-3b", reduced=True, clients=2, tau=2, rounds=3,
+          batch=2, seq=32)),
+    (["--arch", "llama3.2-3b", "--reduced", "--regime", "async",
+      "--clients", "4", "--concurrent", "2", "--buffer", "2", "--delay",
+      "3", "--tau", "2", "--rounds", "3", "--batch", "2", "--seq", "32",
+      "--per-client", "8"],
+     dict(arch="llama3.2-3b", reduced=True, regime="async", clients=4,
+          concurrent=2, buffer=2, delay=3.0, tau=2, rounds=3, batch=2,
+          seq=32, per_client=8)),
+    (["--arch", "llama3.2-3b", "--reduced", "--placement", "vmap",
+      "--clients", "2", "--tau", "2", "--rounds", "1", "--batch", "2",
+      "--seq", "32", "--bandwidth", "1e6"],
+     dict(arch="llama3.2-3b", reduced=True, placement="vmap", clients=2,
+          tau=2, rounds=1, batch=2, seq=32, bandwidth=1e6)),
+    (["--placement", "mesh", "--store", "virtual:recon", "--compress",
+      "q8", "--faults", "drop:0.2", "--robust", "median",
+      "--block-rounds", "2", "--ckpt-dir", "/tmp/c", "--ckpt-every", "2"],
+     dict(placement="mesh", store="virtual:recon", compress="q8",
+          faults="drop:0.2", robust="median", block_rounds=2,
+          ckpt_dir="/tmp/c", ckpt_every=2)),
+]
+
+
+@pytest.mark.parametrize("argv,expect", _PINNED_ARGVS)
+def test_from_args_pins_cli_surface(argv, expect):
+    spec = RunSpec.from_args(argv)
+    assert spec == RunSpec().replace(**expect)
+
+
+def test_from_args_json_overlay(tmp_path):
+    """--config JSON is the base; explicit flags override field by
+    field; unpassed flags must NOT clobber the file's values."""
+    p = tmp_path / "run.json"
+    p.write_text(json.dumps({"arch": "llama3.2-3b", "reduced": True,
+                             "rounds": 40, "eta": 0.1,
+                             "store": "virtual:host"}))
+    spec = RunSpec.from_args(["--config", str(p), "--rounds", "7"])
+    assert spec.rounds == 7            # flag wins
+    assert spec.eta == 0.1             # file survives
+    assert spec.store == "virtual:host"
+    assert spec.reduced is True
+    assert spec.tau == RunSpec().tau   # untouched default
+
+
+def test_json_roundtrip_and_unknown_field(tmp_path):
+    spec = RunSpec(rounds=3, compress="topk:0.1", placement="vmap")
+    p = tmp_path / "s.json"
+    spec.to_json(str(p))
+    assert RunSpec.from_json(str(p)) == spec
+    p.write_text(json.dumps({"roundz": 3}))
+    with pytest.raises(SystemExit, match="unknown field"):
+        RunSpec.from_json(str(p))
+
+
+def test_to_meta_canonicalizes_through_factories():
+    """Two spellings of the same config produce the SAME checkpoint
+    metadata (resume compatibility goes through the factories, not
+    string equality)."""
+    a = RunSpec(faults="drop:0.2,corrupt:0", placement="vmap")
+    b = RunSpec(faults="drop:0.2", placement="vmap")
+    assert a.to_meta() == b.to_meta()
+    m = RunSpec().to_meta()
+    assert set(m) == {"compress", "faults", "store", "robust"}
+    assert m["compress"] == "none" and m["store"] == "dense"
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(bandwidth=1e6), "--regime async"),
+    (dict(robust="median"), "--placement"),
+    (dict(block_rounds=2), "--placement"),
+    (dict(robust="median", placement="mesh", regime="async"), "async"),
+    (dict(compress="q8"), "--placement"),
+    (dict(strategy="nope"), "unknown strategy"),
+    (dict(clip_norm=1.0, regime="async"), "clip-norm"),
+])
+def test_validate_guard_rails(kw, msg):
+    with pytest.raises(SystemExit, match=msg):
+        RunSpec(**kw).validate()
+
+
+def test_validate_passes_known_good():
+    RunSpec().validate()
+    RunSpec(placement="mesh", store="virtual:recon", compress="q8",
+            faults="drop:0.1", robust="median", block_rounds=2).validate()
+    RunSpec(regime="async", bandwidth=1e6, compress="fp8",
+            faults="deadline:9").validate()
+
+
+# ---------------------------------------------------------------------------
+# unified spec-string parser
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_uniform_errors():
+    """All four mini-languages share one lexer; its errors name the
+    flag, the offending token, and the vocabulary."""
+    with pytest.raises(SpecError, match=r"--store.*unknown.*'bogus'"):
+        parse_spec("bogus", flag="--store", heads=("dense", "virtual"),
+                   head_label="layout")
+    with pytest.raises(SpecError, match="empty spec"):
+        parse_spec("  ,", flag="--x", heads=("a",))
+    with pytest.raises(SpecError, match="at most 1"):
+        parse_spec("a:1:2", flag="--x", heads=("a",),
+                   arity={"a": (0, 1)})
+    with pytest.raises(SpecError, match="at least 1"):
+        parse_spec("a", flag="--x", heads=("a",), arity={"a": (1, 1)})
+    with pytest.raises(SpecError, match="unknown key"):
+        parse_spec("a,zz:1", flag="--x", heads=("a",), keys=("kk",))
+    # greedy heads keep colons in the last positional (paths)
+    p = parse_spec("shard:/tmp/a:b", flag="--x", heads=("shard",),
+                   arity={"shard": (1, 1)}, greedy=("shard",))
+    assert p.args == ("/tmp/a:b",)
+
+
+def test_factories_reject_bad_specs_uniformly():
+    """The real factories ride parse_spec: same error shape across
+    --store/--compress/--faults/--robust/--weights."""
+    from repro.comm import make_compressor
+    from repro.core import make_layout
+    from repro.faults import make_faults
+    from repro.robust import make_robust
+    from repro.serve import make_weight_source
+    for fn in (make_layout, make_compressor, make_faults, make_robust,
+               make_weight_source):
+        with pytest.raises(SpecError):
+            fn("definitely-not-a-head")
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec
+# ---------------------------------------------------------------------------
+
+def test_servespec_from_args_and_overlay(tmp_path):
+    assert ServeSpec.from_args([]) == ServeSpec()
+    spec = ServeSpec.from_args(
+        ["--arch", "llama3.2-3b", "--reduced", "--ckpt-dir", "/tmp/run1",
+         "--gen-tokens", "32", "--slots", "2", "--max-len", "64"])
+    assert spec == ServeSpec().replace(
+        arch="llama3.2-3b", reduced=True, ckpt_dir="/tmp/run1",
+        gen_tokens=32, slots=2, max_len=64)
+    p = tmp_path / "serve.json"
+    p.write_text(json.dumps({"weights": "q8", "slots": 2}))
+    spec = ServeSpec.from_args(["--config", str(p), "--slots", "8"])
+    assert spec.weights == "q8" and spec.slots == 8
+
+
+def test_servespec_resolve_weights_sugar():
+    assert ServeSpec().resolve_weights() == "init"
+    assert ServeSpec(ckpt_dir="/d").resolve_weights() == "ckpt:/d"
+    assert ServeSpec(weights="q8", ckpt_dir="/d").resolve_weights() \
+        == "q8:ckpt:/d"
+    assert ServeSpec(weights="fp8", ckpt_dir="/d").resolve_weights() \
+        == "fp8:ckpt:/d"
+    # explicit source wins over the sugar
+    assert ServeSpec(weights="init:5",
+                     ckpt_dir="/d").resolve_weights() == "init:5"
+
+
+def test_servespec_validate():
+    ServeSpec().validate()
+    with pytest.raises(SystemExit, match="--max-len"):
+        ServeSpec(prompt_len=100, gen_tokens=64, max_len=128).validate()
+    with pytest.raises(SystemExit, match="--slots"):
+        ServeSpec(slots=0).validate()
+    with pytest.raises(SystemExit, match="--prompt-lens"):
+        ServeSpec(simulate=True, prompt_lens="4,x").validate()
+    assert ServeSpec(prompt_lens="4, 8,12").parsed_prompt_lens() \
+        == (4, 8, 12)
+    # simulate mode sizes against the WORST simulated prompt
+    with pytest.raises(SystemExit, match="--max-len"):
+        ServeSpec(simulate=True, prompt_lens="4,120", gen_tokens=32,
+                  max_len=128).validate()

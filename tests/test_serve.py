@@ -1,0 +1,325 @@
+"""Serving tier (repro.serve, DESIGN.md §13): flash-decode kernel,
+slot-cache engine contracts, continuous batching, train->serve handoff,
+weight sources, and the request simulator."""
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+from repro.configs import get_config
+from repro.configs.specs import SpecError
+from repro.kernels.flash_attention import flash_decode_bhsd, flash_decode_ref
+from repro.models import init_model, transformer
+from repro.models.attention import decode_attention
+from repro.serve import (ServeEngine, SimConfig, init_slot_cache,
+                         make_weight_source, read_slot, simulate)
+
+
+def _cfg():
+    return get_config("llama3.2-3b").reduced()
+
+
+def _rand_qkv(rng, BK, G, D, Dv, L):
+    q = jax.random.normal(rng[0], (BK, G, D), jnp.float32)
+    k = jax.random.normal(rng[1], (BK, L, D), jnp.float32)
+    v = jax.random.normal(rng[2], (BK, L, Dv), jnp.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash-decode kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BK,G,D,L,bkv,cap", [
+    (3, 8, 64, 128, 128, None),   # single kv block
+    (2, 4, 64, 96, 32, 30.0),     # multi-block + softcap
+    (1, 8, 128, 48, 16, None),    # many short blocks, past-valid skip
+])
+def test_flash_decode_bitwise_vs_oracle(BK, G, D, L, bkv, cap):
+    """Interpret-mode Pallas kernel is BITWISE identical to the jnp
+    online-softmax oracle -- same op order, so the off-TPU oracle bypass
+    in ops.flash_decode serves the exact kernel semantics."""
+    rng = jax.random.split(jax.random.PRNGKey(7), 4)
+    q, k, v = _rand_qkv(rng, BK, G, D, D, L)
+    lens = jax.random.randint(rng[3], (BK,), 1, L + 1)
+    out_k = flash_decode_bhsd(q, k, v, lens, cap=cap, block_kv=bkv,
+                              interpret=True)
+    out_r = flash_decode_ref(q, k, v, lens, cap=cap, block_kv=bkv)
+    assert np.asarray(out_k).tobytes() == np.asarray(out_r).tobytes()
+
+
+def test_flash_decode_matches_dense_attention():
+    """ops.flash_decode == models.attention.decode_attention on the
+    (B,1,H,Dq) x (B,L,K,D) decode layout, per-row lens, within f32
+    tolerance (different reduction order)."""
+    from repro.kernels.ops import flash_decode
+    B, H, K, D, L = 3, 8, 4, 64, 50
+    rng = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(rng[0], (B, 1, H, D), jnp.float32)
+    kc = jax.random.normal(rng[1], (B, L, K, D), jnp.float32)
+    vc = jax.random.normal(rng[2], (B, L, K, D), jnp.float32)
+    lens = jnp.array([1, 17, 50], jnp.int32)
+    got = flash_decode(q, kc, vc, lens=lens)
+    want = decode_attention(q, kc, vc, valid_len=lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_softcap_and_mla_shape():
+    """Softcap routes through the kernel path; the MLA single-kv-head
+    layout (K=1 wide head) is supported."""
+    from repro.kernels.ops import flash_decode
+    B, L, D = 2, 24, 80
+    rng = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(rng[0], (B, 1, 4, D), jnp.float32)
+    kc = jax.random.normal(rng[1], (B, L, 1, D), jnp.float32)
+    vc = jax.random.normal(rng[2], (B, L, 1, D), jnp.float32)
+    got = flash_decode(q, kc, vc, lens=jnp.array([5, 24]), cap=50.0)
+    want = decode_attention(q, kc, vc, valid_len=jnp.array([5, 24]),
+                            cap=50.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# slot cache
+# ---------------------------------------------------------------------------
+
+def test_slot_cache_roundtrip():
+    """write_slot/read_slot are inverses on both cache groups (prefix
+    batch axis 0, pattern batch axis 1)."""
+    from repro.serve.cache import write_slot
+    cfg = _cfg()
+    cache = init_slot_cache(cfg, 4, 16, jnp.float32)
+    row = jax.tree.map(
+        lambda t: jnp.arange(t.size, dtype=t.dtype).reshape(t.shape),
+        read_slot(cache, 0))
+    cache = write_slot(cache, row, 2)
+    back = read_slot(cache, 2)
+    for a, b in zip(jax.tree.leaves(row), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # other slots untouched (still zeros)
+    other = read_slot(cache, 1)
+    assert all(not np.asarray(l).any() for l in jax.tree.leaves(other))
+
+
+# ---------------------------------------------------------------------------
+# engine contracts
+# ---------------------------------------------------------------------------
+
+def _engine(params=None, **kw):
+    cfg = _cfg()
+    params = init_model(cfg, jax.random.PRNGKey(0)) \
+        if params is None else params
+    kw.setdefault("slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_tokens", 4)
+    return cfg, params, ServeEngine(cfg, params, **kw)
+
+
+def test_engine_block_compiles_once_and_donates():
+    """The decode block compiles EXACTLY once per engine no matter how
+    many blocks run (the launch/serve.py re-tracing hazard, pinned), and
+    the cache buffer is donated through the block step."""
+    cfg, params, eng = _engine()
+    prompts = [np.arange(1, 4 + i) % cfg.vocab_size for i in range(4)]
+    eng.generate(prompts, 9)  # admits + 2 blocks
+    leaf_before = jax.tree.leaves(eng.cache)[0]
+    eng.run_block()
+    assert leaf_before.is_deleted(), "cache was copied, not donated"
+    for i in range(4):
+        eng.admit(i, prompts[i])
+    eng.run_block()
+    eng.run_block()
+    assert eng.block_compile_count() == 1
+    # admit compiles once per prompt-length bucket, not per prompt
+    assert eng._prefill._cache_size() == 1  # all prompts in the 8-bucket
+
+
+def test_engine_continuous_batching_matches_sequential():
+    """Mixed-length prompts decoded together in slot batches emit
+    EXACTLY the tokens each prompt gets decoded alone (scalar-pos
+    reference loop) -- inactive-slot padding and per-row lens never leak
+    across rows."""
+    cfg, params, eng = _engine()
+    rng = np.random.default_rng(5)
+    lens = [5, 9, 12, 7]
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    T = 9
+    got = eng.generate(prompts, T)
+
+    for b, prompt in enumerate(prompts):
+        n = len(prompt)
+        cache = init_slot_cache(cfg, 1, eng.max_len, jnp.float32)
+        logits, cache = transformer.prefill(
+            cfg, params, {"tokens": jnp.asarray(prompt)[None]}, cache,
+            chunkwise=True, use_pallas=True,
+            lens=jnp.array([n], jnp.int32))
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        want = [int(tok[0])]
+        pos = n
+        for _ in range(T - 1):
+            logits, cache = transformer.decode_step(
+                cfg, params, cache, tok.reshape(1, 1),
+                jnp.array([pos], jnp.int32), chunkwise=True,
+                use_pallas=True)
+            tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            want.append(int(tok[0]))
+            pos += 1
+        np.testing.assert_array_equal(got[b], np.asarray(want))
+
+
+def test_engine_slot_reuse_isolated():
+    """Releasing a slot and admitting a new prompt into it must not
+    disturb a still-active neighbour slot's stream."""
+    cfg, params, eng = _engine(slots=2, block_tokens=3)
+    rng = np.random.default_rng(9)
+    pa = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    pc = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+
+    # reference: pa alone for 2 blocks' worth of tokens
+    solo = ServeEngine(cfg, params, slots=1, max_len=eng.max_len,
+                       block_tokens=3)
+    ref = solo.generate([pa], 7)[0]
+
+    toks_a = [eng.admit(0, pa)]
+    eng.admit(1, pb)
+    toks_a.extend(int(t) for t in eng.run_block()[:, 0])
+    eng.release(1)
+    eng.admit(1, pc)  # churn slot 1 mid-stream
+    toks_a.extend(int(t) for t in eng.run_block()[:, 0])
+    np.testing.assert_array_equal(np.asarray(toks_a), ref)
+
+
+# ---------------------------------------------------------------------------
+# weight sources
+# ---------------------------------------------------------------------------
+
+def test_weight_source_specs():
+    assert make_weight_source(None).name == "init:0"
+    assert make_weight_source("init:7").name == "init:7"
+    assert make_weight_source("q8").name == "q8:init:0"
+    assert make_weight_source("fp8:init:3").name == "fp8:init:3"
+    assert make_weight_source("ckpt:/tmp/x").name == "ckpt:/tmp/x"
+    with pytest.raises(SpecError):
+        make_weight_source("q8:fp8:init")  # nested quantization
+    with pytest.raises(SpecError):
+        make_weight_source("bogus:1")
+    with pytest.raises(SpecError):
+        make_weight_source("ckpt")  # ckpt needs a directory
+
+
+def test_quantized_source_roundtrip():
+    """q8 serving weights stay within one per-leaf quantization step of
+    the dense source, and the resident footprint is ~1 byte/param."""
+    cfg = _cfg()
+    dense_src = make_weight_source("init:3")
+    dense = dense_src.load(cfg)
+    q = make_weight_source("q8:init:3").load(cfg)
+    assert jax.tree.structure(q) == jax.tree.structure(dense)
+    for d, qq in zip(jax.tree.leaves(dense), jax.tree.leaves(q)):
+        step = float(jnp.max(jnp.abs(d))) / 127.0
+        assert qq.dtype == d.dtype
+        err = float(jnp.max(jnp.abs(qq.astype(jnp.float32) -
+                                    d.astype(jnp.float32))))
+        assert err <= step * 0.51 + 1e-8
+    q8 = make_weight_source("q8")
+    assert q8.resident_bytes(cfg) < dense_src.resident_bytes(cfg) / 3
+
+
+# ---------------------------------------------------------------------------
+# train -> serve handoff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("store", ["dense", "virtual:recon"])
+def test_train_serve_handoff(tmp_path, store):
+    """A launch/train.py checkpoint loads straight into the serving
+    tier, and the engine's greedy decode from the restored weights is
+    IDENTICAL to decoding from the same weights restored in-memory --
+    for the dense client store AND the virtual layouts (member 0, the
+    global model, is always dense)."""
+    ckpt = str(tmp_path / store.replace(":", "_"))
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "llama3.2-3b", "--reduced", "--clients", "2", "--tau", "2",
+            "--rounds", "2", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", ckpt, "--ckpt-every", "1"]
+    if store != "dense":
+        args += ["--store", store, "--placement", "vmap"]
+    out = subprocess.run(args, capture_output=True, text=True,
+                         env=_SUBPROC_ENV, cwd=".", timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+    cfg = _cfg()
+    src = make_weight_source(f"ckpt:{ckpt}")
+    params = src.load(cfg)
+    # trained weights, not init
+    init = init_model(cfg, jax.random.PRNGKey(0))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(init)))
+
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 7)]
+    served = ServeEngine(cfg, params, slots=2, max_len=32,
+                         block_tokens=4).generate(prompts, 6)
+    # in-memory restore through the checkpoint module directly
+    from repro.checkpoint import latest_checkpoint, restore_subtree
+    mem, _ = restore_subtree(latest_checkpoint(ckpt),
+                             transformer.param_shapes(cfg), index=0)
+    in_mem = ServeEngine(cfg, mem, slots=2, max_len=32,
+                         block_tokens=4).generate(prompts, 6)
+    np.testing.assert_array_equal(served, in_mem)
+
+
+def test_ckpt_source_missing_dir(tmp_path):
+    with pytest.raises(SystemExit):
+        make_weight_source(f"ckpt:{tmp_path}/nope").load(_cfg())
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+def test_simulator_deterministic_and_reuses_slots():
+    """time_unit > 0 makes the trace fully deterministic; more requests
+    than slots all complete via slot reuse with the full token count."""
+    cfg, params, eng = _engine(slots=2, block_tokens=4)
+    sim = SimConfig(requests=5, prompt_lens=(3, 5, 8), gen_tokens=6,
+                    delay=0.4, delay_dist="lognormal", seed=1,
+                    time_unit=0.01)
+    m1 = simulate(eng, sim)
+    cfg, params, eng2 = _engine(params=params, slots=2, block_tokens=4)
+    m2 = simulate(eng2, sim)
+    assert m1 == m2
+    assert m1["requests"] == 5
+    assert all(r["generated"] == 6 for r in m1["per_request"])
+    assert m1["generated"] == 5 * 6
+    assert m1["p99_ms"] >= m1["p50_ms"] > 0
+    # later arrivals exist (delay > 0) yet every request finished
+    assert m1["per_request"][-1]["arrival_s"] > 0
+    assert eng.block_compile_count() == 1
+
+
+def test_serve_cli_entrypoint():
+    """launch/serve.py end to end: batch mode JSON with the compile-once
+    receipt; --simulate mode runs the request simulator."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "llama3.2-3b", "--reduced", "--slots", "2", "--max-len", "32",
+         "--prompt-len", "4", "--gen-tokens", "8", "--block-tokens", "4"],
+        capture_output=True, text=True, env=_SUBPROC_ENV, cwd=".",
+        timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["mode"] == "batch"
+    assert res["generated"] == 2 * 8
+    assert res["block_compiles"] == 1
+    assert res["tokens_per_s"] > 0
